@@ -1,0 +1,85 @@
+"""Shared worker factories for the benchmark suite."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.core.actor import ActorPool
+from repro.core.workers import WorkerSet
+from repro.rl.env import CartPole, MultiAgentCartPole
+from repro.rl.policy import ActorCriticPolicy, DQNPolicy, DummyPolicy
+from repro.rl.replay import ReplayBuffer
+from repro.rl.rollout_worker import MultiAgentRolloutWorker, RolloutWorker
+
+
+def dummy_workers(num_workers: int = 2, num_envs: int = 8, rollout_len: int = 64) -> WorkerSet:
+    """Dummy policy (one trainable scalar) — paper Fig 13a setup."""
+
+    def factory(i: int) -> RolloutWorker:
+        return RolloutWorker(
+            CartPole(),
+            DummyPolicy(4, 2),
+            algo="pg",
+            num_envs=num_envs,
+            rollout_len=rollout_len,
+            seed=7,
+            worker_index=i,
+        )
+
+    return WorkerSet.create(factory, num_workers)
+
+
+def pg_workers(num_workers: int = 2, num_envs: int = 4, rollout_len: int = 32, algo: str = "pg") -> WorkerSet:
+    loss_kind = {"pg": "pg", "ppo": "ppo", "vtrace": "vtrace"}[algo]
+
+    def factory(i: int) -> RolloutWorker:
+        return RolloutWorker(
+            CartPole(),
+            ActorCriticPolicy(4, 2, loss_kind=loss_kind, rollout_len=rollout_len),
+            algo=algo,
+            num_envs=num_envs,
+            rollout_len=rollout_len,
+            seed=11,
+            worker_index=i,
+        )
+
+    return WorkerSet.create(factory, num_workers)
+
+
+def dqn_workers(num_workers: int = 2, num_envs: int = 4, rollout_len: int = 16) -> WorkerSet:
+    def factory(i: int) -> RolloutWorker:
+        return RolloutWorker(
+            CartPole(),
+            DQNPolicy(4, 2),
+            algo="dqn",
+            num_envs=num_envs,
+            rollout_len=rollout_len,
+            seed=13,
+            worker_index=i,
+            epsilon=0.2,
+        )
+
+    return WorkerSet.create(factory, num_workers)
+
+
+def replay_pool(n: int = 1, capacity: int = 20000, batch: int = 64, starts: int = 256) -> ActorPool:
+    return ActorPool.from_targets(
+        [ReplayBuffer(capacity=capacity, sample_batch_size=batch, learning_starts=starts, seed=i) for i in range(n)],
+        name="replay",
+    )
+
+
+def multiagent_workers(num_workers: int = 2, rollout_len: int = 16) -> WorkerSet:
+    mapping = {0: "ppo_policy", 1: "ppo_policy", 2: "dqn_policy", 3: "dqn_policy"}
+    specs = {
+        "ppo_policy": {"policy": ActorCriticPolicy(4, 2, loss_kind="ppo"), "algo": "ppo"},
+        "dqn_policy": {"policy": DQNPolicy(4, 2), "algo": "dqn"},
+    }
+
+    def factory(i: int) -> MultiAgentRolloutWorker:
+        return MultiAgentRolloutWorker(
+            MultiAgentCartPole(4, mapping), specs, mapping,
+            rollout_len=rollout_len, seed=17, worker_index=i,
+        )
+
+    return WorkerSet.create(factory, num_workers)

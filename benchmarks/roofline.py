@@ -1,0 +1,75 @@
+"""§Roofline: render the dry-run sweep results as the roofline table.
+
+Reads ``benchmarks/results/dryrun.jsonl`` (written by repro.launch.dryrun)
+and emits per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, and MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> List[Dict[str, Any]]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # Keep the latest entry per (arch, shape, mesh, tag).
+    dedup: Dict[Tuple, Dict[str, Any]] = {}
+    for r in rows:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"), r.get("tag", ""))] = r
+    return list(dedup.values())
+
+
+def markdown_table(rows: List[Dict[str, Any]], mesh: str = "16x16") -> str:
+    hdr = (
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_ratio | temp_GB/dev |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r.get("arch", ""), r.get("shape", ""))):
+        if r.get("mesh") != mesh or not r.get("ok") or r.get("tag"):
+            continue
+        temp = ""
+        ma = r.get("memory_analysis", "")
+        if "temp_size_in_bytes=" in ma:
+            temp = f"{int(ma.split('temp_size_in_bytes=')[1].split(',')[0]) / 1e9:.1f}"
+        lines.append(
+            "| {arch} | {shape} | {c:.2e} | {m:.2e} | {x:.2e} | {dom} | {u:.2f} | {t} |".format(
+                arch=r["arch"], shape=r["shape"], c=r["compute_s"], m=r["memory_s"],
+                x=r["collective_s"], dom=r["dominant"], u=r.get("useful_ratio", 0.0), t=temp,
+            )
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = load()
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    out: List[Tuple[str, float, str]] = [
+        ("dryrun_combinations_ok", len(ok), f"failed={len(fail)}"),
+    ]
+    doms: Dict[str, int] = {}
+    for r in ok:
+        if r.get("mesh") == "16x16" and not r.get("tag"):
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    for k, v in sorted(doms.items()):
+        out.append((f"dryrun_dominant_{k}", v, "single-pod baseline"))
+    return out
+
+
+if __name__ == "__main__":
+    rows = load()
+    print(markdown_table(rows))
+    for r in run():
+        print(",".join(map(str, r)))

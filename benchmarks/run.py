@@ -1,0 +1,64 @@
+"""Benchmark suite entry point: one benchmark per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+
+  * Table 2  -> bench_loc          (LOC: plans vs low-level ports)
+  * Fig 13a  -> bench_sampling     (sampling throughput parity)
+  * Fig 13b  -> bench_async_opt    (async optimization throughput parity)
+  * Fig 14   -> bench_multiagent   (PPO+DQN composition vs Amdahl ideal)
+  * Fig 15   -> bench_streaming    (vs streaming-system state-serialization)
+  * Roofline -> roofline           (dry-run sweep summary)
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true", help="fewer iterations")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_async_opt,
+        bench_loc,
+        bench_multiagent,
+        bench_sampling,
+        bench_streaming,
+        roofline,
+    )
+
+    suites = {
+        "loc": lambda: bench_loc.run(),
+        "sampling": lambda: bench_sampling.run(iters=20 if args.fast else 50),
+        "async_opt": lambda: bench_async_opt.run(iters=15 if args.fast else 40),
+        "multiagent": lambda: bench_multiagent.run(iters=8 if args.fast else 20),
+        "streaming": lambda: bench_streaming.run(iters=3 if args.fast else 5),
+        "roofline": lambda: roofline.run(),
+    }
+    print("name,value,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+            print(f"_{name}_wall_s,{time.time() - t0:.1f},", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}_FAILED,0,", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

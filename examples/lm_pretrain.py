@@ -1,0 +1,26 @@
+"""LM pretraining through the dataflow: any assigned architecture (--arch),
+reduced for CPU, full configs on a pod. The training loop is literally a
+plan: data actors -> barrier gather -> SPMD TrainOneStep -> metrics.
+
+Run: PYTHONPATH=src python examples/lm_pretrain.py --arch phi3.5-moe-42b-a6.6b
+"""
+
+import subprocess
+import sys
+
+
+def main():
+    arch = "qwen3-14b"
+    args = sys.argv[1:]
+    if "--arch" in args:
+        arch = args[args.index("--arch") + 1]
+    # Delegates to the launch driver (same path production uses).
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", arch, "--smoke", "--steps", "10", "--batch", "4", "--seq", "64",
+    ]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the A3C dataflow from the paper's Figure 9a, verbatim shape.
+
+    workers  = create_rollout_workers()
+    grads    = ParallelRollouts -> ComputeGradients -> gather_async
+    apply_op = grads -> ApplyGradients(workers)
+    return ReportMetrics(apply_op, workers)
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import repro.core as flow
+from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
+
+
+def create_rollout_workers(n=2):
+    def factory(i):
+        return RolloutWorker(
+            CartPole(), ActorCriticPolicy(4, 2), algo="pg",
+            num_envs=4, rollout_len=32, seed=0, worker_index=i,
+        )
+
+    return flow.WorkerSet.create(factory, n)
+
+
+def main():
+    # type: List[RolloutActor]
+    workers = create_rollout_workers()
+    # type: Iter[Gradients]
+    grads = flow.par_compute_gradients(workers).gather_async()
+    # type: Iter[TrainStats]
+    apply_op = grads.for_each(flow.ApplyGradients(workers))
+    # type: Iter[Metrics]
+    metrics = flow.StandardMetricsReporting(apply_op, workers)
+
+    for i, result in zip(range(20), metrics):
+        c = result["counters"]
+        ep = result["episodes"]
+        print(
+            f"iter {i:2d}  sampled={c['num_steps_sampled']:6d} "
+            f"reward_mean={ep['episode_reward_mean']:.1f}"
+        )
+    workers.stop()
+
+
+if __name__ == "__main__":
+    main()

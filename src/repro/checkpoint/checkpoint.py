@@ -1,0 +1,68 @@
+"""Pytree checkpointing to .npz (no orbax offline).
+
+Keys are '/'-joined tree paths; arrays are gathered to host before save and
+restored with the original structure.  Sharding-aware: restoring under a mesh
+is done by the caller placing arrays with ``jax.device_put(x, sharding)``.
+
+Durability model follows the paper (§3): checkpoints are the only durable
+state; all dataflow operator state is discardable and rebuilt on restart.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_pytree", "restore_pytree"]
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat: Dict[str, np.ndarray] = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        # npz cannot serialize ml_dtypes (bfloat16, fp8): widen to float32;
+        # restore_pytree casts back to the template dtype.
+        if arr.dtype.name not in np.sctypeDict and arr.dtype.kind in ("V", "f"):
+            arr = arr.astype(np.float32)
+        elif arr.dtype.name == "bfloat16":
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p: Any) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+
+
+def restore_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with np.load(path) as data:
+        treedef = jax.tree_util.tree_structure(like)
+        leaves = jax.tree_util.tree_flatten_with_path(like)[0]
+        new_leaves = []
+        for pth, leaf in leaves:
+            key = "/".join(_path_str(p) for p in pth)
+            arr = data[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            new_leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)

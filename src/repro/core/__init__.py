@@ -1,0 +1,65 @@
+"""RLlib Flow core: hybrid actor-dataflow programming model (paper §4).
+
+Public API:
+
+    from repro.core import (
+        VirtualActor, ActorPool, WorkerSet,
+        LocalIterator, ParallelIterator, NextValueNotReady,
+        ParallelRollouts, Replay, TrainOneStep, ...,
+        Concurrently, Enqueue, Dequeue,
+        a3c_plan, ppo_plan, apex_plan, ...,
+    )
+"""
+
+from repro.core.actor import (
+    ActorHandle,
+    ActorPool,
+    VirtualActor,
+    create_colocated,
+    get,
+    wait,
+)
+from repro.core.concurrency import Concurrently, Dequeue, Enqueue
+from repro.core.iterators import (
+    LocalIterator,
+    NextValueNotReady,
+    ParallelIterator,
+    from_actors,
+    from_items,
+    from_iterators,
+)
+from repro.core.learner_thread import LearnerThread
+from repro.core.metrics import MetricsContext, TimerStat, get_metrics
+from repro.core.operators import (
+    ApplyGradients,
+    AverageGradients,
+    ConcatBatches,
+    ParallelRollouts,
+    Replay,
+    ReportMetrics,
+    SelectExperiences,
+    StandardizeFields,
+    StandardMetricsReporting,
+    StoreToReplayBuffer,
+    TrainOneStep,
+    UpdateReplayPriorities,
+    UpdateTargetNetwork,
+    UpdateWorkerWeights,
+    par_compute_gradients,
+)
+from repro.core.plans import (
+    a2c_plan,
+    a3c_plan,
+    apex_plan,
+    appo_plan,
+    dqn_plan,
+    impala_plan,
+    maml_plan,
+    mbpo_plan,
+    multi_agent_ppo_dqn_plan,
+    ppo_plan,
+    sac_plan,
+)
+from repro.core.workers import WorkerSet
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,210 @@
+"""Virtual actors: the process abstraction underneath RLlib Flow iterators.
+
+The paper implements dataflow shards on Ray actors.  On a TPU pod there is no
+per-chip RPC endpoint, so we provide *virtual actors*: Python objects that own
+state (policy params, env state, replay shards) plus a dedicated executor
+thread that serializes method execution, giving Ray-like semantics:
+
+  * ``actor.call(method, *args)``  -> Future   (async, like ``.remote()``)
+  * ``actor.sync(method, *args)``  -> result   (blocking convenience)
+  * per-actor FIFO execution order (one mailbox thread per actor)
+  * ``wait(futures, num_returns)`` (like ``ray.wait``) with *batched wait* —
+    the small optimization the paper credits for Fig 13a throughput wins.
+
+JAX releases the GIL inside compiled computations, so virtual actors provide
+true overlap of device compute even in a single process.  On a real multi-host
+pod, one ``ActorPool`` maps onto per-host processes and ``core/spmd.py`` fuses
+synchronous fragments into single pjit programs instead (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "VirtualActor",
+    "ActorHandle",
+    "ActorPool",
+    "wait",
+    "get",
+    "create_colocated",
+]
+
+_actor_ids = itertools.count()
+
+import logging
+
+_logger = logging.getLogger(__name__)
+
+
+def _log_if_failed(actor_name: str, method: str):
+    def _cb(fut: Future) -> None:
+        exc = fut.exception()
+        if exc is not None and not isinstance(exc, StopIteration):
+            _logger.error("actor %s.%s failed: %r", actor_name, method, exc)
+
+    return _cb
+
+
+class VirtualActor:
+    """A stateful worker with a mailbox thread.
+
+    ``target`` is any object; method calls are dispatched by name onto the
+    mailbox thread so actor state is never accessed concurrently (the Ray
+    actor model's serialized-execution guarantee).
+    """
+
+    def __init__(self, target: Any, name: Optional[str] = None):
+        self.target = target
+        self.actor_id = next(_actor_ids)
+        self.name = name or f"{type(target).__name__}-{self.actor_id}"
+        self._inbox: "queue.Queue[Optional[Tuple[Future, Callable, tuple, dict]]]" = queue.Queue()
+        self._thread = threading.Thread(
+            target=self._run_loop, name=f"actor-{self.name}", daemon=True
+        )
+        self._alive = True
+        self._thread.start()
+
+    # ------------------------------------------------------------------ api
+    def call(self, method: str, *args: Any, **kwargs: Any) -> Future:
+        """Asynchronously invoke ``target.<method>(*args)``; returns a Future."""
+        if not self._alive:
+            raise RuntimeError(f"actor {self.name} is stopped")
+        fut: Future = Future()
+        fn = getattr(self.target, method)
+        # Fire-and-forget callers never see exceptions; log them so failures
+        # in message-passing operators (StoreToReplayBuffer, ...) surface.
+        fut.add_done_callback(_log_if_failed(self.name, method))
+        self._inbox.put((fut, fn, args, kwargs))
+        return fut
+
+    def apply(self, fn: Callable[[Any], Any], *args: Any) -> Future:
+        """Asynchronously run ``fn(target, *args)`` on the actor thread.
+
+        This is how parallel transformations are *scheduled onto the source
+        actor* (paper §4, Transformation): the callable sees actor-local state.
+        """
+        if not self._alive:
+            raise RuntimeError(f"actor {self.name} is stopped")
+        fut: Future = Future()
+        self._inbox.put((fut, fn, (self.target, *args), {}))
+        return fut
+
+    def sync(self, method: str, *args: Any, **kwargs: Any) -> Any:
+        return self.call(method, *args, **kwargs).result()
+
+    def stop(self) -> None:
+        if self._alive:
+            self._alive = False
+            self._inbox.put(None)
+            self._thread.join(timeout=5.0)
+
+    # ------------------------------------------------------------- internals
+    def _run_loop(self) -> None:
+        while True:
+            item = self._inbox.get()
+            if item is None:
+                return
+            fut, fn, args, kwargs = item
+            if fut.set_running_or_notify_cancel():
+                try:
+                    fut.set_result(fn(*args, **kwargs))
+                except BaseException as exc:  # propagate to the caller
+                    fut.set_exception(exc)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"VirtualActor({self.name})"
+
+
+# ``ActorHandle`` is what flows through dataflow metadata (zip_with_source_actor)
+ActorHandle = VirtualActor
+
+
+class ActorPool:
+    """A named group of actors — the unit a ParallelIterator shards over."""
+
+    def __init__(self, actors: Sequence[VirtualActor], name: str = "pool"):
+        if not actors:
+            raise ValueError("ActorPool needs at least one actor")
+        self.actors: List[VirtualActor] = list(actors)
+        self.name = name
+
+    @classmethod
+    def from_targets(cls, targets: Sequence[Any], name: str = "pool") -> "ActorPool":
+        return cls([VirtualActor(t) for t in targets], name=name)
+
+    def __len__(self) -> int:
+        return len(self.actors)
+
+    def __iter__(self):
+        return iter(self.actors)
+
+    def __getitem__(self, i: int) -> VirtualActor:
+        return self.actors[i]
+
+    # Broadcast a method call to every actor; returns futures.
+    def broadcast(self, method: str, *args: Any, **kwargs: Any) -> List[Future]:
+        return [a.call(method, *args, **kwargs) for a in self.actors]
+
+    def broadcast_sync(self, method: str, *args: Any, **kwargs: Any) -> List[Any]:
+        return [f.result() for f in self.broadcast(method, *args, **kwargs)]
+
+    def stop(self) -> None:
+        for a in self.actors:
+            a.stop()
+
+
+def wait(
+    futures: Sequence[Future],
+    num_returns: int = 1,
+    timeout: Optional[float] = None,
+) -> Tuple[List[Future], List[Future]]:
+    """``ray.wait`` equivalent: split futures into (ready, pending).
+
+    Blocks until ``num_returns`` futures are done (or timeout).  Uses a single
+    condition variable over all futures — the *batched RPC wait* the paper
+    cites as an easy cross-algorithm optimization (Fig 13a).
+    """
+    futures = list(futures)
+    if num_returns > len(futures):
+        raise ValueError(f"num_returns={num_returns} > #futures={len(futures)}")
+    cond = threading.Condition()
+    n_done = [0]
+
+    def _on_done(_f: Future) -> None:
+        with cond:
+            n_done[0] += 1
+            cond.notify_all()
+
+    for f in futures:
+        f.add_done_callback(_on_done)
+    with cond:
+        cond.wait_for(lambda: sum(f.done() for f in futures) >= num_returns, timeout)
+    ready = [f for f in futures if f.done()]
+    pending = [f for f in futures if not f.done()]
+    # Deterministic "first num_returns" semantics like ray.wait
+    return ready[:max(num_returns, len(ready))], pending
+
+
+def get(obj: Any) -> Any:
+    """``ray.get`` equivalent (works on Futures, lists of Futures, plain values)."""
+    if isinstance(obj, Future):
+        return obj.result()
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(get(o) for o in obj)
+    return obj
+
+
+def create_colocated(
+    factory: Callable[[], Any], count: int, name: str = "colocated"
+) -> ActorPool:
+    """Paper's ``create_colocated`` (Ape-X replay actors): a colocation group.
+
+    On Ray this pins actors to the head node; here all virtual actors share
+    the process, so colocation is a naming/grouping concern only.
+    """
+    return ActorPool.from_targets([factory() for _ in range(count)], name=name)

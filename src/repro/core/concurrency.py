@@ -1,0 +1,93 @@
+"""Concurrency operators: Concurrently (union), Enqueue/Dequeue (paper §4/5.2).
+
+``Concurrently`` composes multiple dataflow fragments — the operator the paper
+shows enabling Ape-X (store/replay/update sub-flows) and multi-agent PPO+DQN
+composition that "end users could not do before without writing low-level
+systems code".
+"""
+
+from __future__ import annotations
+
+import queue
+from typing import Any, List, Optional, Sequence, Union
+
+from repro.core.iterators import LocalIterator, NextValueNotReady
+
+__all__ = ["Concurrently", "Enqueue", "Dequeue"]
+
+
+def Concurrently(
+    ops: Sequence[LocalIterator],
+    mode: str = "round_robin",
+    output_indexes: Optional[Sequence[int]] = None,
+    round_robin_weights: Optional[Sequence[Union[int, str]]] = None,
+) -> LocalIterator:
+    """Execute dataflow fragments concurrently; emit from ``output_indexes``.
+
+    mode='round_robin' -> deterministic interleave (optionally weighted — the
+        rate-limiting facility for e.g. 1:4 store:replay ratios [Acme]).
+    mode='async'       -> each fragment driven independently; items surface in
+        completion order (maximum pipeline parallelism).
+    """
+    if not ops:
+        raise ValueError("Concurrently needs at least one op")
+    if mode not in ("round_robin", "async"):
+        raise ValueError(f"unknown mode {mode!r}")
+    out_idx = list(output_indexes) if output_indexes is not None else list(range(len(ops)))
+    for i in out_idx:
+        if not (0 <= i < len(ops)):
+            raise ValueError(f"output index {i} out of range")
+
+    # Tag items with their branch so we can filter after the union.
+    tagged: List[LocalIterator] = [
+        op.for_each(lambda item, _i=i: (_i, item)) for i, op in enumerate(ops)
+    ]
+
+    merged = tagged[0].union(
+        *tagged[1:],
+        deterministic=(mode == "round_robin"),
+        round_robin_weights=round_robin_weights,
+    )
+
+    def _select(tagged_item: Any) -> Any:
+        i, item = tagged_item
+        return item if i in out_idx else NextValueNotReady()
+
+    return merged.for_each(_select)
+
+
+class Enqueue:
+    """Push items into a bounded queue (e.g. a learner thread's in-queue).
+
+    Returns the item (so the flow can continue); drops with a counter if the
+    queue is full — matching Ape-X's num_samples_dropped behaviour.
+    """
+
+    share_across_shards = True
+
+    def __init__(self, out_queue: "queue.Queue", block: bool = False):
+        self.queue = out_queue
+        self.block = block
+        self.num_dropped = 0
+
+    def __call__(self, item: Any) -> Any:
+        try:
+            self.queue.put(item, block=self.block)
+        except queue.Full:
+            self.num_dropped += 1
+        return item
+
+
+def Dequeue(in_queue: "queue.Queue", check: Any = None) -> LocalIterator:
+    """Iterator over items popped from a queue (e.g. learner out-queue)."""
+
+    def _gen():
+        while True:
+            if check is not None and not check():
+                raise RuntimeError("Dequeue check failed: producer is dead")
+            try:
+                yield in_queue.get(timeout=0.05)
+            except queue.Empty:
+                yield NextValueNotReady()
+
+    return LocalIterator(_gen, name="Dequeue")

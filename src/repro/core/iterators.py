@@ -1,0 +1,582 @@
+"""Distributed iterators: the RLlib Flow programming model core.
+
+Two iterator kinds (paper §4):
+
+  * ``ParallelIterator[T]`` — a lazy parallel stream of items sharded across a
+    pool of (virtual) actors.  Transformations added with ``for_each`` are
+    *scheduled onto the source actor* so they can read actor-local state
+    (policy weights, env state).  Consuming a parallel iterator requires a
+    sequencing operator: ``gather_sync`` (deterministic, barrier semantics) or
+    ``gather_async`` (items surface as soon as ready; ``num_async`` controls
+    pipeline depth).
+
+  * ``LocalIterator[T]`` — a lazy sequential stream.  Supports ``for_each``,
+    ``filter``, ``batch``, ``combine``, ``zip_with_source_actor``, ``union``
+    (round-robin or async, with rate-limiting weights) and ``duplicate``.
+
+Iterators are lazy: building a dataflow does nothing; pulling items from the
+output iterator drives the whole graph (Volcano-style).
+"""
+
+from __future__ import annotations
+
+import copy
+import logging
+import queue
+import threading
+from typing import (
+    Any,
+    Callable,
+    Generic,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    TypeVar,
+    Union,
+)
+
+from repro.core.actor import ActorPool, VirtualActor, wait
+from repro.core.metrics import MetricsContext, get_metrics, set_metrics_for_thread
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+logger = logging.getLogger(__name__)
+
+__all__ = [
+    "LocalIterator",
+    "ParallelIterator",
+    "NextValueNotReady",
+    "from_actors",
+    "from_items",
+    "from_iterators",
+]
+
+
+class NextValueNotReady:
+    """Sentinel yielded by non-blocking fragments when no item is ready yet.
+
+    Round-robin unions propagate it so one starved branch cannot stall the
+    others (paper: asynchronous dependencies / pink arrows).
+    """
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<NextValueNotReady>"
+
+
+_NOT_READY = NextValueNotReady()
+
+
+def _apply_stages(item: Any, stages: Sequence[Callable]) -> Any:
+    for fn in stages:
+        if isinstance(item, NextValueNotReady):
+            return item
+        item = fn(item)
+    return item
+
+
+class _Exhausted:
+    """Internal marker: a shard's underlying stream raised StopIteration."""
+
+
+_EXHAUSTED = _Exhausted()
+
+
+def _result_or_exhausted(fut: Any) -> Any:
+    """Future.result() that maps StopIteration to a marker.
+
+    PEP 479: raising StopIteration inside a generator is a RuntimeError, so
+    finite shards (testing) must signal exhaustion out-of-band.
+    """
+    try:
+        return fut.result()
+    except StopIteration:
+        return _EXHAUSTED
+
+
+# --------------------------------------------------------------------------
+# LocalIterator
+# --------------------------------------------------------------------------
+class LocalIterator(Generic[T]):
+    """A lazy sequential stream of items with a shared metrics context."""
+
+    def __init__(
+        self,
+        base_builder: Callable[[], Iterator[T]],
+        metrics: Optional[MetricsContext] = None,
+        stages: Optional[List[Callable]] = None,
+        name: str = "LocalIterator",
+    ):
+        self._base_builder = base_builder
+        self._stages: List[Callable] = list(stages or [])
+        self.metrics = metrics or MetricsContext()
+        self.name = name
+        self._built: Optional[Iterator[T]] = None
+
+    # ------------------------------------------------------------- plumbing
+    def _build(self) -> Iterator[T]:
+        if self._built is None:
+            self._built = self._base_builder()
+        return self._built
+
+    def __iter__(self) -> Iterator[T]:
+        it = self._build()
+        while True:
+            # Install this dataflow's context before pulling: base generators
+            # (gather ops) report current_actor through the thread-local.
+            set_metrics_for_thread(self.metrics)
+            try:
+                item = next(it)
+            except StopIteration:
+                return
+            item = _apply_stages(item, self._stages)
+            if isinstance(item, NextValueNotReady):
+                continue
+            yield item
+
+    def __next__(self) -> T:
+        # Pull until a concrete item emerges (skipping not-ready sentinels).
+        it = self._build()
+        while True:
+            set_metrics_for_thread(self.metrics)
+            item = next(it)
+            item = _apply_stages(item, self._stages)
+            if not isinstance(item, NextValueNotReady):
+                return item
+
+    def next(self) -> T:
+        return self.__next__()
+
+    def _iter_with_sentinels(self) -> Iterator[Any]:
+        """Like ``__iter__`` but yields NextValueNotReady through, so unions
+        can move on to other branches instead of blocking on a starved one."""
+        it = self._build()
+        while True:
+            set_metrics_for_thread(self.metrics)
+            try:
+                item = next(it)
+            except StopIteration:
+                return
+            yield _apply_stages(item, self._stages)
+
+    def _chain(self, fn: Callable, name: str) -> "LocalIterator":
+        return LocalIterator(
+            self._base_builder,
+            metrics=self.metrics,
+            stages=self._stages + [fn],
+            name=f"{self.name}.{name}",
+        )
+
+    # ------------------------------------------------------------ operators
+    def for_each(self, fn: Callable[[T], U]) -> "LocalIterator[U]":
+        """Transformation operator (paper Fig 6). ``fn`` may be stateful."""
+        return self._chain(fn, f"for_each({getattr(fn, '__name__', type(fn).__name__)})")
+
+    def filter(self, predicate: Callable[[T], bool]) -> "LocalIterator[T]":
+        def _filter(item: Any) -> Any:
+            return item if predicate(item) else _NOT_READY
+
+        return self._chain(_filter, "filter")
+
+    def batch(self, n: int) -> "LocalIterator[List[T]]":
+        buf: List[Any] = []
+
+        def _batch(item: Any) -> Any:
+            buf.append(item)
+            if len(buf) >= n:
+                out, buf[:] = list(buf), []
+                return out
+            return _NOT_READY
+
+        return self._chain(_batch, f"batch({n})")
+
+    def flatten(self) -> "LocalIterator[Any]":
+        parent = self
+
+        def _gen() -> Iterator[Any]:
+            for item in parent:
+                for sub in item:
+                    yield sub
+
+        return LocalIterator(_gen, metrics=self.metrics, name=f"{self.name}.flatten")
+
+    def combine(self, fn: Callable[[T], Iterable[U]]) -> "LocalIterator[U]":
+        """for_each returning a list, flattened (RLlib's ``combine``)."""
+        return self.for_each(fn).flatten()
+
+    def take(self, n: int) -> List[T]:
+        out: List[T] = []
+        it = iter(self)
+        for _ in range(n):
+            try:
+                out.append(next(it))
+            except StopIteration:
+                break
+        return out
+
+    def zip_with_source_actor(self) -> "LocalIterator[tuple]":
+        """Pair each item with the actor that produced it (paper §5.2)."""
+
+        def _zip(item: Any) -> Any:
+            return (item, get_metrics().current_actor)
+
+        return self._chain(_zip, "zip_with_source_actor")
+
+    # -------------------------------------------------------------- unions
+    def union(
+        self,
+        *others: "LocalIterator",
+        deterministic: bool = False,
+        round_robin_weights: Optional[Sequence[Union[int, str]]] = None,
+    ) -> "LocalIterator":
+        """Concurrency operator (paper Fig 8): merge concurrent fragments.
+
+        deterministic=True  -> round-robin (optionally weighted; weight ``k``
+            pulls k items per turn, ``'*'`` drains what is ready).  This is
+            the rate-limiting mechanism [Acme] for e.g. replay:sample ratios.
+        deterministic=False -> async merge: each child is driven by its own
+            thread; items surface in completion order (pink arrows).
+        """
+        children = [self, *others]
+        # Children share one metrics context so counters/current_actor flow.
+        merged_metrics = self.metrics
+        for c in others:
+            for k, v in c.metrics.counters.items():
+                merged_metrics.counters[k] += v
+            c.metrics = merged_metrics
+
+        if deterministic:
+            weights = list(round_robin_weights or [1] * len(children))
+            if len(weights) != len(children):
+                raise ValueError("round_robin_weights must match #children")
+
+            def _rr_gen() -> Iterator[Any]:
+                # Sentinel-aware pulls: a branch that reports "not ready"
+                # (e.g. a cold replay buffer) yields its turn instead of
+                # blocking the whole union (paper: rate-limited concurrency).
+                iters = [c._iter_with_sentinels() for c in children]
+                alive = [True] * len(iters)
+                while any(alive):
+                    for i, it in enumerate(iters):
+                        if not alive[i]:
+                            continue
+                        pulls = weights[i]
+                        n = 1 if pulls == "*" else int(pulls)
+                        for _ in range(n):
+                            try:
+                                item = next(it)
+                            except StopIteration:
+                                alive[i] = False
+                                break
+                            yield item  # may be a sentinel; consumer skips
+
+            return LocalIterator(_rr_gen, metrics=merged_metrics, name="union_rr")
+
+        def _async_gen() -> Iterator[Any]:
+            q: "queue.Queue[Any]" = queue.Queue(maxsize=max(8, 2 * len(children)))
+            done = threading.Event()
+            n_alive = [len(children)]
+            lock = threading.Lock()
+
+            def _drive(child: LocalIterator) -> None:
+                try:
+                    set_metrics_for_thread(merged_metrics)
+                    for item in child:
+                        if done.is_set():
+                            return
+                        q.put(item)
+                except BaseException as exc:  # surface errors to consumer
+                    q.put(exc)
+                finally:
+                    with lock:
+                        n_alive[0] -= 1
+                        if n_alive[0] == 0:
+                            q.put(StopIteration())
+
+            threads = [
+                threading.Thread(target=_drive, args=(c,), daemon=True) for c in children
+            ]
+            for t in threads:
+                t.start()
+            try:
+                while True:
+                    item = q.get()
+                    if isinstance(item, StopIteration):
+                        return
+                    if isinstance(item, BaseException):
+                        raise item
+                    yield item
+            finally:
+                done.set()
+
+        return LocalIterator(_async_gen, metrics=merged_metrics, name="union_async")
+
+    def duplicate(self, n: int, bound: int = 1000) -> List["LocalIterator[T]"]:
+        """Split an iterator into ``n`` copies (paper Fig 8, split).
+
+        Buffers are inserted to retain items until fully consumed; the
+        scheduler bounds memory by warning when a consumer falls more than
+        ``bound`` items behind (RLlib Flow behaviour).
+        """
+        parent_iter = iter(self)
+        lock = threading.Lock()
+        buffers: List[List[Any]] = [[] for _ in range(n)]
+        exhausted = [False]
+
+        def _make(i: int) -> Iterator[Any]:
+            while True:
+                with lock:
+                    if buffers[i]:
+                        item = buffers[i].pop(0)
+                    elif exhausted[0]:
+                        return
+                    else:
+                        try:
+                            item = next(parent_iter)
+                        except StopIteration:
+                            exhausted[0] = True
+                            return
+                        for j in range(n):
+                            if j != i:
+                                buffers[j].append(item)
+                                if len(buffers[j]) > bound:
+                                    logger.warning(
+                                        "duplicate(): consumer %d lags %d items",
+                                        j,
+                                        len(buffers[j]),
+                                    )
+                yield item
+
+        return [
+            LocalIterator(lambda i=i: _make(i), metrics=self.metrics, name=f"{self.name}.dup{i}")
+            for i in range(n)
+        ]
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"LocalIterator[{self.name}]"
+
+
+# --------------------------------------------------------------------------
+# ParallelIterator
+# --------------------------------------------------------------------------
+class _Shard:
+    """One shard of a parallel iterator, bound to a source actor."""
+
+    def __init__(self, actor: VirtualActor, pull_fn: Callable[[Any], Any]):
+        self.actor = actor
+        self.pull_fn = pull_fn  # target -> item
+
+    def dispatch(self, stages: Sequence[Callable]) -> "Any":
+        """Schedule one item production (pull + stages) onto the actor."""
+        pull_fn = self.pull_fn
+
+        def _produce(target: Any) -> Any:
+            item = pull_fn(target)
+            return _apply_stages(item, stages)
+
+        return self.actor.apply(_produce)
+
+
+class ParallelIterator(Generic[T]):
+    """A parallel stream sharded over an actor pool (``ParIter[T]``)."""
+
+    def __init__(
+        self,
+        shards: Sequence[_Shard],
+        name: str = "ParallelIterator",
+    ):
+        self._shards = list(shards)
+        # List of per-stage, per-shard callables: _stage_clones[stage][shard].
+        self._stage_clones: List[List[Callable]] = []
+        self.name = name
+
+    # ------------------------------------------------------------- creation
+    @classmethod
+    def from_actors(
+        cls,
+        pool: ActorPool,
+        pull_fn: Callable[[Any], Any],
+        name: str = "ParallelIterator",
+    ) -> "ParallelIterator":
+        return cls([_Shard(a, pull_fn) for a in pool], name=name)
+
+    @property
+    def actors(self) -> List[VirtualActor]:
+        return [s.actor for s in self._shards]
+
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    # ------------------------------------------------------------ operators
+    def for_each(self, fn: Callable[[T], U]) -> "ParallelIterator[U]":
+        """Parallel transformation, *executed on the source actor* so that
+        ``fn`` can observe actor-local state (paper §4, Transformation).
+
+        Stateful callable classes are cloned per shard (each shard gets its
+        own state, as when Ray pickles the callable to each worker) unless
+        they set ``share_across_shards = True`` or are not deep-copyable
+        (operators that hold actor handles).
+        """
+        import types
+
+        if isinstance(fn, types.FunctionType) or getattr(fn, "share_across_shards", False):
+            clones = [fn] * len(self._shards)
+        else:
+            try:
+                clones = [copy.deepcopy(fn) for _ in self._shards]
+            except Exception:
+                clones = [fn] * len(self._shards)
+        out = ParallelIterator(self._shards, name=f"{self.name}.for_each")
+        out._stage_clones = getattr(self, "_stage_clones", []) + [clones]  # type: ignore[attr-defined]
+        return out
+
+    # Alias matching the paper's pseudocode.
+    par_for_each = for_each
+
+    def _shard_stages(self, i: int) -> List[Callable]:
+        return [stage_clones[i] for stage_clones in self._stage_clones]
+
+    def union(self, other: "ParallelIterator") -> "ParallelIterator":
+        """Union of two parallel iterators (shards side by side).
+
+        Requires both to be gathered later; stages already applied per side
+        are preserved by materializing them into the shard pull functions.
+        """
+        def _freeze(par: "ParallelIterator") -> List[_Shard]:
+            frozen = []
+            for i, s in enumerate(par._shards):
+                stages = par._shard_stages(i)
+                pull = s.pull_fn
+
+                def _pull(target: Any, _p=pull, _st=tuple(stages)) -> Any:
+                    return _apply_stages(_p(target), _st)
+
+                frozen.append(_Shard(s.actor, _pull))
+            return frozen
+
+        return ParallelIterator(_freeze(self) + _freeze(other), name=f"{self.name}.union")
+
+    # ------------------------------------------------------------ gathering
+    def gather_sync(self) -> "LocalIterator[T]":
+        """Deterministic sequencing with *barrier semantics* (paper Fig 7).
+
+        One item is pulled from every shard; upstream actors are fully halted
+        between fetches, so messages sent to source actors between item
+        fetches are ordered w.r.t. the dataflow (black arrows).
+        """
+
+        def _gen() -> Iterator[Any]:
+            while True:
+                futures = [
+                    shard.dispatch(self._shard_stages(i))
+                    for i, shard in enumerate(self._shards)
+                ]
+                # Global barrier: wait for every shard's item.
+                results = [
+                    (_result_or_exhausted(f), s.actor)
+                    for f, s in zip(futures, self._shards)
+                ]
+                if any(isinstance(item, _Exhausted) for item, _ in results):
+                    return
+                for item, actor in results:
+                    if isinstance(item, NextValueNotReady):
+                        continue
+                    get_metrics().current_actor = actor
+                    yield item
+
+        return LocalIterator(_gen, name=f"{self.name}.gather_sync")
+
+    def gather_async(self, num_async: int = 1) -> "LocalIterator[T]":
+        """Asynchronous sequencing (paper Fig 7, pink arrow).
+
+        Keeps up to ``num_async`` items in flight *per shard*; yields items in
+        completion order and immediately backfills the producing shard —
+        equivalent to RLlib Flow's async gather with configurable pipeline
+        parallelism.
+        """
+        if num_async < 1:
+            raise ValueError("num_async must be >= 1")
+
+        def _gen() -> Iterator[Any]:
+            result_q: "queue.Queue[tuple]" = queue.Queue()
+            inflight = 0
+
+            def _dispatch(i: int) -> None:
+                nonlocal inflight
+                fut = self._shards[i].dispatch(self._shard_stages(i))
+                fut.add_done_callback(lambda f, i=i: result_q.put((i, f)))
+                inflight += 1
+
+            for i in range(len(self._shards)):
+                for _ in range(num_async):
+                    _dispatch(i)
+            while inflight:
+                i, fut = result_q.get()
+                inflight -= 1
+                item = _result_or_exhausted(fut)  # re-raises worker errors
+                if isinstance(item, _Exhausted):
+                    continue  # shard drained; stop backfilling it
+                _dispatch(i)
+                if isinstance(item, NextValueNotReady):
+                    continue
+                get_metrics().current_actor = self._shards[i].actor
+                yield item
+
+        return LocalIterator(_gen, name=f"{self.name}.gather_async")
+
+    def batch_across_shards(self) -> "LocalIterator[List[T]]":
+        """One synchronized list of per-shard items per pull (sync barrier)."""
+
+        def _gen() -> Iterator[Any]:
+            while True:
+                futures = [
+                    shard.dispatch(self._shard_stages(i))
+                    for i, shard in enumerate(self._shards)
+                ]
+                items = [_result_or_exhausted(f) for f in futures]
+                if any(isinstance(x, _Exhausted) for x in items):
+                    return
+                items = [x for x in items if not isinstance(x, NextValueNotReady)]
+                if items:
+                    yield items
+
+        return LocalIterator(_gen, name=f"{self.name}.batch_across_shards")
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"ParallelIterator[{self.name}, shards={len(self._shards)}]"
+
+
+# --------------------------------------------------------------------------
+# Convenience constructors
+# --------------------------------------------------------------------------
+def from_actors(pool: ActorPool, method: str = "sample") -> ParallelIterator:
+    """Parallel iterator pulling ``actor.target.<method>()`` per item."""
+    return ParallelIterator.from_actors(pool, lambda target: getattr(target, method)())
+
+
+def from_items(items: Sequence[Any], repeat: bool = False) -> LocalIterator:
+    def _gen() -> Iterator[Any]:
+        while True:
+            for x in items:
+                yield x
+            if not repeat:
+                return
+
+    return LocalIterator(_gen, name="from_items")
+
+
+def from_iterators(
+    pools: Sequence[Iterable[Any]],
+) -> ParallelIterator:
+    """Shard a parallel iterator over plain python iterables (testing aid)."""
+    class _IterHolder:
+        def __init__(self, it: Iterable[Any]):
+            self.it = iter(it)
+
+        def pull(self) -> Any:
+            return next(self.it)
+
+    pool = ActorPool.from_targets([_IterHolder(it) for it in pools], name="from_iterators")
+    return ParallelIterator.from_actors(pool, lambda t: t.pull())

@@ -1,0 +1,56 @@
+"""Learner thread: decouples gradient updates from the dataflow driver.
+
+High-throughput plans (Ape-X, IMPALA) keep the learner busy on its own thread
+fed by an in-queue; results (and replay priorities) surface on an out-queue.
+This is exactly the paper's Listing A3 LearnerThread.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Optional, Tuple
+
+from repro.core.metrics import LEARN_ON_BATCH_TIMER, TimerStat
+
+__all__ = ["LearnerThread"]
+
+
+class LearnerThread(threading.Thread):
+    def __init__(
+        self,
+        local_worker: Any,
+        in_queue_size: int = 16,
+        out_queue_size: int = 64,
+    ):
+        super().__init__(name="learner", daemon=True)
+        self.local_worker = local_worker
+        self.inqueue: "queue.Queue[Any]" = queue.Queue(maxsize=in_queue_size)
+        self.outqueue: "queue.Queue[Tuple[Any, Any, int]]" = queue.Queue(maxsize=out_queue_size)
+        self.weights_updated = False
+        self.stopped = False
+        self.learn_timer = TimerStat()
+        self.num_steps = 0
+
+    def run(self) -> None:
+        while not self.stopped:
+            try:
+                item = self.inqueue.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            # Items may be (batch, replay_actor) pairs or bare batches.
+            if isinstance(item, tuple) and len(item) == 2:
+                batch, source_actor = item
+            else:
+                batch, source_actor = item, None
+            with self.learn_timer:
+                info = self.local_worker.learn_on_batch(batch)
+            self.weights_updated = True
+            self.num_steps += 1
+            try:
+                self.outqueue.put((source_actor, batch, info), block=False)
+            except queue.Full:
+                pass  # metrics loss is tolerable (paper §3: weak consistency)
+
+    def stop(self) -> None:
+        self.stopped = True

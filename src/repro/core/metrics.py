@@ -1,0 +1,107 @@
+"""Shared metrics context that travels with a dataflow.
+
+The paper routes training statistics through the dataflow itself
+(``ReportMetrics``); operator-internal bookkeeping (counters such as
+``num_steps_sampled``, timers such as ``apply_timer``) lives in a *shared
+metrics context* attached to the local iterator — the same design RLlib Flow
+uses so that operators stay pure item transforms while still being observable.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from typing import Any, Dict, Optional
+
+__all__ = ["TimerStat", "MetricsContext", "get_metrics", "set_metrics_for_thread"]
+
+# Canonical counter names used by the built-in operators (mirrors RLlib Flow).
+STEPS_SAMPLED_COUNTER = "num_steps_sampled"
+STEPS_TRAINED_COUNTER = "num_steps_trained"
+AGENT_STEPS_SAMPLED_COUNTER = "num_agent_steps_sampled"
+TARGET_NET_UPDATES = "num_target_updates"
+
+SAMPLE_TIMER = "sample"
+GRAD_WAIT_TIMER = "grad_wait"
+APPLY_GRADS_TIMER = "apply_grad"
+LEARN_ON_BATCH_TIMER = "learn"
+UPDATE_PRIORITIES_TIMER = "update_priorities"
+
+
+class TimerStat:
+    """EWMA + total timer, context-manager style (paper Listing A2)."""
+
+    def __init__(self, window: int = 100):
+        self._window = window
+        self.count = 0
+        self.total = 0.0
+        self.mean = 0.0
+        self.units = 0.0
+        self._start: Optional[float] = None
+
+    def __enter__(self) -> "TimerStat":
+        self._start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        assert self._start is not None
+        self.push(time.perf_counter() - self._start)
+        self._start = None
+
+    def push(self, dt: float) -> None:
+        self.count += 1
+        self.total += dt
+        alpha = 2.0 / (min(self.count, self._window) + 1)
+        self.mean = dt if self.count == 1 else (1 - alpha) * self.mean + alpha * dt
+
+    def push_units_processed(self, n: float) -> None:
+        self.units += n
+
+    @property
+    def mean_throughput(self) -> float:
+        return self.units / self.total if self.total else 0.0
+
+
+class MetricsContext:
+    """Counters/timers/info shared by all operators of one dataflow.
+
+    ``current_actor`` is set by gather operators while an item produced by a
+    given source actor is in flight — this is what ``zip_with_source_actor``
+    and fine-grained message passing (e.g. Ape-X per-worker weight updates)
+    read.
+    """
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, int] = defaultdict(int)
+        self.timers: Dict[str, TimerStat] = defaultdict(TimerStat)
+        self.info: Dict[str, Any] = {}
+        self.current_actor: Any = None
+        self._lock = threading.Lock()
+
+    def save(self) -> Dict[str, Any]:
+        return {
+            "counters": dict(self.counters),
+            "info": dict(self.info),
+            "timers": {
+                k: {"mean": v.mean, "count": v.count, "throughput": v.mean_throughput}
+                for k, v in self.timers.items()
+            },
+        }
+
+
+# Thread-local pointer to the metrics context of the dataflow currently being
+# driven on this thread (gather operators install it before running stages).
+_local = threading.local()
+
+
+def get_metrics() -> MetricsContext:
+    ctx = getattr(_local, "metrics", None)
+    if ctx is None:
+        ctx = MetricsContext()
+        _local.metrics = ctx
+    return ctx
+
+
+def set_metrics_for_thread(ctx: Optional[MetricsContext]) -> None:
+    _local.metrics = ctx

@@ -1,0 +1,427 @@
+"""The RL-specific dataflow operator library (paper §4–5).
+
+Creation operators return iterators; transformation operators are callable
+classes applied with ``for_each``.  Together with the sequencing/concurrency
+primitives in ``iterators.py`` / ``concurrency.py`` these are sufficient to
+express every algorithm plan in ``plans.py`` — the paper's Table 2 suite.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.actor import ActorPool, VirtualActor
+from repro.core.iterators import (
+    LocalIterator,
+    NextValueNotReady,
+    ParallelIterator,
+)
+from repro.core.metrics import (
+    APPLY_GRADS_TIMER,
+    GRAD_WAIT_TIMER,
+    LEARN_ON_BATCH_TIMER,
+    STEPS_SAMPLED_COUNTER,
+    STEPS_TRAINED_COUNTER,
+    TARGET_NET_UPDATES,
+    get_metrics,
+)
+from repro.core.workers import WorkerSet
+from repro.rl.sample_batch import MultiAgentBatch, SampleBatch
+
+__all__ = [
+    "ParallelRollouts",
+    "ComputeGradients",
+    "ApplyGradients",
+    "AverageGradients",
+    "TrainOneStep",
+    "ConcatBatches",
+    "SelectExperiences",
+    "StandardizeFields",
+    "StoreToReplayBuffer",
+    "Replay",
+    "UpdateReplayPriorities",
+    "UpdateTargetNetwork",
+    "UpdateWorkerWeights",
+    "ReportMetrics",
+    "StandardMetricsReporting",
+]
+
+
+# --------------------------------------------------------------------------
+# Creation
+# --------------------------------------------------------------------------
+def ParallelRollouts(
+    workers: WorkerSet,
+    mode: str = "bulk_sync",
+    num_async: int = 1,
+) -> Any:
+    """Stream of experience batches from the rollout workers (paper Fig 5).
+
+    mode='raw'       -> ParIter[SampleBatch]   (caller sequences it)
+    mode='bulk_sync' -> Iter[SampleBatch]      (synchronously concatenated
+                        across workers per round — PPO/A2C style)
+    mode='async'     -> Iter[SampleBatch]      (completion order — Ape-X/
+                        IMPALA style, pipeline depth ``num_async``)
+    """
+    par = ParallelIterator.from_actors(
+        workers.remote_workers(), lambda w: w.sample(), name="ParallelRollouts"
+    )
+
+    def _count(batch: SampleBatch) -> SampleBatch:
+        get_metrics().counters[STEPS_SAMPLED_COUNTER] += batch.count
+        return batch
+
+    if mode == "raw":
+        return par
+    if mode == "bulk_sync":
+        def _concat(batches: List[SampleBatch]) -> SampleBatch:
+            if batches and isinstance(batches[0], MultiAgentBatch):
+                out: Any = MultiAgentBatch.concat_samples(batches)
+            else:
+                out = SampleBatch.concat_samples(batches)
+            get_metrics().counters[STEPS_SAMPLED_COUNTER] += out.count
+            return out
+
+        return par.batch_across_shards().for_each(_concat)
+    if mode == "async":
+        return par.gather_async(num_async=num_async).for_each(_count)
+    raise ValueError(f"unknown rollout mode {mode!r}")
+
+
+def Replay(
+    actors: ActorPool,
+    num_async: int = 4,
+) -> LocalIterator[SampleBatch]:
+    """Stream of replayed batches from replay-buffer actors (Ape-X §5.2).
+
+    Pulls with ``num_async``-deep pipelining; buffers that are not yet warm
+    return None, which is skipped (NextValueNotReady semantics).
+    """
+    par = ParallelIterator.from_actors(actors, lambda r: r.replay(), name="Replay")
+
+    def _skip_cold(item: Any) -> Any:
+        return NextValueNotReady() if item is None else item
+
+    return par.gather_async(num_async=num_async).for_each(_skip_cold)
+
+
+# --------------------------------------------------------------------------
+# Gradient-based transformations
+# --------------------------------------------------------------------------
+class ComputeGradients:
+    """batch -> (grads, info); runs ON the source rollout actor, reading its
+    local policy snapshot (paper §4, Transformation)."""
+
+    def __call__(self, batch: SampleBatch) -> Tuple[Any, Dict[str, Any]]:
+        # Inside a parallel for_each this executes on the actor thread; the
+        # actor's target is reachable through the batch producer closure, so
+        # RLlib Flow instead passes the *worker itself* via ParallelIterator
+        # scheduling. We mirror that: plans use `par_compute_gradients`.
+        raise RuntimeError(
+            "ComputeGradients must be applied with par_compute_gradients() "
+            "on a raw ParallelRollouts iterator"
+        )
+
+
+def par_compute_gradients(workers: WorkerSet) -> ParallelIterator:
+    """ParIter[(grads, info)] — sample + grad computed on each worker."""
+
+    def _sample_and_grad(w: Any) -> Tuple[Any, Dict[str, Any]]:
+        batch = w.sample()
+        grads, info = w.compute_gradients(batch)
+        info = dict(info)
+        info["batch_count"] = batch.count
+        return grads, info
+
+    return ParallelIterator.from_actors(
+        workers.remote_workers(), _sample_and_grad, name="ComputeGradients"
+    )
+
+
+class ApplyGradients:
+    """Apply (grads, info) on the local worker; push weights to the source
+    actor (A3C) or all actors (synchronous algorithms)."""
+
+    share_across_shards = True
+
+    def __init__(self, workers: WorkerSet, update_all: bool = False):
+        self.workers = workers
+        self.update_all = update_all
+
+    def __call__(self, item: Tuple[Any, Dict[str, Any]]) -> Dict[str, Any]:
+        grads, info = item
+        metrics = get_metrics()
+        with metrics.timers[APPLY_GRADS_TIMER]:
+            self.workers.local_worker().apply_gradients(grads)
+        metrics.counters[STEPS_TRAINED_COUNTER] += info.get("batch_count", 0)
+        metrics.counters[STEPS_SAMPLED_COUNTER] += info.get("batch_count", 0)
+        if self.update_all:
+            self.workers.sync_weights()
+        else:
+            # Fine-grained message passing: update only the producing actor.
+            actor = metrics.current_actor
+            if actor is not None:
+                weights = self.workers.local_worker().get_weights()
+                actor.call("set_weights", weights)
+        return info
+
+
+class AverageGradients:
+    """List[(grads, info)] -> (averaged grads, merged info) (sync A2C)."""
+
+    def __call__(self, items: Sequence[Tuple[Any, Dict[str, Any]]]) -> Tuple[Any, Dict]:
+        import jax
+
+        grads = [g for g, _ in items if g is not None]
+        info = dict(items[0][1]) if items else {}
+        info["batch_count"] = sum(i.get("batch_count", 0) for _, i in items)
+        avg = jax.tree_util.tree_map(lambda *gs: sum(gs) / len(gs), *grads)
+        return avg, info
+
+
+class TrainOneStep:
+    """Take a (possibly multi-agent) batch, run one learner update on the
+    local worker, then broadcast new weights (paper Fig 10b/11b)."""
+
+    share_across_shards = True
+
+    def __init__(
+        self,
+        workers: WorkerSet,
+        policies: Optional[Sequence[str]] = None,
+        num_sgd_iter: int = 1,
+        sgd_minibatch_size: int = 0,
+    ):
+        self.workers = workers
+        self.policies = list(policies) if policies else None
+        self.num_sgd_iter = num_sgd_iter
+        self.sgd_minibatch_size = sgd_minibatch_size
+        self._rng = np.random.default_rng(0)
+
+    def __call__(self, batch: Any) -> Any:
+        metrics = get_metrics()
+        lw = self.workers.local_worker()
+        with metrics.timers[LEARN_ON_BATCH_TIMER]:
+            if self.num_sgd_iter > 1 or self.sgd_minibatch_size:
+                infos = []
+                mbs = self.sgd_minibatch_size or batch.count
+                for _ in range(self.num_sgd_iter):
+                    for mb in batch.minibatches(mbs, self._rng):
+                        infos.append(self._learn(lw, mb))
+                info = infos[-1] if infos else {}
+            else:
+                info = self._learn(lw, batch)
+        metrics.counters[STEPS_TRAINED_COUNTER] += batch.count
+        self.workers.sync_weights()
+        return batch, info
+
+    def _learn(self, lw: Any, batch: Any) -> Dict[str, Any]:
+        if isinstance(batch, MultiAgentBatch):
+            out = {}
+            for pid, b in batch.policy_batches.items():
+                if self.policies is None or pid in self.policies:
+                    out[pid] = lw.learn_on_batch(b, policy_id=pid)
+            return out
+        if self.policies:
+            return lw.learn_on_batch(batch, policy_id=self.policies[0])
+        return lw.learn_on_batch(batch)
+
+
+# --------------------------------------------------------------------------
+# Batch shaping
+# --------------------------------------------------------------------------
+class ConcatBatches:
+    """Buffer incoming batches until ``min_batch_size`` steps accumulated."""
+
+    def __init__(self, min_batch_size: int):
+        self.min_batch_size = min_batch_size
+        self._buf: List[SampleBatch] = []
+        self._count = 0
+
+    def __call__(self, batch: Any) -> Any:
+        self._buf.append(batch)
+        self._count += batch.count
+        if self._count >= self.min_batch_size:
+            cls = MultiAgentBatch if isinstance(self._buf[0], MultiAgentBatch) else SampleBatch
+            out = cls.concat_samples(self._buf)
+            self._buf, self._count = [], 0
+            return out
+        return NextValueNotReady()
+
+
+class SelectExperiences:
+    """Keep only the given policies' experiences (multi-agent, paper §5.3)."""
+
+    def __init__(self, policy_ids: Sequence[str]):
+        self.policy_ids = list(policy_ids)
+
+    def __call__(self, batch: Any) -> Any:
+        if isinstance(batch, MultiAgentBatch):
+            return batch.select(self.policy_ids)
+        return batch
+
+
+class StandardizeFields:
+    """Z-score the given columns (PPO advantages)."""
+
+    def __init__(self, fields: Sequence[str]):
+        self.fields = list(fields)
+
+    def __call__(self, batch: Any) -> Any:
+        if isinstance(batch, MultiAgentBatch):
+            for b in batch.policy_batches.values():
+                self._standardize(b)
+            return batch
+        self._standardize(batch)
+        return batch
+
+    def _standardize(self, batch: SampleBatch) -> None:
+        for f in self.fields:
+            if f in batch:
+                col = batch[f]
+                batch[f] = (col - col.mean()) / max(1e-4, col.std())
+
+
+# --------------------------------------------------------------------------
+# Replay interaction
+# --------------------------------------------------------------------------
+class StoreToReplayBuffer:
+    """Send each batch to a random replay actor (Ape-X store sub-flow)."""
+
+    share_across_shards = True
+
+    def __init__(self, actors: ActorPool, seed: int = 0):
+        self.actors = actors
+        self._rng = np.random.default_rng(seed)
+
+    def __call__(self, batch: SampleBatch) -> SampleBatch:
+        actor = self.actors[int(self._rng.integers(len(self.actors)))]
+        actor.call("add_batch", batch)
+        return batch
+
+
+class UpdateReplayPriorities:
+    """Push new TD-error priorities back to the producing replay actor.
+
+    Consumes ((batch, info), replay_actor) tuples produced by
+    ``Replay(...).zip_with_source_actor()`` + TrainOneStep.
+    """
+
+    share_across_shards = True
+
+    def __call__(self, item: Tuple[Tuple[Any, Dict], VirtualActor]) -> Any:
+        (batch, info), actor = item
+        td = info.get("td_error") if isinstance(info, dict) else None
+        if td is not None and actor is not None and "batch_indices" in batch:
+            actor.call("update_priorities", batch["batch_indices"], np.abs(td))
+        return batch, info
+
+
+# --------------------------------------------------------------------------
+# Actor message-passing operators
+# --------------------------------------------------------------------------
+class UpdateTargetNetwork:
+    """Periodically sync the target network (DQN family)."""
+
+    share_across_shards = True
+
+    def __init__(self, workers: WorkerSet, target_update_freq: int):
+        self.workers = workers
+        self.target_update_freq = target_update_freq
+        self._last = 0
+
+    def __call__(self, item: Any) -> Any:
+        metrics = get_metrics()
+        trained = metrics.counters[STEPS_TRAINED_COUNTER]
+        if trained - self._last >= self.target_update_freq:
+            self._last = trained
+            self.workers.local_worker().update_target()
+            metrics.counters[TARGET_NET_UPDATES] += 1
+        return item
+
+
+class UpdateWorkerWeights:
+    """Fine-grained weight push to the actor that produced the item
+    (Ape-X: max_weight_sync_delay staleness control)."""
+
+    share_across_shards = True
+
+    def __init__(self, workers: WorkerSet, max_weight_sync_delay: int = 400):
+        self.workers = workers
+        self.max_weight_sync_delay = max_weight_sync_delay
+        self._steps_since: Dict[int, int] = {}
+
+    def __call__(self, item: Tuple[Any, VirtualActor]) -> Any:
+        batch, actor = item
+        if actor is None:
+            return batch
+        n = self._steps_since.get(actor.actor_id, 0) + getattr(batch, "count", 0)
+        if n >= self.max_weight_sync_delay:
+            weights = self.workers.local_worker().get_weights()
+            actor.call("set_weights", weights)
+            n = 0
+        self._steps_since[actor.actor_id] = n
+        return batch
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+class ReportMetrics:
+    """item -> training-result dict, merging the shared metrics context."""
+
+    share_across_shards = True
+
+    def __init__(self, workers: Optional[WorkerSet] = None):
+        self.workers = workers
+        self._t0 = time.perf_counter()
+
+    def __call__(self, item: Any) -> Dict[str, Any]:
+        metrics = get_metrics()
+        info = item[1] if isinstance(item, tuple) and len(item) == 2 else item
+        result = dict(metrics.save())
+        # Per-item learner info wins over the context's info blob.
+        result["info"] = info
+        result["time_total_s"] = time.perf_counter() - self._t0
+        if self.workers is not None:
+            stats = []
+            lw = self.workers.local_worker()
+            if hasattr(lw, "episode_stats"):
+                stats.append(lw.episode_stats())
+            try:
+                stats += self.workers.remote_workers().broadcast_sync("episode_stats")
+            except AttributeError:
+                pass
+            rewards = [
+                s["episode_reward_mean"]
+                for s in stats
+                if s.get("episodes", 0) > 0 and s["episode_reward_mean"] == s["episode_reward_mean"]
+            ]
+            result["episodes"] = {
+                "episode_reward_mean": float(np.mean(rewards)) if rewards else float("nan"),
+                "episodes": int(sum(s.get("episodes", 0) for s in stats)),
+            }
+        return result
+
+
+def StandardMetricsReporting(
+    train_op: LocalIterator,
+    workers: WorkerSet,
+    report_interval: int = 1,
+) -> LocalIterator[Dict[str, Any]]:
+    """Wrap a train op into the standard result stream (every Nth item)."""
+    it = train_op
+    if report_interval > 1:
+        counter = {"n": 0}
+
+        def _every(item: Any) -> Any:
+            counter["n"] += 1
+            if counter["n"] % report_interval == 0:
+                return item
+            return NextValueNotReady()
+
+        it = it.for_each(_every)
+    return it.for_each(ReportMetrics(workers))

@@ -1,0 +1,118 @@
+"""Dataflow -> SPMD lowering (DESIGN.md §3.2).
+
+A *synchronous* dataflow fragment — rollout/data -> transform ->
+``gather_sync`` barrier -> train -> weight broadcast — has exactly the
+semantics of one SPMD step: the barrier is the collective, and the broadcast
+is the SPMD invariant that every shard already holds the updated params.
+``SPMDTrainContext`` performs that lowering: it binds a model + optimizer to
+a mesh and sharding rules and yields jit-compiled step functions whose
+in/out shardings implement the fragment.
+
+The resulting step plugs back into the host-level dataflow as the
+``learn_on_batch`` of an ``SPMDLearnerWorker`` — so the same plans
+(ppo_plan-shaped: data -> ConcatBatches -> TrainOneStep -> metrics) drive a
+single CPU process or a 512-chip pod, which is the paper's thesis applied to
+TPU: the dataflow is the program; the schedule is an execution detail.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.sharding import AxisRules, DEFAULT_RULES, axis_rules_context
+from repro.distributed.specs import (
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+    tree_shardings,
+)
+from repro.models import Model, make_decode_step, make_prefill_step, make_train_step
+from repro.optim import Optimizer
+
+PyTree = Any
+
+__all__ = ["SPMDTrainContext", "SPMDLearnerWorker"]
+
+
+class SPMDTrainContext:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        optimizer: Optimizer,
+        mesh: Any,
+        rules: Optional[Dict[str, Any]] = None,
+    ):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.optimizer = optimizer
+        self.mesh = mesh
+        self.rules = AxisRules(rules or DEFAULT_RULES, mesh)
+        self._train_step: Optional[Callable] = None
+
+    # ------------------------------------------------------------- lowering
+    def shardings(self) -> Tuple[PyTree, PyTree]:
+        params_shape = jax.eval_shape(self.model.init_params, jax.random.PRNGKey(0))
+        pspecs = param_specs(params_shape, self.rules)
+        opt_shape = jax.eval_shape(self.optimizer.init, params_shape)
+        ospecs = opt_state_specs(opt_shape, pspecs, self.rules)
+        return tree_shardings(self.mesh, pspecs), tree_shardings(self.mesh, ospecs)
+
+    def init(self, seed: int = 0) -> Tuple[PyTree, PyTree]:
+        """Initialize params/opt state directly sharded on the mesh."""
+        p_shard, o_shard = self.shardings()
+        with self.mesh, axis_rules_context(self.rules):
+            params = jax.jit(
+                self.model.init_params, out_shardings=p_shard
+            )(jax.random.PRNGKey(seed))
+            opt_state = jax.jit(self.optimizer.init, out_shardings=o_shard)(params)
+        return params, opt_state
+
+    def train_step(self) -> Callable:
+        """The fused sync-fragment step: grads + barrier-reduce + apply."""
+        if self._train_step is None:
+            p_shard, o_shard = self.shardings()
+            step = make_train_step(self.model, self.optimizer)
+            self._train_step = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, None),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+        return self._train_step
+
+    def __call__(self, params, opt_state, batch):
+        with self.mesh, axis_rules_context(self.rules):
+            device_batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            return self.train_step()(params, opt_state, device_batch)
+
+
+class SPMDLearnerWorker:
+    """Worker-protocol adapter: plugs an SPMD step into TrainOneStep.
+
+    The host dataflow treats it like any rollout/learner worker; its
+    ``learn_on_batch`` runs the pjit-compiled fragment on the mesh.
+    """
+
+    def __init__(self, ctx: SPMDTrainContext, seed: int = 0):
+        self.ctx = ctx
+        self.params, self.opt_state = ctx.init(seed)
+        self.steps = 0
+
+    def learn_on_batch(self, batch: Any, policy_id: Optional[str] = None) -> Dict[str, Any]:
+        self.params, self.opt_state, metrics = self.ctx(self.params, self.opt_state, dict(batch))
+        self.steps += 1
+        return {k: float(np.asarray(v)) for k, v in metrics.items()}
+
+    def get_weights(self) -> PyTree:
+        return self.params
+
+    def set_weights(self, weights: PyTree) -> None:
+        self.params = weights
+
+    def episode_stats(self) -> Dict[str, Any]:
+        return {"episodes": 0, "episode_reward_mean": float("nan")}

@@ -1,0 +1,53 @@
+"""WorkerSet: the local + remote rollout-worker group used by plans.
+
+Mirrors RLlib's WorkerSet: one *local* worker (driver-side; owns the canonical
+policy used by TrainOneStep/ApplyGradients) plus N *remote* workers (virtual
+actors) that sample in parallel.  The protocol any worker target must satisfy:
+
+    sample() -> SampleBatch
+    get_weights() -> pytree
+    set_weights(weights) -> None
+    compute_gradients(batch) -> (grads, info)
+    apply_gradients(grads) -> info
+    learn_on_batch(batch) -> info
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional
+
+from repro.core.actor import ActorPool, VirtualActor
+
+__all__ = ["WorkerSet"]
+
+
+class WorkerSet:
+    def __init__(self, local_worker: Any, remote_workers: ActorPool):
+        self._local = local_worker
+        self._remote = remote_workers
+
+    @classmethod
+    def create(
+        cls, worker_factory: Callable[[int], Any], num_workers: int
+    ) -> "WorkerSet":
+        """Build a local worker (index 0) and ``num_workers`` remote actors."""
+        local = worker_factory(0)
+        remote = ActorPool.from_targets(
+            [worker_factory(i + 1) for i in range(num_workers)], name="rollout_workers"
+        )
+        return cls(local, remote)
+
+    def local_worker(self) -> Any:
+        return self._local
+
+    def remote_workers(self) -> ActorPool:
+        return self._remote
+
+    def sync_weights(self) -> None:
+        """Broadcast local weights to all remote workers (global barrier)."""
+        weights = self._local.get_weights()
+        for f in self._remote.broadcast("set_weights", weights):
+            f.result()
+
+    def stop(self) -> None:
+        self._remote.stop()

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, make_batch
+
+__all__ = ["TokenPipeline", "make_batch"]

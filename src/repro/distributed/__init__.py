@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    axis_rules_context,
+    get_axis_rules,
+    logical_spec,
+    shard,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "axis_rules_context",
+    "get_axis_rules",
+    "logical_spec",
+    "shard",
+]

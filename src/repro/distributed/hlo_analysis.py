@@ -1,0 +1,160 @@
+"""HLO analysis: collective bytes + roofline terms from a compiled artifact.
+
+``collective_bytes`` parses the (compiled, SPMD-partitioned) HLO text and
+sums the result-buffer sizes of every collective op — the §Roofline
+collective term numerator.  ``roofline`` combines it with
+``compiled.cost_analysis()`` into the three roofline terms for TPU v5e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+__all__ = ["collective_bytes", "roofline", "Roofline", "HW_V5E"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[2,1024,128]{2,1,0} all-gather(...)
+_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s(" + "|".join(_COLLECTIVES) + r")\("
+)
+# tuple-result collectives:  (bf16[...], bf16[...]) all-reduce(
+_RE_TUPLE = re.compile(
+    r"=\s*\(([^)]+)\)\s*(" + "|".join(_COLLECTIVES) + r")\("
+)
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved per collective kind (result-buffer sizes)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        mt = _RE_TUPLE.search(line)
+        if mt:
+            shapes, kind = mt.groups()
+            for sm in _RE_SHAPE.finditer(shapes):
+                out[kind] += _shape_bytes(*sm.groups())
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link per chip
+
+
+HW_V5E = Hardware("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def roofline(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    coll: Dict[str, int],
+    model_flops: float,
+    hw: Hardware = HW_V5E,
+    bytes_per_device: Optional[float] = None,
+) -> Roofline:
+    """cost: compiled.cost_analysis(); coll: collective_bytes() output.
+
+    NOTE: cost_analysis flops/bytes are *global* (whole-program, all shards);
+    divide by chips for per-chip time.  collective bytes likewise summed over
+    the program; ICI time uses per-chip link bandwidth.
+    """
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total", 0))
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        coll_bytes=cbytes,
+        compute_s=flops / (chips * hw.peak_flops),
+        memory_s=byts / (chips * hw.hbm_bw),
+        collective_s=cbytes / (chips * hw.ici_bw),
+        model_flops=model_flops,
+        bytes_per_device=bytes_per_device,
+    )

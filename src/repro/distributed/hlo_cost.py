@@ -1,0 +1,323 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, but our models
+compile as ``lax.scan`` over blocks (and SSM time scans), so raw numbers
+undercount by the trip count.  This module parses the optimized HLO text and
+walks the call graph (entry -> fusions/whiles/conditionals), multiplying
+while bodies by their trip count (extracted from the loop-condition compare
+constant).
+
+Counted per computation:
+  * dot FLOPs:   2 * prod(result_dims) * prod(lhs contracting dims)
+  * collective bytes: result-buffer sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute
+
+The numbers are for the *per-device* partitioned program (SPMD module);
+multiply by chip count for global totals where needed.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather-start", "all-gather",
+    "all-reduce-start", "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute-start", "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Instr:
+    name: str
+    rhs: str
+    shape: Optional[Tuple[str, List[int]]]
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k,
+            self.coll_bytes * k,
+            self.hbm_bytes * k,
+            {kk: v * k for kk, v in self.coll_by_kind.items()},
+            self.unknown_trip_counts,
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.coll_bytes += other.coll_bytes
+        self.hbm_bytes += other.hbm_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            # computation header: '%name (args) -> type {' or 'ENTRY %name ...{'
+            if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+                m = re.search(r"%?([\w.\-]+)\s*\(", stripped)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(stripped)
+        if m:
+            name, rhs = m.groups()
+            comps[current].append(_Instr(name, rhs, _first_shape(rhs)))
+    return comps
+
+
+def _dot_flops(instr: _Instr, shapes: Dict[str, Tuple[str, List[int]]]) -> float:
+    # result elems * 2 * prod(lhs contracting dims)
+    if instr.shape is None:
+        return 0.0
+    res_elems = _shape_elems(",".join(map(str, instr.shape[1])))
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+    ops = re.search(r"\bdot\(([^)]*)\)", instr.rhs)
+    if not ops:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    contract = 1
+    if mdims and operands:
+        lhs = shapes.get(operands[0])
+        if lhs:
+            for d in mdims.group(1).split(","):
+                if d:
+                    contract *= lhs[1][int(d)]
+    return 2.0 * res_elems * contract
+
+
+def _trip_count(cond_instrs: List[_Instr]) -> Optional[int]:
+    # The scan condition is 'lt(iter, C)'; find the compare and its constant.
+    consts: Dict[str, int] = {}
+    for ins in cond_instrs:
+        mc = _CONST_RE.search(ins.rhs)
+        if mc and ins.shape and ins.shape[0] in ("s32", "u32", "s64", "u64"):
+            consts[ins.name] = int(mc.group(1))
+    for ins in cond_instrs:
+        if " compare(" in ins.rhs or ins.rhs.startswith("compare("):
+            ops = re.search(r"compare\(([^)]*)\)", ins.rhs)
+            if ops:
+                names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+                for n in names:
+                    if n in consts:
+                        return consts[n]
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return None
+
+
+def _param_access_bytes(comp: str, comps: Dict[str, List[_Instr]]) -> Dict[int, float]:
+    """Per-parameter effective bytes for a fusion body: parameters consumed
+    ONLY through dynamic-slice/gather are charged at slice size (a scan body
+    dynamic-slicing one step of a [T, ...] stack reads step bytes, not the
+    stack) — otherwise full size (caller charges it)."""
+    out: Dict[int, float] = {}
+    instrs = comps.get(comp, [])
+    shapes = {i.name: i.shape for i in instrs if i.shape is not None}
+    pidx: Dict[str, int] = {}
+    for ins in instrs:
+        m = re.search(r"parameter\((\d+)\)", ins.rhs)
+        if m:
+            pidx[ins.name] = int(m.group(1))
+    for pname, i in pidx.items():
+        slice_bytes = 0.0
+        other_use = False
+        for ins in instrs:
+            ops_m = re.search(r"\b([a-z\-]+)\(([^)]*)\)", ins.rhs)
+            if not ops_m:
+                continue
+            opnames = [o.strip().lstrip("%") for o in ops_m.group(2).split(",")]
+            if pname not in opnames:
+                continue
+            kind = ops_m.group(1)
+            if kind in ("dynamic-slice", "gather", "slice") and opnames[0] == pname:
+                if ins.shape is not None:
+                    slice_bytes += _shape_elems(",".join(map(str, ins.shape[1]))) * _DTYPE_BYTES.get(ins.shape[0], 4)
+            elif kind == "dynamic-update-slice" and opnames[0] == pname:
+                # in-place update: charge the update region (2nd operand)
+                upd = shapes.get(opnames[1]) if len(opnames) > 1 else None
+                if upd is not None:
+                    slice_bytes += 2 * _shape_elems(",".join(map(str, upd[1]))) * _DTYPE_BYTES.get(upd[0], 4)
+            else:
+                other_use = True
+        if not other_use and slice_bytes > 0:
+            out[i] = slice_bytes
+    return out
+
+
+_PARAM_EFF_CACHE: Dict[str, Dict[int, float]] = {}
+
+
+def _cost_of(
+    comp: str,
+    comps: Dict[str, List[_Instr]],
+    cache: Dict[str, HloCost],
+    stack: Tuple[str, ...] = (),
+) -> HloCost:
+    if comp in cache:
+        return cache[comp]
+    if comp in stack or comp not in comps:
+        return HloCost()
+    out = HloCost()
+    instrs = comps[comp]
+    shapes = {i.name: i.shape for i in instrs if i.shape is not None}
+    _param_eff_cache: Dict[str, Dict[int, float]] = _PARAM_EFF_CACHE
+
+    def _size(shp) -> float:
+        return _shape_elems(",".join(map(str, shp[1]))) * _DTYPE_BYTES.get(shp[0], 4)
+
+    # Slice-like ops touch only the slice-sized region, not the full operand
+    # (a scan body dynamic-slicing one step from a [T, ...] stack reads
+    # step-bytes per iteration, and DUS writes in place on TPU).  Counting
+    # operands at full size multiplied by trip counts overstates scan-model
+    # HBM traffic by ~1000x.
+    _SLICE_LIKE = (" dynamic-slice(", " gather(", " slice(")
+    _DUS_LIKE = (" dynamic-update-slice(", " scatter(")
+
+    def _site_bytes(ins: _Instr) -> float:
+        """HBM traffic at a (fusion/op) call site."""
+        res = _size(ins.shape) if ins.shape is not None else 0.0
+        if any(k in f" {ins.rhs}" for k in _SLICE_LIKE):
+            return 2.0 * res  # read slice + write result
+        if any(k in f" {ins.rhs}" for k in _DUS_LIKE):
+            # update region read+write; update operand is the smallest input
+            ops_m = re.search(r"\b[a-z\-]+\(([^)]*)\)", ins.rhs)
+            upd = res
+            if ops_m:
+                sizes = [
+                    _size(shapes[o.strip().lstrip("%")])
+                    for o in ops_m.group(1).split(",")
+                    if o.strip().lstrip("%") in shapes
+                ]
+                if sizes:
+                    upd = min(sizes)
+            return 2.0 * upd
+        total = res
+        # Fusions: charge parameters at their effective (slice-aware) bytes.
+        eff: Dict[int, float] = {}
+        mcal = _CALLS_RE.search(ins.rhs)
+        if mcal and " fusion(" in ins.rhs:
+            eff = _param_eff_cache.setdefault(
+                mcal.group(1), _param_access_bytes(mcal.group(1), comps)
+            )
+        ops_m = re.search(r"\b[a-z\-]+\(([^)]*)\)", ins.rhs)
+        if ops_m:
+            for oi, o in enumerate(ops_m.group(1).split(",")):
+                o = o.strip().lstrip("%")
+                shp = shapes.get(o)
+                if shp is not None:
+                    total += eff.get(oi, _size(shp)) if eff else _size(shp)
+        return total
+
+    _FREE = (" parameter(", " constant(", " get-tuple-element(", " tuple(", " bitcast(")
+    for ins in instrs:
+        rhs = ins.rhs
+        if " dot(" in rhs or rhs.startswith("dot("):
+            out.flops += _dot_flops(ins, shapes)
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in rhs:
+                base = kind.replace("-start", "")
+                sz = 0
+                for sm in _SHAPE_RE.finditer(rhs.split(kind + "(")[0]):
+                    sz += _shape_elems(sm.group(2)) * _DTYPE_BYTES.get(sm.group(1), 4)
+                out.coll_bytes += sz
+                out.coll_by_kind[base] = out.coll_by_kind.get(base, 0.0) + sz
+                break
+        if not any(f in f" {rhs}" for f in _FREE) and " while(" not in rhs and " conditional(" not in rhs:
+            out.hbm_bytes += _site_bytes(ins)
+        if " while(" in rhs:
+            mb, mc = _BODY_RE.search(rhs), _COND_RE.search(rhs)
+            if mb:
+                body_cost = _cost_of(mb.group(1), comps, cache, stack + (comp,))
+                trips = _trip_count(comps.get(mc.group(1), [])) if mc else None
+                if trips is None:
+                    trips = 1
+                    out.unknown_trip_counts += 1
+                out.add(body_cost.scaled(trips))
+            continue
+        if " conditional(" in rhs:
+            mbr = _BRANCHES_RE.search(rhs)
+            if mbr:
+                branch_costs = [
+                    _cost_of(b.strip().lstrip("%"), comps, cache, stack + (comp,))
+                    for b in mbr.group(1).split(",")
+                ]
+                if branch_costs:
+                    worst = max(branch_costs, key=lambda c: c.flops + c.coll_bytes)
+                    out.add(worst)
+            continue
+        mcalls = _CALLS_RE.search(rhs)
+        if mcalls and (" fusion(" in rhs or " call(" in rhs or " custom-call(" in rhs):
+            sub = _cost_of(mcalls.group(1), comps, cache, stack + (comp,))
+            # bytes counted at the call site already; recurse compute/comm only
+            out.add(HloCost(sub.flops, sub.coll_bytes, 0.0, sub.coll_by_kind, sub.unknown_trip_counts))
+    cache[comp] = out
+    return out
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    _PARAM_EFF_CACHE.clear()
+    comps = _parse_computations(hlo_text)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    cache: Dict[str, HloCost] = {}
+    return _cost_of(entry, comps, cache)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding: one rules table maps model dims to mesh axes.
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"heads", "d_ff", "experts", ...).  A rules table resolves logical names to
+mesh axes (or None = replicated).  The same model code therefore runs on a
+single CPU device (empty rules), a 256-chip pod, or a 512-chip 2-pod mesh —
+only the rules change.  This is the SPMD half of DESIGN.md §3.
+
+Default production rules (v5e 16×16 per pod):
+
+    batch   -> ('pod', 'data')   # data parallel across pods and data axis
+    fsdp    -> 'data'            # param/optimizer-state FSDP dim
+    vocab   -> 'model'
+    heads   -> 'model'           # tensor parallel attention
+    kv_heads-> 'model'
+    d_ff    -> 'model'           # tensor parallel MLP
+    experts -> 'model'           # expert parallel MoE
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "axis_rules_context",
+    "get_axis_rules",
+    "logical_spec",
+    "shard",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def _prod(it) -> int:
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+class AxisRules:
+    def __init__(self, rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+        self.rules = dict(rules)
+        self.mesh = mesh
+
+    def resolve(
+        self,
+        logical: Sequence[Optional[str]],
+        shape: Optional[Sequence[int]] = None,
+    ) -> P:
+        """Map a tuple of logical dim names to a PartitionSpec.
+
+        Drops mesh axes that are not present in the bound mesh (so the same
+        rules serve ('data','model') and ('pod','data','model') meshes) and —
+        when ``shape`` is given — axes that do not divide the dim evenly
+        (e.g. 40 heads on a 16-way model axis), avoiding GSPMD's padded
+        uneven sharding and its involuntary full rematerializations.
+        """
+        mesh_axes = (
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            if self.mesh is not None
+            else None
+        )
+        used: set = set()
+        out = []
+        for i, name in enumerate(logical):
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                out.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            keep = []
+            dim = shape[i] if shape is not None else None
+            for a in axes:
+                if mesh_axes is not None and a not in mesh_axes:
+                    continue
+                if a in used:
+                    continue
+                if dim is not None and mesh_axes is not None:
+                    if dim % (mesh_axes[a] * _prod(mesh_axes[x] for x in keep)):
+                        continue
+                keep.append(a)
+            used.update(keep)
+            if not keep:
+                out.append(None)
+            elif len(keep) == 1:
+                out.append(keep[0])
+            else:
+                out.append(tuple(keep))
+        return P(*out)
+
+
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "experts": "model",
+    "seq": None,
+    "d_model": None,
+    "head_dim": None,
+    "state": None,
+    # Decode KV-cache context dim: sharded over 'model' (context parallelism)
+    # so long caches fit regardless of kv-head divisibility.
+    "window": "model",
+}
+
+_ctx = threading.local()
+
+
+def get_axis_rules() -> Optional[AxisRules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules_context(rules: AxisRules):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def logical_spec(*logical: Optional[str]) -> P:
+    """Resolve logical names to a PartitionSpec under the active rules."""
+    rules = get_axis_rules()
+    if rules is None:
+        return P(*([None] * len(logical)))
+    return rules.resolve(logical)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an intermediate with a logical sharding constraint.
+
+    No-op when no rules/mesh are active (single-device smoke tests).
+    """
+    rules = get_axis_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.resolve(logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

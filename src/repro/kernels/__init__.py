@@ -1,0 +1,2 @@
+# Pallas TPU kernels for the framework's compute hot-spots, with pure-jnp
+# oracles (ref.py) and a backend-dispatching wrapper layer (ops.py).

@@ -1,0 +1,113 @@
+"""Single-token decode attention Pallas TPU kernel.
+
+One query token per sequence against a long KV cache: the compute is tiny,
+the HBM traffic (streaming the cache) dominates — so the kernel's job is to
+stream [block_w x D] K/V tiles through VMEM exactly once while carrying the
+online-softmax state for the whole q-head group in VMEM scratch.
+
+Grid: (B, KV, num_w_blocks) with the cache-window dim innermost/sequential.
+The g = H/KV query heads of one group form the [g, D] matmul tile (padded to
+the 8-row VREG sublane when g < 8 by the surrounding reshape).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,      # [1, 1, g, D]
+    k_ref,      # [1, block_w, 1, D]
+    v_ref,      # [1, block_w, 1, D]
+    valid_ref,  # [block_w]
+    o_ref,      # [1, 1, g, D]
+    m_scr,      # [g]
+    l_scr,      # [g]
+    acc_scr,    # [g, D]
+    *,
+    scale: float,
+    num_w_blocks: int,
+):
+    wi = pl.program_id(2)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [g, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [block_w, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # [g, block_w]
+    s = jnp.where(valid_ref[...][None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(wi == num_w_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,        # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, W, KV, D]
+    v_cache: jax.Array,
+    valid: jax.Array,    # [W] bool
+    block_w: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_w = min(block_w, W)
+    assert W % block_w == 0, "pad cache window to block multiple"
+    nw = W // block_w
+
+    qg = q.reshape(B, KV, g, D)  # group per kv head
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / math.sqrt(D), num_w_blocks=nw
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nw),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, wi: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_w, 1, D), lambda b, h, wi: (b, wi, h, 0)),
+            pl.BlockSpec((1, block_w, 1, D), lambda b, h, wi: (b, wi, h, 0)),
+            pl.BlockSpec((block_w,), lambda b, h, wi: (wi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, wi: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, valid)
+    return out.reshape(B, 1, H, D)

@@ -1,0 +1,83 @@
+"""Dispatch layer for compute hot-spots: Pallas TPU kernels with jnp fallback.
+
+On TPU the Pallas implementations run (``pl.pallas_call`` with VMEM
+BlockSpecs); on CPU (this container, incl. the 512-device dry-run) the
+pure-jnp references run — identical math, so tests and the dry-run roofline
+are faithful to the computation while kernels are validated separately in
+``interpret=True`` mode (tests/test_kernels_*.py).
+
+Set ``repro.kernels.ops.FORCE_MODE`` to 'pallas' | 'ref' | None (auto).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+FORCE_MODE: Optional[str] = None  # None -> auto by backend
+
+__all__ = ["flash_attention", "decode_attention", "rwkv6", "moe_gmm", "use_pallas"]
+
+
+def use_pallas() -> bool:
+    if FORCE_MODE == "pallas":
+        return True
+    if FORCE_MODE == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    if use_pallas():
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return _ref.chunked_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid: jax.Array
+) -> jax.Array:
+    if use_pallas():
+        from repro.kernels.decode_attention import decode_attention_pallas
+
+        return decode_attention_pallas(q, k_cache, v_cache, valid)
+    return _ref.decode_attention_ref(q, k_cache, v_cache, valid)
+
+
+def rwkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+    chunk: int = 64,
+):
+    if use_pallas():
+        from repro.kernels.rwkv6 import rwkv6_pallas
+
+        return rwkv6_pallas(r, k, v, w, u, state=state, chunk=chunk)
+    # jnp fallback: exact sequential recurrence, chunk-rematted (the TPU win
+    # of the Pallas kernel is keeping the [N,N] state in VMEM across the
+    # time loop).
+    return _ref.rwkv6_ref(r, k, v, w, u, state=state, chunk=chunk)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    if use_pallas():
+        from repro.kernels.moe_gmm import moe_gmm_pallas
+
+        return moe_gmm_pallas(x, w, group_sizes)
+    return _ref.moe_gmm_ref(x, w, group_sizes)

@@ -1,0 +1,171 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth).
+
+- ``naive_attention``   : O(S^2)-memory reference (small shapes, tests)
+- ``chunked_attention`` : memory-bounded prefill oracle (same math, chunked)
+- ``decode_attention_ref``: single-token attention against a KV cache
+- ``rwkv6_ref``         : step-by-step WKV recurrence (data-dependent decay)
+- ``moe_gmm_ref``       : grouped matmul over per-expert token groups
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "naive_attention",
+    "chunked_attention",
+    "decode_attention_ref",
+    "rwkv6_ref",
+    "moe_gmm_ref",
+]
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-materialization reference. q:[B,Sq,H,D], k/v:[B,Sk,KV,D]."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Memory-bounded attention: peak score buffer [B, H, chunk, Sk]."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+    orig_Sq = Sq
+    if Sq % chunk:
+        pad = chunk - Sq % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sq = q.shape[1]
+    n_chunks = Sq // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, D).swapaxes(0, 1)  # [n, B, chunk, H, D]
+    k_pos = jnp.arange(Sk)
+
+    # Remat each chunk: the backward recomputes the [B,H,chunk,Sk] score
+    # block instead of storing it (otherwise scan residuals reassemble the
+    # full S^2 attention matrix).
+    @jax.checkpoint
+    def one_chunk(args):
+        ci, qi = args  # qi: [B, chunk, H, D]
+        qg = qi.reshape(B, chunk, KV, g, D)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+        scores = scores * scale
+        q_pos = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, Sk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return out.reshape(B, chunk, H, v.shape[-1])
+
+    out = jax.lax.map(one_chunk, (jnp.arange(n_chunks), qc))
+    out = out.swapaxes(0, 1).reshape(B, Sq, H, v.shape[-1])
+    return out[:, :orig_Sq]
+
+
+def decode_attention_ref(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """q: [B,1,H,D]; caches: [B,W,KV,D]; valid: [W] bool. -> [B,1,H,D]."""
+    B, _, H, D = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, D)
+    scores = jnp.einsum("bhgd,bwhd->bhgw", qg, k_cache, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(D)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgw,bwhd->bhgd", p, v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+def rwkv6_ref(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+    chunk: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 WKV recurrence, step-by-step (the oracle for the chunked kernel).
+
+    r,k,v: [B,T,H,N]; w: [B,T,H,N] per-step decay in (0,1); u: [H,N] bonus.
+    state: [B,H,N,N] (key x value). Returns (out [B,T,H,N], final state).
+
+        o_t = r_t . (S_{t-1} + u * k_t^T v_t)
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    B, T, H, N = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B,H,N,N]
+        o = jnp.einsum("bhn,bhnm->bhm", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    tm = lambda x: x.swapaxes(0, 1).astype(jnp.float32)  # [T,B,H,N]
+    xs = (tm(r), tm(k), tm(v), tm(w))
+    if chunk:
+        from repro.models.scan_utils import chunked_scan
+
+        state, out = chunked_scan(step, state, xs, chunk=chunk)
+    else:
+        state, out = jax.lax.scan(step, state, xs)
+    return out.swapaxes(0, 1).astype(r.dtype), state
+
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul oracle: rows of x are grouped by expert (sorted order);
+    group_sizes: [E] rows per expert; w: [E, D, F].  Returns [T, F].
+
+    Equivalent dense form: each row multiplied by its group's weight.
+    """
+    T = x.shape[0]
+    E = w.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(T)
+    # expert id per row from group sizes
+    eid = jnp.sum(row[:, None] >= ends[None, :], axis=-1)
+    return jnp.einsum("td,tdf->tf", x, w[eid])

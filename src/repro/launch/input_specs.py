@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree the corresponding step
+function consumes; ``abstract_state(...)`` builds params / optimizer /cache
+shape trees via ``jax.eval_shape``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import Model
+
+__all__ = ["input_specs", "decode_window_for", "abstract_params", "abstract_cache"]
+
+
+def decode_window_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """KV window for decode shapes: full context at 32k; sliding window for
+    the 500k long-context shape (DESIGN.md §4 long_500k policy)."""
+    if shape.kind != "decode":
+        return 0
+    has_attn = any(
+        s.kind == "attn" for s in tuple(cfg.prologue) + tuple(cfg.block_pattern)
+    )
+    if not has_attn:
+        return 1  # attention-free: cache is recurrent state; window unused
+    if shape.seq_len > 32_768:
+        return cfg.decode_window
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "decode":
+        tok = (b, 1, cfg.num_codebooks) if cfg.modality == "audio" else (b, 1)
+        out["tokens"] = jax.ShapeDtypeStruct(tok, i32)
+        return out
+    if cfg.modality == "audio":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)
+    elif cfg.modality == "vlm":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.num_media_tokens), i32)
+        out["media_emb"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_media_tokens, cfg.d_model), jnp.float32
+        )
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.kind == "train":
+        lbl = out["tokens"].shape
+        out["labels"] = jax.ShapeDtypeStruct(lbl, i32)
+    return out
+
+
+def abstract_params(model: Model) -> Any:
+    return jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model: Model, batch: int, window: int) -> Any:
+    return jax.eval_shape(lambda: model.init_cache(batch, window))

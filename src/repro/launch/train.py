@@ -1,0 +1,108 @@
+"""LM training driver: the paper's dataflow model driving pjit SPMD steps.
+
+The training loop IS a dataflow plan (ppo_plan-shaped, minus the RL loss):
+
+    data actors -> ParallelRollouts(bulk_sync) -> ConcatBatches
+                -> TrainOneStep(SPMDLearnerWorker)  -> ReportMetrics
+
+Data pipeline shards are actors (one per host in production; N virtual
+actors here); the learner's ``learn_on_batch`` is the pjit-fused synchronous
+fragment (core/spmd.py).  On this CPU container use --smoke for a reduced
+config; the same flags drive the full configs on a real pod.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data-shards", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.checkpoint import save_pytree
+    from repro.configs import get_config, reduced_config
+    from repro.configs.base import InputShape
+    from repro.core.actor import ActorPool
+    from repro.core.iterators import ParallelIterator
+    from repro.core.metrics import get_metrics
+    from repro.core.operators import ConcatBatches, ReportMetrics, TrainOneStep
+    from repro.core.spmd import SPMDLearnerWorker, SPMDTrainContext
+    from repro.core.workers import WorkerSet
+    from repro.data import TokenPipeline
+    from repro.launch.mesh import make_local_mesh, make_production_mesh
+    from repro.optim import adamw, chain_clip_by_global_norm, linear_warmup_cosine
+
+    cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = InputShape("train", args.seq, args.batch, "train")
+    mesh = make_local_mesh() if jax.device_count() == 1 else make_production_mesh()
+
+    opt = chain_clip_by_global_norm(
+        adamw(linear_warmup_cosine(args.lr, 20, max(args.steps, 100)), weight_decay=0.1),
+        max_norm=1.0,
+    )
+    ctx = SPMDTrainContext(cfg, opt, mesh)
+    learner = SPMDLearnerWorker(ctx)
+
+    pipes = ActorPool.from_targets(
+        [
+            TokenPipeline(cfg, shape, seed=0, host_id=i, num_hosts=args.data_shards)
+            for i in range(args.data_shards)
+        ],
+        name="data",
+    )
+    workers = WorkerSet(learner, pipes)
+
+    # The dataflow: per-shard batches -> global batch -> one SPMD step.
+    def _merge(shards):
+        return {
+            k: np.concatenate([s[k] for s in shards], axis=0) for k in shards[0]
+        }
+
+    data_op = ParallelIterator.from_actors(
+        pipes, lambda p: p.sample(), name="data"
+    ).batch_across_shards().for_each(_merge)
+
+    class _DictTrain(TrainOneStep):
+        def __call__(self, batch):  # dict batches (no .count/.minibatches)
+            info = self.workers.local_worker().learn_on_batch(batch)
+            get_metrics().counters["num_steps_trained"] += batch["tokens"].shape[0]
+            return batch, info
+
+    train_op = data_op.for_each(_DictTrain(workers)).for_each(ReportMetrics())
+
+    t0 = time.time()
+    it = iter(train_op)
+    for step in range(args.steps):
+        res = next(it)
+        loss = res["info"].get("loss", float("nan"))
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            print(
+                f"step {step:4d} loss {loss:.4f} "
+                f"({(time.time() - t0) / (step + 1):.2f}s/step)",
+                flush=True,
+            )
+    if args.checkpoint:
+        save_pytree(args.checkpoint, learner.params)
+        print(f"saved checkpoint to {args.checkpoint}")
+    pipes.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,341 @@
+"""Transformer building blocks: norms, rope, MLPs, attention (GQA / MLA /
+qk-norm / QKV-bias / sliding-window) with training and decode (KV cache)
+paths.
+
+All functions are pure; params are plain dict pytrees.  Logical sharding
+annotations use ``repro.distributed.shard`` which is a no-op without an
+active mesh, so the same code runs single-device smoke tests and 512-chip
+dry-runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.distributed import shard
+
+PyTree = Any
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "dense_init",
+    "mlp_init",
+    "mlp_apply",
+    "attention_init",
+    "attention_apply",
+    "attention_decode",
+    "init_attn_cache",
+]
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [S] or [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    # Broadcast over heads: [..., S, 1, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- linear
+def dense_init(key: jax.Array, din: int, dout: int, dtype: Any, scale: float = 1.0) -> jax.Array:
+    std = scale / math.sqrt(din)
+    return (jax.random.normal(key, (din, dout), jnp.float32) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------- MLP
+def mlp_init(key: jax.Array, cfg: ModelConfig, d_ff: int) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(ks[0], d, d_ff, dtype),
+        "down": dense_init(ks[1], d_ff, d, dtype),
+    }
+    if cfg.activation == "silu":  # gated
+        p["gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x @ params["up"]
+    h = shard(h, "batch", None, "d_ff")
+    if cfg.activation == "silu":
+        h = jax.nn.silu(x @ params["gate"]) * h
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    out = h @ params["down"]
+    return shard(out, "batch", None, None)
+
+
+# --------------------------------------------------------- attention (GQA)
+def attention_init(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 5)
+        q_dim = m.nope_head_dim + m.rope_head_dim
+        p = {
+            "wq": dense_init(ks[0], d, cfg.num_heads * q_dim, dtype),
+            "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.rope_head_dim, dtype),
+            # up-projections from the latent: [lora, H, nope] and [lora, H, v]
+            "w_uk": (
+                jax.random.normal(ks[2], (m.kv_lora_rank, cfg.num_heads, m.nope_head_dim), jnp.float32)
+                / math.sqrt(m.kv_lora_rank)
+            ).astype(dtype),
+            "w_uv": (
+                jax.random.normal(ks[3], (m.kv_lora_rank, cfg.num_heads, m.v_head_dim), jnp.float32)
+                / math.sqrt(m.kv_lora_rank)
+            ).astype(dtype),
+            "wo": dense_init(ks[4], cfg.num_heads * m.v_head_dim, d, dtype),
+        }
+        return p
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(params: PyTree, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _mla_qkv_train(params: PyTree, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """MLA without absorption (training/prefill path)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = (x @ params["wq"]).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]  # [B, S, lora + rope_dim]
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    k_rope = rope(k_rope[..., None, :], positions, cfg.rope_theta)  # shared head
+    k_nope = jnp.einsum("bsc,chn->bshn", c, params["w_uk"])
+    v = jnp.einsum("bsc,chv->bshv", c, params["w_uv"])
+
+    # Pack rope parts into the head dim so standard attention applies:
+    # k_rope is shared across heads -> broadcast.
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.rope_head_dim))], axis=-1
+    )
+    q_full = shard(q_full, "batch", None, "heads", None)
+    k_full = shard(k_full, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    return q_full, k_full, v
+
+
+def attention_apply(
+    params: PyTree,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array] = None,
+    window: int = 0,
+) -> jax.Array:
+    """Training / prefill attention (no cache). x: [B, S, d]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    win = window or cfg.sliding_window
+    if cfg.mla is not None:
+        from repro.kernels.ref import chunked_attention
+
+        q, k, v = _mla_qkv_train(params, x, cfg, positions)
+        # MLA has distinct qk vs v head dims -> jnp chunked path (the Pallas
+        # kernel handles the standard equal-dims case).
+        out = chunked_attention(q, k, v, causal=True, window=win)
+        out = out.reshape(B, S, -1) @ params["wo"]
+        return shard(out, "batch", None, None)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    from repro.kernels import ops as kops
+
+    out = kops.flash_attention(q, k, v, causal=True, window=win)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return shard(out, "batch", None, None)
+
+
+# ------------------------------------------------------------ decode / cache
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[..., head_dim] -> (int8 values, per-row bf16 scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype: Any) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, window: int) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((batch, window, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, window, m.rope_head_dim), dtype),
+        }
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k_q": jnp.zeros((batch, window, cfg.num_kv_heads, cfg.head_dim), jnp.int8),
+            "k_s": jnp.zeros((batch, window, cfg.num_kv_heads, 1), jnp.bfloat16),
+            "v_q": jnp.zeros((batch, window, cfg.num_kv_heads, cfg.head_dim), jnp.int8),
+            "v_s": jnp.zeros((batch, window, cfg.num_kv_heads, 1), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, window, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, window, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def attention_decode(
+    params: PyTree,
+    x: jax.Array,
+    cache: PyTree,
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, PyTree]:
+    """Single-token decode with ring-buffer KV cache.
+
+    x: [B, 1, d]; pos: scalar int32 absolute position; cache window W.
+    Returns (out [B, 1, d], new_cache).
+    """
+    B = x.shape[0]
+    if cfg.mla is not None:
+        return _mla_decode(params, x, cache, pos, cfg)
+    quant = "k_q" in cache
+    W = (cache["k_q"] if quant else cache["k"]).shape[1]
+    hd = cfg.head_dim
+    positions = pos[None] if pos.ndim == 0 else pos
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, 1, cfg.num_heads, hd)
+    k = k.reshape(B, 1, cfg.num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    slot = (pos % W).astype(jnp.int32)
+    dus = lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(buf, upd, slot, axis=1)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k_q": shard(dus(cache["k_q"], kq), "batch", "window", "kv_heads", None),
+            "k_s": shard(dus(cache["k_s"], ks), "batch", "window", "kv_heads", None),
+            "v_q": shard(dus(cache["v_q"], vq), "batch", "window", "kv_heads", None),
+            "v_s": shard(dus(cache["v_s"], vs), "batch", "window", "kv_heads", None),
+        }
+        # Dequantize for the attention math (fused on TPU; the HBM-resident
+        # cache is int8 either way, which is the memory win).
+        ck = _dequantize_kv(new_cache["k_q"], new_cache["k_s"], k.dtype)
+        cv = _dequantize_kv(new_cache["v_q"], new_cache["v_s"], v.dtype)
+    else:
+        ck = shard(dus(cache["k"], k), "batch", "window", "kv_heads", None)
+        cv = shard(dus(cache["v"], v), "batch", "window", "kv_heads", None)
+        new_cache = {"k": ck, "v": cv}
+
+    from repro.kernels import ops as kops
+
+    valid = jnp.arange(W) <= jnp.minimum(pos, W - 1)  # ring-buffer occupancy
+    out = kops.decode_attention(q, ck, cv, valid)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return shard(out, "batch", None, None), new_cache
+
+
+def _mla_decode(params: PyTree, x: jax.Array, cache: PyTree, pos: jax.Array, cfg: ModelConfig):
+    """MLA decode with matrix absorption: attend in the latent space so the
+    cache is only [B, W, lora + rope] (the technique's memory win)."""
+    m = cfg.mla
+    B = x.shape[0]
+    W = cache["c"].shape[1]
+    H = cfg.num_heads
+    positions = pos[None] if pos.ndim == 0 else pos
+
+    q = (x @ params["wq"]).reshape(B, 1, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]
+    c_new, k_rope_new = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    k_rope_new = rope(k_rope_new[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    slot = (pos % W).astype(jnp.int32)
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new, slot, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_new, slot, axis=1)
+
+    # Absorb W_uk into the query: q_lat [B, H, lora].
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope[:, 0], params["w_uk"])
+    scores = jnp.einsum("bhc,bwc->bhw", q_lat, cc, preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bhr,bwr->bhw", q_rope[:, 0].astype(jnp.float32), cr.astype(jnp.float32))
+    scores *= 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    valid = jnp.arange(W) <= jnp.minimum(pos, W - 1)
+    scores = jnp.where(valid[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(cc.dtype)
+    ctx_lat = jnp.einsum("bhw,bwc->bhc", p, cc)
+    # Absorb W_uv on the way out.
+    v = jnp.einsum("bhc,chv->bhv", ctx_lat, params["w_uv"])
+    out = v.reshape(B, 1, H * m.v_head_dim) @ params["wo"]
+    return shard(out, "batch", None, None), {"c": cc, "k_rope": cr}

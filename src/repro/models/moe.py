@@ -1,0 +1,247 @@
+"""Mixture-of-Experts layer: top-k routing with per-row sort-based dispatch.
+
+TPU-native adaptation (DESIGN.md §5): instead of the one-hot dispatch einsum
+(whose FLOPs scale with num_experts x capacity and dwarf the expert compute),
+each batch row sorts its tokens by expert id and scatters them into a dense
+[B, E, C, d] buffer (gather/scatter = bytes, not FLOPs).  Keeping the batch
+dim leading means routing/sort/scatter are *local to each data shard*; the
+only cross-device movement is resharding the dispatch buffer from
+batch-sharded to (batch, experts)-sharded — the expert-parallel all-to-all —
+which XLA SPMD emits from the sharding constraints.  Expert FFN FLOPs are
+~= tokens * top_k * capacity_factor * per-expert cost, i.e. the real MoE
+compute.  Tokens over per-row capacity are dropped (capacity-factor
+semantics); shared experts (DeepSeek) run densely.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.distributed import shard
+from repro.models.layers import dense_init
+
+PyTree = Any
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+# --------------------------------------------------------------------------
+# Permutation gathers with gather-only VJPs (§Perf iteration B2).
+#
+# jax's autodiff turns take_along_axis backward into scatter-add, which XLA
+# SPMD lowers as partial-scatter + f32 all-reduce over the model axis
+# (~80 GB/device/step on deepseek).  Our routing indices are bijections on
+# kept slots, so the cotangent is itself a gather — expressed explicitly via
+# custom_vjp below, the whole MoE fwd+bwd is scatter-free.
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def _permute_rows(x, idx, inv_idx, mask_fwd, mask_bwd):
+    """y[b,i] = x[b, idx[b,i]] * mask_fwd[b,i]; idx a (masked) bijection."""
+    return jnp.take_along_axis(x, idx[..., None], axis=1) * mask_fwd[..., None].astype(x.dtype)
+
+
+def _permute_rows_fwd(x, idx, inv_idx, mask_fwd, mask_bwd):
+    return _permute_rows(x, idx, inv_idx, mask_fwd, mask_bwd), (
+        idx, inv_idx, mask_fwd, mask_bwd, x.shape,
+    )
+
+
+def _permute_rows_bwd(res, dy):
+    idx, inv_idx, mask_fwd, mask_bwd, xshape = res
+    dx = jnp.take_along_axis(
+        dy * mask_fwd[..., None].astype(dy.dtype), inv_idx[..., None], axis=1
+    ) * mask_bwd[..., None].astype(dy.dtype)
+    return dx, None, None, None, None
+
+
+_permute_rows.defvjp(_permute_rows_fwd, _permute_rows_bwd)
+
+
+@jax.custom_vjp
+def _replicate_rows(x, st, inv, k):
+    """y[b,i] = x[b, st[b,i]] where each source row appears exactly k times;
+    backward sums the k cotangent copies via gather (no scatter)."""
+    return jnp.take_along_axis(x, st[..., None], axis=1)
+
+
+def _replicate_rows_fwd(x, st, inv, k):
+    return _replicate_rows(x, st, inv, k), (st, inv, k, x.shape)
+
+
+def _replicate_rows_bwd(res, dy):
+    st, inv, k, xshape = res
+    B, S, d = xshape
+    picked = jnp.take_along_axis(dy, inv[..., None], axis=1)  # [B, S*k, d]
+    dx = jnp.sum(picked.reshape(B, S, k, d), axis=2)
+    return dx, None, None, None
+
+
+_replicate_rows.defvjp(_replicate_rows_fwd, _replicate_rows_bwd)
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    assert cfg.moe is not None
+    e = cfg.moe
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+
+    def experts_mat(k, din, dout):
+        return (
+            jax.random.normal(k, (e.num_experts, din, dout), jnp.float32) / math.sqrt(din)
+        ).astype(dtype)
+
+    p: Dict[str, Any] = {
+        "router": dense_init(ks[0], d, e.num_experts, dtype),
+        "up": experts_mat(ks[1], d, e.d_ff),
+        "down": experts_mat(ks[2], e.d_ff, d),
+    }
+    gated = cfg.activation == "silu"
+    if gated:
+        p["gate"] = experts_mat(ks[3], d, e.d_ff)
+    if e.num_shared:
+        shared_ff = e.d_ff * e.num_shared
+        p["shared_up"] = dense_init(ks[4], d, shared_ff, dtype)
+        p["shared_down"] = dense_init(ks[5], shared_ff, d, dtype)
+        if gated:
+            p["shared_gate"] = dense_init(ks[6], d, shared_ff, dtype)
+    return p
+
+
+def _expert_ffn(p: PyTree, xe: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """xe: [B, E, C, d] -> [B, E, C, d] via per-expert (gated) FFN."""
+    h = jnp.einsum("becd,edf->becf", xe, p["up"])
+    h = shard(h, "batch", "experts", None, None)
+    if cfg.activation == "silu":
+        g = jnp.einsum("becd,edf->becf", xe, p["gate"])
+        h = jax.nn.silu(g) * h
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("becf,efd->becd", h, p["down"])
+    return shard(out, "batch", "experts", None, None)
+
+
+def moe_apply(
+    params: PyTree, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], router aux loss scalar)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    k = e.top_k
+    E = e.num_experts
+    Sk = S * k
+
+    # ------------------------------------------------------------- routing
+    logits = (x @ params["router"]).astype(jnp.float32)  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [B, S, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Router math stays f32; combine WEIGHTS drop to model dtype here so the
+    # dispatch/combine cotangent chain stays bf16 (f32 cotangents double the
+    # expert-parallel gather bytes; §Perf iteration B3).
+    top_p = top_p.astype(x.dtype)
+
+    # Load-balance auxiliary loss (Switch-style).
+    density = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = e.router_aux_coef * E * jnp.mean(density * jnp.mean(probs, axis=(0, 1)))
+
+    # --------------------------------------- per-row sort-based dispatch
+    # All index math has a leading batch dim, so it stays local to each data
+    # shard; capacity is per row (what per-device capacity means in practice).
+    C = max(1, int(math.ceil(e.capacity_factor * S * k / E)))
+    flat_e = top_e.reshape(B, Sk)
+    flat_t = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(Sk)
+    flat_w = top_p.reshape(B, Sk)
+
+    # Every dispatch intermediate is explicitly batch-sharded: GSPMD's
+    # gather/scatter propagation otherwise falls back to replication, which
+    # materializes global-batch buffers on every device.
+    order = jnp.argsort(flat_e, axis=-1)  # [B, Sk] stable per row
+    se = shard(jnp.take_along_axis(flat_e, order, axis=-1), "batch", None)
+    st = shard(flat_t[order], "batch", None)  # token index per sorted slot
+    sw = shard(jnp.take_along_axis(flat_w, order, axis=-1), "batch", None)
+    # rank within expert, per row
+    counts = jnp.sum(
+        jax.nn.one_hot(se, E, dtype=jnp.int32), axis=1
+    )  # [B, E]
+    starts = jnp.cumsum(counts, axis=-1) - counts  # [B, E]
+    pos = jnp.arange(Sk)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < C
+    slot = shard(se * C + jnp.minimum(pos, C - 1), "batch", None)  # drops -> C-1
+
+    bidx = jnp.arange(B)[:, None]
+    if e.dispatch == "gather":
+        # Gather-based dispatch: after the per-row sort, expert e's kept
+        # tokens occupy sorted positions starts[e] .. starts[e]+C-1, so the
+        # [B, E*C] buffer is a pure gather — no scatter in the forward pass
+        # (XLA lowers batched scatters as partial-scatter + f32 all-reduce
+        # over the model axis, ~300 GB/device/step on deepseek; §Perf B1).
+        cpos = jnp.arange(E * C) % C                     # capacity slot
+        eid = jnp.arange(E * C) // C
+        src_idx = starts[:, eid] + cpos[None, :]         # slot -> sorted idx
+        slot_filled = cpos[None, :] < jnp.take_along_axis(
+            counts, eid[None, :].repeat(B, 0), axis=-1
+        ).clip(0, C)
+        src_idx = jnp.minimum(src_idx, Sk - 1)
+        inv = jnp.argsort(order, axis=-1)                # flat pos -> sorted idx
+
+        # x -> k replicated rows in sorted order (bwd: gather + sum over k).
+        gathered = _replicate_rows(x, st, inv, k)        # [B, Sk, d]
+        gathered = shard(gathered, "batch", None, None)
+        # sorted rows -> dispatch slots (bwd: gather by the slot map).
+        xe = _permute_rows(gathered, src_idx, slot, slot_filled, keep)
+        xe = xe.reshape(B, E, C, d)
+        xe = shard(xe, "batch", "experts", None, None)  # expert-parallel a2a
+
+        ye = _expert_ffn(params, xe, cfg).reshape(B, E * C, d)
+        ye = shard(ye, "batch", None, None)
+
+        # Slots -> token positions (bwd: gather by the slot's unique reader).
+        tok_slot = jnp.take_along_axis(slot, inv, axis=-1)
+        inv_p = jnp.take_along_axis(order, src_idx, axis=-1)  # slot -> flat pos
+        picked_raw = _permute_rows(
+            ye, tok_slot, inv_p, jnp.ones_like(tok_slot, jnp.bool_), slot_filled
+        )
+        tok_w = jnp.take_along_axis(sw * keep.astype(sw.dtype), inv, axis=-1)
+        picked = picked_raw * tok_w[..., None].astype(x.dtype)
+        out = jnp.sum(picked.reshape(B, S, k, d), axis=2)
+        out = shard(out, "batch", None, None)
+    else:
+        gathered = jnp.take_along_axis(x, st[..., None], axis=1)  # [B, Sk, d]
+        gathered = gathered * keep[..., None].astype(x.dtype)  # dropped -> 0
+        gathered = shard(gathered, "batch", None, None)
+        xe = jnp.zeros((B, E * C, d), x.dtype)
+        xe = shard(xe.at[bidx, slot].add(gathered), "batch", None, None)
+        xe = xe.reshape(B, E, C, d)
+        xe = shard(xe, "batch", "experts", None, None)  # expert-parallel a2a
+
+        ye = _expert_ffn(params, xe, cfg).reshape(B, E * C, d)
+        ye = shard(ye, "batch", None, None)
+
+        back = ye[bidx, slot] * (sw * keep.astype(sw.dtype))[..., None].astype(x.dtype)
+        back = shard(back, "batch", None, None)
+        out = jnp.zeros((B, S, d), x.dtype).at[bidx, st].add(back)
+        out = shard(out, "batch", None, None)
+
+    # ------------------------------------------------------ shared experts
+    if e.num_shared:
+        h = x @ params["shared_up"]
+        h = shard(h, "batch", None, "d_ff")
+        if cfg.activation == "silu":
+            h = jax.nn.silu(x @ params["shared_gate"]) * h
+        elif cfg.activation == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+        out = out + h @ params["shared_down"]
+
+    return out, aux

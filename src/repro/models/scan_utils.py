@@ -1,0 +1,47 @@
+"""Chunked, remat-friendly time scans.
+
+A plain ``lax.scan`` over T steps saves its carry (and per-step saveable
+intermediates) for every step on the backward pass — for SSM layers that is
+O(T x state) residual memory.  ``chunked_scan`` nests two scans: the outer
+saves one carry per chunk, the inner is wrapped in ``jax.checkpoint`` so its
+steps are recomputed during backward.  Residual memory drops by ~chunk x at
+the cost of one extra forward over the sequence (standard remat trade).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["chunked_scan"]
+
+
+def chunked_scan(
+    step: Callable[[PyTree, PyTree], Tuple[PyTree, PyTree]],
+    carry: PyTree,
+    xs: PyTree,
+    chunk: int = 128,
+    remat: bool = True,
+) -> Tuple[PyTree, PyTree]:
+    leaves = jax.tree_util.tree_leaves(xs)
+    T = leaves[0].shape[0]
+    if chunk <= 1 or T % chunk or T <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = T // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs
+    )
+
+    def inner(c: PyTree, xc: PyTree):
+        return jax.lax.scan(step, c, xc)
+
+    if remat:
+        inner = jax.checkpoint(inner)
+
+    carry, ys_c = jax.lax.scan(inner, carry, xs_c)
+    ys = jax.tree_util.tree_map(lambda a: a.reshape((T,) + a.shape[2:]), ys_c)
+    return carry, ys

@@ -1,0 +1,231 @@
+"""State-space / recurrent layers: RWKV6 "Finch" time-mix and Mamba.
+
+Both expose a sequence path (training/prefill) and an O(1)-state decode step;
+the decode state is carried exactly like env state in a rollout actor
+(DESIGN.md §4: model-state-as-actor-state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import shard
+from repro.models.layers import dense_init, rms_norm
+
+PyTree = Any
+
+__all__ = [
+    "rwkv6_init",
+    "rwkv6_apply",
+    "rwkv6_decode",
+    "init_rwkv6_state",
+    "mamba_init",
+    "mamba_apply",
+    "mamba_decode",
+    "init_mamba_state",
+]
+
+
+# =========================================================== RWKV6 (Finch)
+def rwkv6_init(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    s = cfg.ssm
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    H = d // s.head_dim
+    ks = jax.random.split(key, 9)
+    p = {
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        # Data-dependent decay (Finch): w_t = exp(-exp(w0 + tanh(x w1) w2))
+        "decay_w1": dense_init(ks[5], d, 64, dtype),
+        "decay_w2": dense_init(ks[6], 64, d, dtype, scale=0.1),
+        "decay_w0": jnp.full((d,), -2.0, dtype),
+        "bonus_u": (jax.random.normal(ks[7], (H, s.head_dim), jnp.float32) * 0.1).astype(dtype),
+        # token-shift mix coefficients per stream
+        "mix": (jax.random.uniform(ks[8], (5, d), jnp.float32) * 0.5 + 0.25).astype(dtype),
+        "ln_out": jnp.ones((d,), dtype),
+    }
+    return p
+
+
+def _rwkv6_streams(params: PyTree, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """Token-shift + projections. x: [B,T,d]; x_prev: [B,T,d] (shifted)."""
+    s = cfg.ssm
+    H = cfg.d_model // s.head_dim
+    B, T, d = x.shape
+
+    def mixed(i: int) -> jax.Array:
+        mu = params["mix"][i]
+        return x * mu + x_prev * (1 - mu)
+
+    r = mixed(0) @ params["wr"]
+    k = mixed(1) @ params["wk"]
+    v = mixed(2) @ params["wv"]
+    g = jax.nn.silu(mixed(3) @ params["wg"])
+    dd = jnp.tanh(mixed(4) @ params["decay_w1"]) @ params["decay_w2"]
+    log_w = -jnp.exp(
+        jnp.clip((params["decay_w0"] + dd).astype(jnp.float32), -8.0, 2.0)
+    )  # <= 0
+    w = jnp.exp(log_w)  # decay in (0, 1]
+    hs = lambda z: z.reshape(B, T, H, s.head_dim)
+    return hs(r), hs(k), hs(v), g, hs(w.astype(x.dtype))
+
+
+def rwkv6_apply(
+    params: PyTree, x: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Sequence path. x: [B, T, d] -> [B, T, d]."""
+    from repro.kernels import ops as kops
+
+    B, T, d = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv6_streams(params, x, x_prev, cfg)
+    out, _ = kops.rwkv6(r, k, v, w, params["bonus_u"].astype(jnp.float32), chunk=cfg.ssm.chunk)
+    out = out.reshape(B, T, d)
+    out = rms_norm(out, params["ln_out"], cfg.norm_eps) * g
+    out = out @ params["wo"]
+    return shard(out, "batch", None, None)
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> PyTree:
+    s = cfg.ssm
+    H = cfg.d_model // s.head_dim
+    return {
+        "wkv": jnp.zeros((batch, H, s.head_dim, s.head_dim), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+def rwkv6_decode(
+    params: PyTree, x: jax.Array, state: PyTree, cfg: ModelConfig
+) -> Tuple[jax.Array, PyTree]:
+    """One-token decode. x: [B,1,d]."""
+    B = x.shape[0]
+    d = cfg.d_model
+    s = cfg.ssm
+    H = d // s.head_dim
+    x_prev = state["x_prev"][:, None, :]
+    r, k, v, g, w = _rwkv6_streams(params, x, x_prev, cfg)
+    r1, k1, v1, w1 = (z[:, 0].astype(jnp.float32) for z in (r, k, v, w))
+    u = params["bonus_u"].astype(jnp.float32)
+    S = state["wkv"]
+    kv = k1[..., :, None] * v1[..., None, :]
+    o = jnp.einsum("bhn,bhnm->bhm", r1, S + u[None, :, :, None] * kv)
+    S = w1[..., :, None] * S + kv
+    out = o.reshape(B, 1, d).astype(x.dtype)
+    out = rms_norm(out, params["ln_out"], cfg.norm_eps) * g
+    out = out @ params["wo"]
+    return shard(out, "batch", None, None), {"wkv": S, "x_prev": x[:, 0]}
+
+
+# ================================================================== Mamba
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time as stack+einsum.
+
+    Expressed as dot_general (not slice+mul+sum) so XLA does not pattern-match
+    a grouped convolution — GSPMD's conv partitioning replicates the batch
+    dim for this shape, blowing device memory.
+    xc: [B, T, d_in]; w: [K, d_in]; b: [d_in].
+    """
+    K = w.shape[0]
+    T = xc.shape[1]
+    pad = jnp.pad(xc, ((0, 0), (K - 1, 0), (0, 0)))
+    stacked = jnp.stack([pad[:, i : i + T] for i in range(K)], axis=-1)  # [B,T,d,K]
+    return jnp.einsum("btdk,kd->btd", stacked, w) + b
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    p = {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in), jnp.float32) / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, 2 * s.d_state + 1, dtype),  # -> B, C, dt
+        "dt_bias": jnp.full((d_in,), -4.0, dtype),  # softplus(-4) ~ small dt
+        "dt_proj": dense_init(ks[3], 1, d_in, dtype),
+        "A_log": jnp.log(a).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, d, dtype),
+    }
+    return p
+
+
+def _mamba_scan(params: PyTree, xc: jax.Array, h0: jax.Array, s) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan. xc: [B,T,d_in] (post conv+silu); h0: [B,d_in,N]."""
+    A = -jnp.exp(params["A_log"])  # [d_in, N]
+    proj = xc @ params["x_proj"]  # [B,T,2N+1]
+    Bp, Cp, dt_in = proj[..., : s.d_state], proj[..., s.d_state : 2 * s.d_state], proj[..., -1:]
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] + params["dt_bias"])  # [B,T,d_in]
+
+    def step(h, inp):
+        # xs stay in model dtype (halves residual memory); math in fp32.
+        x_t, b_t, c_t, dt_t = (z.astype(jnp.float32) for z in inp)
+        dA = jnp.exp(dt_t[..., None] * A[None])  # [B,d_in,N]
+        dBx = dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y.astype(inp[0].dtype)
+
+    from repro.models.scan_utils import chunked_scan
+
+    tm = lambda z: z.swapaxes(0, 1)
+    h, ys = chunked_scan(step, h0, (tm(xc), tm(Bp), tm(Cp), tm(dt)), chunk=128)
+    y = ys.swapaxes(0, 1).astype(jnp.float32) + xc.astype(jnp.float32) * params["D"]
+    return y.astype(xc.dtype), h
+
+
+def mamba_apply(params: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequence path. x: [B,T,d]."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_in = s.expand * d
+    xz = x @ params["in_proj"]
+    xc, z = xz[..., :d_in], xz[..., d_in:]
+    xc = shard(xc, "batch", None, "d_ff")
+    xc = jax.nn.silu(_causal_conv(xc, params["conv_w"], params["conv_b"]))
+    h0 = jnp.zeros((B, d_in, s.d_state), jnp.float32)
+    y, _ = _mamba_scan(params, xc, h0, s)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return shard(out, "batch", None, None)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> PyTree:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_in, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_in), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba_decode(
+    params: PyTree, x: jax.Array, state: PyTree, cfg: ModelConfig
+) -> Tuple[jax.Array, PyTree]:
+    """One-token decode. x: [B,1,d]."""
+    s = cfg.ssm
+    B = x.shape[0]
+    d_in = s.expand * cfg.d_model
+    xz = x @ params["in_proj"]
+    xc, z = xz[..., :d_in], xz[..., d_in:]
+    window = jnp.concatenate([state["conv"], xc], axis=1)  # [B, d_conv, d_in]
+    conv = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    xc1 = jax.nn.silu(conv)[:, None, :]  # [B,1,d_in]
+    y, h = _mamba_scan(params, xc1, state["h"], s)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return shard(out, "batch", None, None), {"h": h, "conv": window[:, 1:]}

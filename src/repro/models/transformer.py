@@ -1,0 +1,458 @@
+"""Model assembly: embeddings -> prologue -> scanned blocks -> head.
+
+The layer stack compiles as ``lax.scan`` over blocks (HLO size independent of
+depth; per-block ``jax.checkpoint`` for training remat).  Supports:
+
+  * train/prefill forward (prefill also returns the KV/state cache)
+  * single-token decode against a ring-buffer cache (``serve_step``)
+  * text / VLM (prepended media embeddings) / audio (multi-codebook) inputs
+
+Step builders (``make_train_step`` / ``make_prefill_step`` /
+``make_decode_step``) produce the pure functions that plans wrap via
+``TrainOneStep`` and that the dry-run lowers under the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed import shard
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    attention_apply,
+    attention_decode,
+    attention_init,
+    init_attn_cache,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+from repro.models.moe import moe_apply, moe_init
+
+PyTree = Any
+
+__all__ = ["Model", "make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.block_pattern
+        self.num_blocks = cfg.num_blocks
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, key: jax.Array, spec: LayerSpec) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k1, k2 = jax.random.split(key)
+        p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+        if spec.kind == "attn":
+            p["attn"] = attention_init(k1, cfg)
+        elif spec.kind == "rwkv6":
+            p["attn"] = ssm_mod.rwkv6_init(k1, cfg)
+        elif spec.kind == "mamba":
+            p["attn"] = ssm_mod.mamba_init(k1, cfg)
+        else:
+            raise ValueError(spec.kind)
+        if spec.mlp != "none":
+            p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+            p["mlp"] = moe_init(k2, cfg) if spec.mlp == "moe" else mlp_init(k2, cfg, cfg.d_ff)
+        return p
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, 4 + len(cfg.prologue))
+        scale = 0.02
+        if cfg.modality == "audio":
+            embed = (
+                jax.random.normal(
+                    keys[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model), jnp.float32
+                )
+                * scale
+            ).astype(dtype)
+            head = (
+                jax.random.normal(
+                    keys[1], (cfg.d_model, cfg.num_codebooks * cfg.vocab_size), jnp.float32
+                )
+                * scale
+            ).astype(dtype)
+        else:
+            embed = (
+                jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * scale
+            ).astype(dtype)
+            head = (
+                jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32) * scale
+            ).astype(dtype)
+        params: Dict[str, Any] = {
+            "embed": embed,
+            "lm_head": head,
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        for i, spec in enumerate(cfg.prologue):
+            params[f"prologue_{i}"] = self._init_layer(keys[4 + i], spec)
+
+        def one_block(k: jax.Array) -> PyTree:
+            pk = jax.random.split(k, len(self.pattern))
+            return {str(i): self._init_layer(pk[i], s) for i, s in enumerate(self.pattern)}
+
+        block_keys = jax.random.split(keys[2], self.num_blocks)
+        params["blocks"] = jax.vmap(one_block)(block_keys)
+        return params
+
+    # ------------------------------------------------------------ embedding
+    def _embed(self, params: PyTree, tokens: jax.Array, media_emb: Optional[jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.modality == "audio":
+            # tokens: [B, S, K] -> sum of per-codebook embeddings.
+            parts = [
+                jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                for k in range(cfg.num_codebooks)
+            ]
+            x = sum(parts)
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.modality == "vlm" and media_emb is not None:
+            x = jnp.concatenate([media_emb.astype(x.dtype), x], axis=1)
+        return shard(x, "batch", None, None)
+
+    def _head(self, params: PyTree, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        logits = x @ params["lm_head"]
+        if cfg.modality == "audio":
+            logits = logits.reshape(x.shape[:-1] + (cfg.num_codebooks, cfg.vocab_size))
+            return shard(logits, "batch", None, None, "vocab")
+        return shard(logits, "batch", None, "vocab")
+
+    # --------------------------------------------------------------- forward
+    def _apply_layer(
+        self, lp: PyTree, x: jax.Array, spec: LayerSpec, window: int
+    ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if spec.kind == "attn":
+            h = attention_apply(lp["attn"], h, cfg, window=window)
+        elif spec.kind == "rwkv6":
+            h = ssm_mod.rwkv6_apply(lp["attn"], h, cfg)
+        else:
+            h = ssm_mod.mamba_apply(lp["attn"], h, cfg)
+        x = x + h
+        aux = jnp.zeros((), jnp.float32)
+        if spec.mlp != "none":
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            if spec.mlp == "moe":
+                h2, aux = moe_apply(lp["mlp"], h2, cfg)
+            else:
+                h2 = mlp_apply(lp["mlp"], h2, cfg)
+            x = x + h2
+        return x, aux
+
+    def forward(
+        self,
+        params: PyTree,
+        tokens: jax.Array,
+        media_emb: Optional[jax.Array] = None,
+        window: int = 0,
+        remat: bool = False,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (hidden [B, S, d], moe aux loss)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, media_emb)
+        aux = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.prologue):
+            x, a = self._apply_layer(params[f"prologue_{i}"], x, spec, window)
+            aux = aux + a
+
+        # Per-layer remat nested inside per-block remat: backward recomputes
+        # one layer at a time, so peak residuals ~ a single layer's
+        # intermediates even for multi-layer patterns (Jamba's 8-layer block).
+        layer_fns = []
+        for i, spec in enumerate(self.pattern):
+            fn = lambda lp, x, _spec=spec: self._apply_layer(lp, x, _spec, window)
+            layer_fns.append(jax.checkpoint(fn) if remat else fn)
+
+        def block_fn(carry, bp):
+            x, aux = carry
+            for i in range(len(self.pattern)):
+                x, a = layer_fns[i](bp[str(i)], x)
+                aux = aux + a
+            if cfg.shard_residuals:
+                # Residual/remat-carry activations sharded over 'model' so the
+                # saved per-block activation is 1/model_axis per device.
+                x = shard(x, "batch", None, "d_ff")
+            return (x, aux), None
+
+        if remat:
+            block_fn = jax.checkpoint(block_fn)
+        (x, aux), _ = jax.lax.scan(block_fn, (x, aux), params["blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux
+
+    # ------------------------------------------------------------------ loss
+    def loss(
+        self,
+        params: PyTree,
+        tokens: jax.Array,
+        labels: jax.Array,
+        media_emb: Optional[jax.Array] = None,
+        remat: bool = True,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Causal LM loss. labels < 0 are masked."""
+        cfg = self.cfg
+        x, aux = self.forward(params, tokens, media_emb, remat=remat)
+        if cfg.modality == "vlm" and media_emb is not None:
+            x = x[:, media_emb.shape[1] :]  # media positions carry no labels
+        logits = self._head(params, x).astype(jnp.float32)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + aux, {"nll": loss, "aux": aux}
+
+    # ------------------------------------------------------------- caching
+    def _init_layer_cache(self, spec: LayerSpec, batch: int, window: int) -> PyTree:
+        cfg = self.cfg
+        if spec.kind == "attn":
+            return init_attn_cache(cfg, batch, window)
+        if spec.kind == "rwkv6":
+            return ssm_mod.init_rwkv6_state(cfg, batch)
+        return ssm_mod.init_mamba_state(cfg, batch)
+
+    def init_cache(self, batch: int, window: int) -> PyTree:
+        cache: Dict[str, Any] = {
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        for i, spec in enumerate(self.cfg.prologue):
+            cache[f"prologue_{i}"] = self._init_layer_cache(spec, batch, window)
+
+        def stack(leaf_fn):
+            return jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l, (self.num_blocks,) + l.shape), leaf_fn
+            )
+
+        cache["blocks"] = {
+            str(i): stack(self._init_layer_cache(spec, batch, window))
+            for i, spec in enumerate(self.pattern)
+        }
+        return cache
+
+    def _decode_layer(
+        self, lp: PyTree, x: jax.Array, spec: LayerSpec, lcache: PyTree, pos: jax.Array
+    ) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if spec.kind == "attn":
+            h, lcache = attention_decode(lp["attn"], h, lcache, pos, cfg)
+        elif spec.kind == "rwkv6":
+            h, lcache = ssm_mod.rwkv6_decode(lp["attn"], h, lcache, cfg)
+        else:
+            h, lcache = ssm_mod.mamba_decode(lp["attn"], h, lcache, cfg)
+        x = x + h
+        if spec.mlp != "none":
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            if spec.mlp == "moe":
+                h2, _ = moe_apply(lp["mlp"], h2, cfg)
+            else:
+                h2 = mlp_apply(lp["mlp"], h2, cfg)
+            x = x + h2
+        return x, lcache
+
+    def decode_step(
+        self, params: PyTree, cache: PyTree, tokens: jax.Array
+    ) -> Tuple[jax.Array, PyTree]:
+        """One token for every sequence. tokens: [B,1] (audio [B,1,K])."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = self._embed(params, tokens, None)
+        new_cache: Dict[str, Any] = {"pos": pos + 1}
+        for i, spec in enumerate(cfg.prologue):
+            x, c = self._decode_layer(params[f"prologue_{i}"], x, spec, cache[f"prologue_{i}"], pos)
+            new_cache[f"prologue_{i}"] = c
+
+        def block_fn(x, xs):
+            bp, bc = xs
+            for i, spec in enumerate(self.pattern):
+                x, c = self._decode_layer(bp[str(i)], x, spec, bc[str(i)], pos)
+                bc = dict(bc, **{str(i): c})
+            return x, bc
+
+        x, new_blocks = jax.lax.scan(block_fn, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)
+        return logits, new_cache
+
+    # ------------------------------------------------------------- prefill
+    def prefill(
+        self,
+        params: PyTree,
+        tokens: jax.Array,
+        media_emb: Optional[jax.Array] = None,
+        window: int = 0,
+    ) -> Tuple[jax.Array, PyTree]:
+        """Forward over a prompt, returning (last-token logits, filled cache).
+
+        The cache window equals the prompt length (or ``window`` if set).
+        Implemented by running the sequence path and reconstructing per-layer
+        cache state; attention caches are the (rope'd) K/V of the prompt.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape[0], tokens.shape[1]
+        if cfg.modality == "vlm" and media_emb is not None:
+            S = S + media_emb.shape[1]
+        W = window or S
+        # Run the standard forward; capture caches layer by layer.
+        x = self._embed(params, tokens, media_emb)
+        positions = jnp.arange(S)
+        cache: Dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+
+        def layer_with_cache(lp, x, spec):
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if spec.kind == "attn":
+                c = _prefill_attn_cache(lp["attn"], h, cfg, W, positions)
+                h = attention_apply(lp["attn"], h, cfg, window=window)
+            elif spec.kind == "rwkv6":
+                h, c = _prefill_rwkv6(lp["attn"], h, cfg)
+            else:
+                h, c = _prefill_mamba(lp["attn"], h, cfg)
+            x = x + h
+            if spec.mlp != "none":
+                h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+                if spec.mlp == "moe":
+                    h2, _ = moe_apply(lp["mlp"], h2, cfg)
+                else:
+                    h2 = mlp_apply(lp["mlp"], h2, cfg)
+                x = x + h2
+            return x, c
+
+        for i, spec in enumerate(cfg.prologue):
+            x, c = layer_with_cache(params[f"prologue_{i}"], x, spec)
+            cache[f"prologue_{i}"] = c
+
+        def block_fn(x, bp):
+            cs = {}
+            for i, spec in enumerate(self.pattern):
+                x, c = layer_with_cache(bp[str(i)], x, spec)
+                cs[str(i)] = c
+            return x, cs
+
+        x, blocks_cache = jax.lax.scan(block_fn, x, params["blocks"])
+        cache["blocks"] = blocks_cache
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x[:, -1:])
+        return logits, cache
+
+
+# ------------------------------------------------- prefill cache builders
+def _prefill_attn_cache(ap: PyTree, h: jax.Array, cfg: ModelConfig, W: int, positions: jax.Array):
+    from repro.models.layers import _mla_qkv_train, _project_qkv
+
+    B, S, _ = h.shape
+    if cfg.mla is not None:
+        m = cfg.mla
+        ckv = h @ ap["w_dkv"]
+        c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+        from repro.models.layers import rope as _rope
+
+        k_rope = _rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+        c = _fit_window(c, W)
+        k_rope = _fit_window(k_rope, W)
+        return {"c": c, "k_rope": k_rope}
+    q, k, v = _project_qkv(ap, h, cfg, positions)
+    if cfg.kv_cache_dtype == "int8":
+        from repro.models.layers import _quantize_kv
+
+        kq, ks = _quantize_kv(_fit_window(k, W))
+        vq, vs = _quantize_kv(_fit_window(v, W))
+        return {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs}
+    return {"k": _fit_window(k, W), "v": _fit_window(v, W)}
+
+
+def _fit_window(x: jax.Array, W: int) -> jax.Array:
+    """Fit [B, S, ...] sequence into a [B, W, ...] ring buffer (keep last W)."""
+    S = x.shape[1]
+    if S == W:
+        return x
+    if S > W:
+        # Last W entries, rotated so ring slot (pos % W) lines up.
+        tail = x[:, S - W :]
+        shift = (S - W) % W
+        return jnp.roll(tail, shift=shift, axis=1)
+    pad = [(0, 0), (0, W - S)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad)
+
+
+def _prefill_rwkv6(ap: PyTree, h: jax.Array, cfg: ModelConfig):
+    from repro.kernels import ops as kops
+    from repro.models.ssm import _rwkv6_streams
+
+    B, T, d = h.shape
+    x_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv6_streams(ap, h, x_prev, cfg)
+    out, state = kops.rwkv6(r, k, v, w, ap["bonus_u"].astype(jnp.float32), chunk=cfg.ssm.chunk)
+    out = out.reshape(B, T, d)
+    out = rms_norm(out, ap["ln_out"], cfg.norm_eps) * g
+    out = out @ ap["wo"]
+    return out, {"wkv": state, "x_prev": h[:, -1]}
+
+
+def _prefill_mamba(ap: PyTree, h: jax.Array, cfg: ModelConfig):
+    from repro.models.ssm import _mamba_scan
+
+    from repro.models.ssm import _causal_conv
+
+    s = cfg.ssm
+    B, T, d = h.shape
+    d_in = s.expand * d
+    xz = h @ ap["in_proj"]
+    xc, z = xz[..., :d_in], xz[..., d_in:]
+    xc = shard(xc, "batch", None, "d_ff")
+    xc_act = jax.nn.silu(_causal_conv(xc, ap["conv_w"], ap["conv_b"]))
+    h0 = jnp.zeros((B, d_in, s.d_state), jnp.float32)
+    y, hN = _mamba_scan(ap, xc_act, h0, s)
+    y = y * jax.nn.silu(z)
+    out = y @ ap["out_proj"]
+    conv_tail = pad[:, T : T + s.d_conv - 1] if False else xc[:, T - (s.d_conv - 1) :]
+    return out, {"h": hN, "conv": conv_tail}
+
+
+# ----------------------------------------------------------- step builders
+def make_train_step(model: Model, optimizer) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(
+                p,
+                batch["tokens"],
+                batch["labels"],
+                media_emb=batch.get("media_emb"),
+                remat=True,
+            )
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        metrics = {"loss": loss, **parts}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, window: int = 0) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(
+            params, batch["tokens"], media_emb=batch.get("media_emb"), window=window
+        )
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+
+    return decode_step

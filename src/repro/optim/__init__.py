@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    chain_clip_by_global_norm,
+    cosine_schedule,
+    constant_schedule,
+    linear_warmup_cosine,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "sgd",
+    "chain_clip_by_global_norm",
+    "cosine_schedule",
+    "constant_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,162 @@
+"""Pure-JAX optimizers (optax is not available offline).
+
+Functional, pytree-based, shardable: ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, state)``; apply with
+``params + updates``.  States mirror param pytree structure so the same
+NamedSharding rules apply (FSDP over the data axis, see distributed/sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adam",
+    "adamw",
+    "chain_clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+    def apply(self, params: PyTree, grads: PyTree, state: PyTree) -> Tuple[PyTree, PyTree]:
+        updates, state = self.update(grads, state, params)
+        params = jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        return params, state
+
+
+# ------------------------------------------------------------------ schedules
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def f(step: jnp.ndarray) -> jnp.ndarray:
+        t = jnp.minimum(step / total_steps, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1))
+
+    def f(step: jnp.ndarray) -> jnp.ndarray:
+        warm = lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return f
+
+
+def _as_schedule(lr: Any) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ----------------------------------------------------------------- optimizers
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Optional[PyTree]
+
+
+def sgd(lr: Any, momentum: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params: PyTree) -> SgdState:
+        mom = (
+            jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+            if momentum
+            else None
+        )
+        return SgdState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads: PyTree, state: SgdState, params: PyTree):
+        lr_t = sched(state.step)
+        if momentum:
+            new_mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+            )
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, new_mom)
+            return updates, SgdState(state.step + 1, new_mom)
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, SgdState(state.step + 1, None)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(
+    lr: Any, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0
+) -> Optimizer:
+    """Adam / AdamW. Moments kept in fp32 regardless of param dtype."""
+    sched = _as_schedule(lr)
+
+    def init(params: PyTree) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            jnp.zeros((), jnp.int32),
+            jax.tree_util.tree_map(zeros, params),
+            jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads: PyTree, state: AdamState, params: PyTree):
+        step = state.step + 1
+        lr_t = sched(state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+        def _upd(m, v, p):
+            u = -lr_t * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree_util.tree_map(_upd, mu, nu, params)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Any, weight_decay: float = 0.01, **kw: Any) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def update(grads: PyTree, state: PyTree, params: PyTree):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)

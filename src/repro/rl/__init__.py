@@ -1,0 +1,15 @@
+from repro.rl.advantages import discounted_returns, gae, vtrace
+from repro.rl.env import CartPole, MultiAgentCartPole, Pendulum
+from repro.rl.policy import (
+    ActorCriticPolicy,
+    DQNPolicy,
+    DummyPolicy,
+    SACPolicy,
+)
+from repro.rl.model_based import ModelBasedWorker
+from repro.rl.replay import ReplayBuffer
+from repro.rl.rollout_worker import MultiAgentRolloutWorker, RolloutWorker
+from repro.rl.sample_batch import MultiAgentBatch, SampleBatch, concat_batches
+from repro.rl.transformer_policy import TransformerPolicy
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,87 @@
+"""Advantage estimators: discounted returns, GAE, V-trace (IMPALA).
+
+All are pure ``lax.scan``-based functions over time-major arrays so they can
+live inside jitted rollout/learn steps.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["discounted_returns", "gae", "vtrace"]
+
+
+def discounted_returns(
+    rewards: jax.Array, dones: jax.Array, last_value: jax.Array, gamma: float
+) -> jax.Array:
+    """R_t = r_t + gamma * (1 - done_t) * R_{t+1};  time-major [T, ...]."""
+
+    def scan_fn(carry, inp):
+        r, d = inp
+        ret = r + gamma * (1.0 - d) * carry
+        return ret, ret
+
+    _, returns = jax.lax.scan(
+        scan_fn, last_value, (rewards, dones.astype(rewards.dtype)), reverse=True
+    )
+    return returns
+
+
+def gae(
+    rewards: jax.Array,
+    values: jax.Array,
+    dones: jax.Array,
+    last_value: jax.Array,
+    gamma: float = 0.99,
+    lam: float = 0.95,
+) -> Tuple[jax.Array, jax.Array]:
+    """Generalized Advantage Estimation; returns (advantages, value_targets)."""
+    dones_f = dones.astype(rewards.dtype)
+    next_values = jnp.concatenate([values[1:], last_value[None]], axis=0)
+    deltas = rewards + gamma * (1.0 - dones_f) * next_values - values
+
+    def scan_fn(carry, inp):
+        delta, d = inp
+        adv = delta + gamma * lam * (1.0 - d) * carry
+        return adv, adv
+
+    _, advantages = jax.lax.scan(scan_fn, jnp.zeros_like(last_value), (deltas, dones_f), reverse=True)
+    return advantages, advantages + values
+
+
+def vtrace(
+    behaviour_logp: jax.Array,
+    target_logp: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    dones: jax.Array,
+    last_value: jax.Array,
+    gamma: float = 0.99,
+    rho_clip: float = 1.0,
+    c_clip: float = 1.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """V-trace targets (IMPALA, Espeholt et al. 2018).
+
+    Returns (vs, pg_advantages); all inputs time-major [T, ...].
+    """
+    rhos = jnp.exp(target_logp - behaviour_logp)
+    clipped_rhos = jnp.minimum(rho_clip, rhos)
+    cs = jnp.minimum(c_clip, rhos)
+    dones_f = dones.astype(rewards.dtype)
+    discounts = gamma * (1.0 - dones_f)
+    next_values = jnp.concatenate([values[1:], last_value[None]], axis=0)
+    deltas = clipped_rhos * (rewards + discounts * next_values - values)
+
+    def scan_fn(acc, inp):
+        delta, discount, c = inp
+        acc = delta + discount * c * acc
+        return acc, acc
+
+    _, vs_minus_v = jax.lax.scan(scan_fn, jnp.zeros_like(last_value), (deltas, discounts, cs), reverse=True)
+    vs = vs_minus_v + values
+    next_vs = jnp.concatenate([vs[1:], last_value[None]], axis=0)
+    pg_adv = clipped_rhos * (rewards + discounts * next_vs - values)
+    return vs, pg_adv

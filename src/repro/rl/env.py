@@ -1,0 +1,175 @@
+"""JAX-native vectorized environments.
+
+Environments are pure functions over explicit state, vmapped over a batch of
+parallel env instances and jitted — the whole rollout loop compiles to one
+XLA program per worker (``lax.scan`` over time).
+
+    reset(key)            -> EnvState, obs
+    step(state, action)   -> EnvState, obs, reward, done
+
+Auto-reset on done (standard vectorized-env semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CartPole", "Pendulum", "Env", "MultiAgentCartPole"]
+
+
+class Env:
+    """Protocol: subclasses define obs_dim / num_actions / reset / step."""
+
+    obs_dim: int
+    num_actions: int  # -1 for continuous
+    action_dim: int = 0
+
+    def reset(self, key: jax.Array) -> Tuple[Any, jax.Array]:
+        raise NotImplementedError
+
+    def step(self, state: Any, action: jax.Array, key: jax.Array):
+        raise NotImplementedError
+
+
+class CartPoleState(NamedTuple):
+    x: jax.Array
+    x_dot: jax.Array
+    theta: jax.Array
+    theta_dot: jax.Array
+    t: jax.Array
+
+
+class CartPole(Env):
+    """Classic control CartPole-v0 dynamics (the paper's benchmark env)."""
+
+    obs_dim = 4
+    num_actions = 2
+    max_steps = 200
+
+    gravity = 9.8
+    masscart = 1.0
+    masspole = 0.1
+    total_mass = masspole + masscart
+    length = 0.5
+    polemass_length = masspole * length
+    force_mag = 10.0
+    tau = 0.02
+    theta_threshold = 12 * 2 * np.pi / 360
+    x_threshold = 2.4
+
+    def reset(self, key: jax.Array) -> Tuple[CartPoleState, jax.Array]:
+        vals = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        st = CartPoleState(vals[0], vals[1], vals[2], vals[3], jnp.zeros((), jnp.int32))
+        return st, self._obs(st)
+
+    @staticmethod
+    def _obs(st: CartPoleState) -> jax.Array:
+        return jnp.stack([st.x, st.x_dot, st.theta, st.theta_dot])
+
+    def step(self, st: CartPoleState, action: jax.Array, key: jax.Array):
+        force = jnp.where(action == 1, self.force_mag, -self.force_mag)
+        costheta, sintheta = jnp.cos(st.theta), jnp.sin(st.theta)
+        temp = (
+            force + self.polemass_length * st.theta_dot**2 * sintheta
+        ) / self.total_mass
+        thetaacc = (self.gravity * sintheta - costheta * temp) / (
+            self.length * (4.0 / 3.0 - self.masspole * costheta**2 / self.total_mass)
+        )
+        xacc = temp - self.polemass_length * thetaacc * costheta / self.total_mass
+        new = CartPoleState(
+            st.x + self.tau * st.x_dot,
+            st.x_dot + self.tau * xacc,
+            st.theta + self.tau * st.theta_dot,
+            st.theta_dot + self.tau * thetaacc,
+            st.t + 1,
+        )
+        done = (
+            (jnp.abs(new.x) > self.x_threshold)
+            | (jnp.abs(new.theta) > self.theta_threshold)
+            | (new.t >= self.max_steps)
+        )
+        reward = jnp.ones(())
+        # Auto-reset on termination.
+        reset_st, _ = self.reset(key)
+        out = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(done, a, b), reset_st, new
+        )
+        return out, self._obs(out), reward, done
+
+
+class PendulumState(NamedTuple):
+    theta: jax.Array
+    theta_dot: jax.Array
+    t: jax.Array
+
+
+class Pendulum(Env):
+    """Pendulum-v1 (continuous torque) for SAC-style continuous control."""
+
+    obs_dim = 3
+    num_actions = -1
+    action_dim = 1
+    max_steps = 200
+    max_speed = 8.0
+    max_torque = 2.0
+    dt = 0.05
+    g = 10.0
+    m = 1.0
+    length = 1.0
+
+    def reset(self, key: jax.Array) -> Tuple[PendulumState, jax.Array]:
+        k1, k2 = jax.random.split(key)
+        theta = jax.random.uniform(k1, (), minval=-np.pi, maxval=np.pi)
+        theta_dot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        st = PendulumState(theta, theta_dot, jnp.zeros((), jnp.int32))
+        return st, self._obs(st)
+
+    @staticmethod
+    def _obs(st: PendulumState) -> jax.Array:
+        return jnp.stack([jnp.cos(st.theta), jnp.sin(st.theta), st.theta_dot])
+
+    def step(self, st: PendulumState, action: jax.Array, key: jax.Array):
+        u = jnp.clip(action.reshape(()) * self.max_torque, -self.max_torque, self.max_torque)
+        th = ((st.theta + np.pi) % (2 * np.pi)) - np.pi
+        cost = th**2 + 0.1 * st.theta_dot**2 + 0.001 * u**2
+        new_dot = st.theta_dot + (
+            3 * self.g / (2 * self.length) * jnp.sin(st.theta)
+            + 3.0 / (self.m * self.length**2) * u
+        ) * self.dt
+        new_dot = jnp.clip(new_dot, -self.max_speed, self.max_speed)
+        new = PendulumState(st.theta + new_dot * self.dt, new_dot, st.t + 1)
+        done = new.t >= self.max_steps
+        reset_st, _ = self.reset(key)
+        out = jax.tree_util.tree_map(lambda a, b: jnp.where(done, a, b), reset_st, new)
+        return out, self._obs(out), -cost, done
+
+
+class MultiAgentCartPole:
+    """N independent CartPole agents in one logical env (paper Fig 11/14:
+    'multi-agent Atari with four agents per policy' analogue).
+
+    ``policy_mapping`` assigns each agent index to a policy id; rollout
+    workers return a MultiAgentBatch keyed by policy id.
+    """
+
+    def __init__(self, num_agents: int, policy_mapping: Dict[int, str]):
+        self.base = CartPole()
+        self.num_agents = num_agents
+        self.policy_mapping = dict(policy_mapping)
+        self.obs_dim = self.base.obs_dim
+        self.num_actions = self.base.num_actions
+
+    def reset(self, key: jax.Array):
+        keys = jax.random.split(key, self.num_agents)
+        st, obs = jax.vmap(self.base.reset)(keys)
+        return st, obs  # obs: [A, obs_dim]
+
+    def step(self, st: Any, actions: jax.Array, key: jax.Array):
+        keys = jax.random.split(key, self.num_agents)
+        return jax.vmap(self.base.step)(st, actions, keys)

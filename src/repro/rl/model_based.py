@@ -1,0 +1,139 @@
+"""Model-based RL worker: learned dynamics ensemble + synthetic rollouts.
+
+The paper's flexibility argument (§2.2, §6 "an undergraduate implemented
+MB-MPO/Dreamer"): model-based training adds a supervised dynamics-model
+stream on top of model-free RL, 'breaking the mold' of fixed execution
+patterns.  In RLlib Flow it is just one more concurrent sub-flow — see
+``plans.mbpo_plan``:
+
+    (1) env rollouts  -> replay                      (real experience)
+    (2) replay        -> TrainDynamicsModel          (supervised stream)
+    (3) synthetic rollouts (policy x learned model) -> TrainOneStep(policy)
+
+This worker extends RolloutWorker with a probabilistic dynamics ensemble
+(predicts delta-obs and reward) and a jitted synthetic-rollout scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import Optimizer, adam
+from repro.rl.advantages import gae
+from repro.rl.policy import mlp_apply, mlp_init
+from repro.rl.rollout_worker import RolloutWorker, _to_numpy_batch
+from repro.rl.sample_batch import SampleBatch
+
+PyTree = Any
+
+__all__ = ["ModelBasedWorker"]
+
+
+class ModelBasedWorker(RolloutWorker):
+    """RolloutWorker + dynamics ensemble + synthetic rollouts."""
+
+    def __init__(
+        self,
+        *args: Any,
+        ensemble_size: int = 2,
+        model_hidden: Tuple[int, ...] = (64, 64),
+        model_lr: float = 1e-3,
+        synth_rollout_len: int = 8,
+        synth_batch: int = 64,
+        **kwargs: Any,
+    ):
+        super().__init__(*args, **kwargs)
+        self.ensemble_size = ensemble_size
+        self.synth_rollout_len = synth_rollout_len
+        self.synth_batch = synth_batch
+        obs_dim = self.env.obs_dim
+        in_dim = obs_dim + 1  # obs + discrete action index
+        out_dim = obs_dim + 1  # delta obs + reward
+        keys = jax.random.split(jax.random.PRNGKey(271 + self.worker_index), ensemble_size)
+        self.dyn_params = [
+            mlp_init(k, (in_dim, *model_hidden, out_dim), scale_last=0.1) for k in keys
+        ]
+        self.dyn_opt = adam(model_lr)
+        self.dyn_opt_states = [self.dyn_opt.init(p) for p in self.dyn_params]
+        self._dyn_learn_jit = jax.jit(self._dyn_learn)
+        self._synth_jit = jax.jit(self._synth_rollout)
+        self.dyn_losses: list = []
+
+    # ------------------------------------------------------------ dynamics
+    def _dyn_forward(self, params: PyTree, obs: jax.Array, act: jax.Array):
+        x = jnp.concatenate([obs, act[:, None].astype(jnp.float32)], axis=-1)
+        out = mlp_apply(params, x)
+        return out[:, :-1], out[:, -1]  # delta obs, reward
+
+    def _dyn_loss(self, params: PyTree, batch: Dict[str, jax.Array]):
+        d_obs, rew = self._dyn_forward(params, batch["obs"], batch["actions"])
+        target = batch["next_obs"] - batch["obs"]
+        return jnp.mean(jnp.square(d_obs - target)) + jnp.mean(
+            jnp.square(rew - batch["rewards"])
+        )
+
+    def _dyn_learn(self, params: PyTree, opt_state: PyTree, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(self._dyn_loss)(params, batch)
+        params, opt_state = self.dyn_opt.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    def train_dynamics(self, batch: SampleBatch) -> Dict[str, float]:
+        dev = {k: jnp.asarray(v) for k, v in batch.items() if k != "batch_indices"}
+        losses = []
+        for i in range(self.ensemble_size):
+            self.dyn_params[i], self.dyn_opt_states[i], loss = self._dyn_learn_jit(
+                self.dyn_params[i], self.dyn_opt_states[i], dev
+            )
+            losses.append(float(loss))
+        self.dyn_losses = losses
+        return {"dyn_loss": float(np.mean(losses))}
+
+    # ---------------------------------------------------- synthetic rollout
+    def _synth_rollout(
+        self, policy_params: PyTree, dyn_params: PyTree, start_obs: jax.Array, key: jax.Array
+    ):
+        """Roll the CURRENT policy through the LEARNED model (one ensemble
+        member per call; callers alternate members for diversity)."""
+
+        def step_fn(carry, key_t):
+            obs = carry
+            k_act, k_member = jax.random.split(key_t)
+            action, logp, value, _ = self.policy.act(policy_params, obs, k_act)
+            d_obs, rew = self._dyn_forward(dyn_params, obs, action)
+            next_obs = obs + d_obs
+            out = {
+                "obs": obs,
+                "actions": action,
+                "rewards": rew,
+                "dones": jnp.zeros_like(rew),
+                "logp": logp,
+                "values": value,
+                "next_obs": next_obs,
+            }
+            return next_obs, out
+
+        keys = jax.random.split(key, self.synth_rollout_len)
+        last_obs, cols = jax.lax.scan(step_fn, start_obs, keys)
+        _, _, last_value, _ = self.policy.act(policy_params, last_obs, keys[-1])
+        adv, ret = gae(
+            cols["rewards"], cols["values"], cols["dones"], last_value, self.gamma, self.lam
+        )
+        cols["advantages"] = adv
+        cols["returns"] = ret
+        return cols
+
+    def synthesize(self, batch: SampleBatch) -> SampleBatch:
+        """Generate a synthetic on-policy batch branching from replayed
+        states (MBPO-style)."""
+        idx = np.random.default_rng(len(self.dyn_losses)).integers(
+            0, batch.count, min(self.synth_batch, batch.count)
+        )
+        start = jnp.asarray(batch["obs"][idx])
+        self._key, k = jax.random.split(self._key)
+        member = int(np.random.default_rng(int(k[0]) % 2**31).integers(self.ensemble_size))
+        cols = self._synth_jit(self.params, self.dyn_params[member], start, k)
+        return _to_numpy_batch(cols)

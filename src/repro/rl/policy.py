@@ -1,0 +1,314 @@
+"""Policies: pure-JAX actor-critic / Q / squashed-Gaussian networks + losses.
+
+A Policy bundles parameter construction with jitted ``act`` and ``loss``
+functions.  Params are plain dict pytrees.  The dataflow layer never touches
+these internals — they are the "numerical concerns" the paper keeps unchanged
+while swapping the distributed execution layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = [
+    "mlp_init",
+    "mlp_apply",
+    "ActorCriticPolicy",
+    "DQNPolicy",
+    "SACPolicy",
+    "DummyPolicy",
+]
+
+
+# ------------------------------------------------------------------ MLP base
+def mlp_init(key: jax.Array, sizes: Sequence[int], scale_last: float = 0.01) -> PyTree:
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w_scale = scale_last if i == len(sizes) - 2 else float(np.sqrt(2.0 / din))
+        params.append(
+            {
+                "w": jax.random.normal(keys[i], (din, dout), jnp.float32) * w_scale,
+                "b": jnp.zeros((dout,), jnp.float32),
+            }
+        )
+    return params
+
+
+def mlp_apply(params: PyTree, x: jax.Array) -> jax.Array:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+# ------------------------------------------------------------ Actor-critic
+class ActorCriticPolicy:
+    """Discrete actor-critic with selectable loss: 'pg' (A2C/A3C), 'ppo',
+    'vtrace' (IMPALA)."""
+
+    def __init__(
+        self,
+        obs_dim: int,
+        num_actions: int,
+        hidden: Sequence[int] = (64, 64),
+        loss_kind: str = "pg",
+        vf_coef: float = 0.5,
+        ent_coef: float = 0.01,
+        clip_eps: float = 0.2,
+        gamma: float = 0.99,
+        rollout_len: int = 0,  # needed for vtrace reshaping
+    ):
+        self.obs_dim = obs_dim
+        self.num_actions = num_actions
+        self.hidden = tuple(hidden)
+        self.loss_kind = loss_kind
+        self.vf_coef = vf_coef
+        self.ent_coef = ent_coef
+        self.clip_eps = clip_eps
+        self.gamma = gamma
+        self.rollout_len = rollout_len
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        k1, k2 = jax.random.split(key)
+        return {
+            "pi": mlp_init(k1, (self.obs_dim, *self.hidden, self.num_actions)),
+            "vf": mlp_init(k2, (self.obs_dim, *self.hidden, 1), scale_last=1.0),
+        }
+
+    def logits_value(self, params: PyTree, obs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        return mlp_apply(params["pi"], obs), mlp_apply(params["vf"], obs)[..., 0]
+
+    def act(self, params: PyTree, obs: jax.Array, key: jax.Array):
+        logits, value = self.logits_value(params, obs)
+        action = jax.random.categorical(key, logits)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, action[..., None], axis=-1)[..., 0]
+        return action, logp, value, logits
+
+    # ------------------------------------------------------------- losses
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        if self.loss_kind == "ppo":
+            return self._ppo_loss(params, batch)
+        if self.loss_kind == "vtrace":
+            return self._vtrace_loss(params, batch)
+        return self._pg_loss(params, batch)
+
+    def _dist_terms(self, params, batch):
+        logits, values = self.logits_value(params, batch["obs"])
+        logp_all = jax.nn.log_softmax(logits)
+        actions = batch["actions"].astype(jnp.int32)
+        logp = jnp.take_along_axis(logp_all, actions[:, None], axis=-1)[:, 0]
+        entropy = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+        return logp, entropy, values
+
+    def _pg_loss(self, params, batch):
+        logp, entropy, values = self._dist_terms(params, batch)
+        adv = batch["advantages"]
+        pg = -jnp.mean(logp * adv)
+        vf = jnp.mean(jnp.square(values - batch["returns"]))
+        ent = jnp.mean(entropy)
+        loss = pg + self.vf_coef * vf - self.ent_coef * ent
+        return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent}
+
+    def _ppo_loss(self, params, batch):
+        logp, entropy, values = self._dist_terms(params, batch)
+        ratio = jnp.exp(logp - batch["logp"])
+        adv = batch["advantages"]
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1 - self.clip_eps, 1 + self.clip_eps) * adv
+        pg = -jnp.mean(jnp.minimum(unclipped, clipped))
+        vf = jnp.mean(jnp.square(values - batch["returns"]))
+        ent = jnp.mean(entropy)
+        loss = pg + self.vf_coef * vf - self.ent_coef * ent
+        kl = jnp.mean(batch["logp"] - logp)
+        return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent, "kl": kl}
+
+    def _vtrace_loss(self, params, batch):
+        """IMPALA: importance-corrected off-policy actor-critic.
+
+        Batch rows are [B*T] with contiguous length-T traces (batch-major);
+        reshape to [T, N] time-major for the scan.
+        """
+        from repro.rl.advantages import vtrace
+
+        T = self.rollout_len
+        assert T > 0, "vtrace loss needs rollout_len"
+        logp, entropy, values = self._dist_terms(params, batch)
+
+        def tm(x):  # [N*T, ...] -> [T, N, ...]
+            return x.reshape((-1, T) + x.shape[1:]).swapaxes(0, 1)
+
+        vs, pg_adv = vtrace(
+            behaviour_logp=tm(batch["logp"]),
+            target_logp=tm(logp),
+            rewards=tm(batch["rewards"]),
+            values=tm(values),
+            dones=tm(batch["dones"]),
+            last_value=tm(values)[-1],
+            gamma=self.gamma,
+        )
+        vs, pg_adv = map(jax.lax.stop_gradient, (vs, pg_adv))
+        pg = -jnp.mean(tm(logp) * pg_adv)
+        vf = jnp.mean(jnp.square(tm(values) - vs))
+        ent = jnp.mean(entropy)
+        loss = pg + self.vf_coef * vf - self.ent_coef * ent
+        return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent}
+
+
+# ----------------------------------------------------------------- DQN
+class DQNPolicy:
+    """Double DQN with target network and Huber TD loss."""
+
+    def __init__(
+        self,
+        obs_dim: int,
+        num_actions: int,
+        hidden: Sequence[int] = (64, 64),
+        gamma: float = 0.99,
+    ):
+        self.obs_dim = obs_dim
+        self.num_actions = num_actions
+        self.hidden = tuple(hidden)
+        self.gamma = gamma
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        q = mlp_init(key, (self.obs_dim, *self.hidden, self.num_actions), scale_last=1.0)
+        return {"q": q}
+
+    def q_values(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        return mlp_apply(params["q"], obs)
+
+    def act(self, params: PyTree, obs: jax.Array, key: jax.Array, epsilon: jax.Array):
+        q = self.q_values(params, obs)
+        greedy = jnp.argmax(q, axis=-1)
+        k1, k2 = jax.random.split(key)
+        random_a = jax.random.randint(k1, greedy.shape, 0, self.num_actions)
+        explore = jax.random.uniform(k2, greedy.shape) < epsilon
+        action = jnp.where(explore, random_a, greedy)
+        value = jnp.max(q, axis=-1)
+        return action, jnp.zeros_like(value), value, q
+
+    def loss(
+        self, params: PyTree, target_params: PyTree, batch: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, Dict]:
+        q = self.q_values(params, batch["obs"])
+        actions = batch["actions"].astype(jnp.int32)
+        q_sa = jnp.take_along_axis(q, actions[:, None], axis=-1)[:, 0]
+        # Double-DQN target: online argmax, target evaluation.
+        next_q_online = self.q_values(params, batch["next_obs"])
+        next_a = jnp.argmax(next_q_online, axis=-1)
+        next_q_target = self.q_values(target_params, batch["next_obs"])
+        next_q = jnp.take_along_axis(next_q_target, next_a[:, None], axis=-1)[:, 0]
+        target = batch["rewards"] + self.gamma * (1.0 - batch["dones"]) * jax.lax.stop_gradient(next_q)
+        td = q_sa - target
+        weights = batch["weights"] if "weights" in batch else jnp.ones_like(td)
+        huber = jnp.where(jnp.abs(td) < 1.0, 0.5 * td**2, jnp.abs(td) - 0.5)
+        loss = jnp.mean(weights * huber)
+        return loss, {"td_error": td, "mean_q": jnp.mean(q_sa)}
+
+
+# ----------------------------------------------------------------- SAC
+class SACPolicy:
+    """Continuous SAC: squashed Gaussian actor + twin Q critics."""
+
+    def __init__(
+        self,
+        obs_dim: int,
+        action_dim: int,
+        hidden: Sequence[int] = (64, 64),
+        gamma: float = 0.99,
+        alpha: float = 0.2,
+    ):
+        self.obs_dim = obs_dim
+        self.action_dim = action_dim
+        self.hidden = tuple(hidden)
+        self.gamma = gamma
+        self.alpha = alpha
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "pi": mlp_init(k1, (self.obs_dim, *self.hidden, 2 * self.action_dim)),
+            "q1": mlp_init(k2, (self.obs_dim + self.action_dim, *self.hidden, 1), scale_last=1.0),
+            "q2": mlp_init(k3, (self.obs_dim + self.action_dim, *self.hidden, 1), scale_last=1.0),
+        }
+
+    def _pi(self, params, obs, key):
+        out = mlp_apply(params["pi"], obs)
+        mu, log_std = jnp.split(out, 2, axis=-1)
+        log_std = jnp.clip(log_std, -20, 2)
+        std = jnp.exp(log_std)
+        eps = jax.random.normal(key, mu.shape)
+        pre_tanh = mu + std * eps
+        action = jnp.tanh(pre_tanh)
+        logp = jnp.sum(
+            -0.5 * (eps**2 + 2 * log_std + jnp.log(2 * jnp.pi))
+            - jnp.log(1 - action**2 + 1e-6),
+            axis=-1,
+        )
+        return action, logp
+
+    def _q(self, q_params, obs, act):
+        x = jnp.concatenate([obs, act], axis=-1)
+        return mlp_apply(q_params, x)[..., 0]
+
+    def act(self, params: PyTree, obs: jax.Array, key: jax.Array):
+        action, logp = self._pi(params, obs, key)
+        value = self._q(params["q1"], obs, action)
+        return action, logp, value, action
+
+    def critic_loss(self, params, target_params, batch, key):
+        next_a, next_logp = self._pi(params, batch["next_obs"], key)
+        tq1 = self._q(target_params["q1"], batch["next_obs"], next_a)
+        tq2 = self._q(target_params["q2"], batch["next_obs"], next_a)
+        target_v = jnp.minimum(tq1, tq2) - self.alpha * next_logp
+        target = batch["rewards"] + self.gamma * (1.0 - batch["dones"]) * jax.lax.stop_gradient(target_v)
+        actions = batch["actions"]
+        if actions.ndim == 1:
+            actions = actions[:, None]
+        q1 = self._q(params["q1"], batch["obs"], actions)
+        q2 = self._q(params["q2"], batch["obs"], actions)
+        td = q1 - target
+        return jnp.mean((q1 - target) ** 2) + jnp.mean((q2 - target) ** 2), td
+
+    def actor_loss(self, params, batch, key):
+        a, logp = self._pi(params, batch["obs"], key)
+        q = jnp.minimum(
+            self._q(params["q1"], batch["obs"], a), self._q(params["q2"], batch["obs"], a)
+        )
+        return jnp.mean(self.alpha * logp - q)
+
+    def loss(self, params, target_params, batch, key):
+        k1, k2 = jax.random.split(key)
+        closs, td = self.critic_loss(params, target_params, batch, k1)
+        aloss = self.actor_loss(params, batch, k2)
+        return closs + aloss, {"td_error": td, "critic_loss": closs, "actor_loss": aloss}
+
+
+# --------------------------------------------------------------- Dummy
+class DummyPolicy:
+    """One trainable scalar — the paper's sampling-microbenchmark policy."""
+
+    def __init__(self, obs_dim: int = 4, num_actions: int = 2):
+        self.obs_dim = obs_dim
+        self.num_actions = num_actions
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        return {"theta": jnp.zeros((1,), jnp.float32)}
+
+    def act(self, params: PyTree, obs: jax.Array, key: jax.Array):
+        action = jax.random.randint(key, obs.shape[:-1], 0, self.num_actions)
+        zeros = jnp.zeros(obs.shape[:-1])
+        return action, zeros, zeros, zeros
+
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]):
+        return jnp.sum(params["theta"] ** 2), {}

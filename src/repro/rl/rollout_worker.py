@@ -1,0 +1,400 @@
+"""RolloutWorker: the actor target used by every dataflow plan.
+
+Owns: a vectorized JAX env, a policy, params (+ target params for off-policy
+algos), optimizer state, and RNG.  The entire T-step × B-env rollout compiles
+to a single ``lax.scan`` XLA program; ``learn_on_batch`` is likewise one jitted
+update.  The dataflow layer composes these via the worker protocol
+(sample / get_weights / set_weights / compute_gradients / apply_gradients /
+learn_on_batch / update_target).
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from collections import deque
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import Optimizer, adam
+from repro.rl.advantages import gae
+from repro.rl.env import Env
+from repro.rl.policy import ActorCriticPolicy, DQNPolicy, SACPolicy
+from repro.rl.sample_batch import MultiAgentBatch, SampleBatch
+
+PyTree = Any
+
+__all__ = ["RolloutWorker", "MultiAgentRolloutWorker"]
+
+
+def _to_numpy_batch(cols: Dict[str, jax.Array]) -> SampleBatch:
+    """[T, B, ...] device arrays -> batch-major flattened numpy SampleBatch.
+
+    Batch-major flattening keeps each env's length-T trace contiguous, which
+    the v-trace loss relies on to reshape back to time-major.
+    """
+    out = {}
+    for k, v in cols.items():
+        v = np.asarray(v)
+        v = v.swapaxes(0, 1)  # [B, T, ...]
+        out[k] = v.reshape((-1,) + v.shape[2:])
+    return SampleBatch(out)
+
+
+class RolloutWorker:
+    def __init__(
+        self,
+        env: Env,
+        policy: Any,
+        algo: str = "pg",  # pg | ppo | vtrace | dqn | sac
+        num_envs: int = 4,
+        rollout_len: int = 64,
+        optimizer: Optional[Optimizer] = None,
+        gamma: float = 0.99,
+        lam: float = 0.95,
+        epsilon: float = 0.1,
+        target_polyak: float = 0.0,  # 0 -> hard target copy
+        seed: int = 0,
+        worker_index: int = 0,
+    ):
+        self.env = env
+        self.policy = policy
+        self.algo = algo
+        self.num_envs = num_envs
+        self.rollout_len = rollout_len
+        self.gamma = gamma
+        self.lam = lam
+        self.epsilon = epsilon
+        self.target_polyak = target_polyak
+        self.worker_index = worker_index
+
+        self._key = jax.random.PRNGKey(seed * 10007 + worker_index)
+        self._key, pk, ek = jax.random.split(self._key, 3)
+        self.params = policy.init_params(pk)
+        self.target_params = jax.tree_util.tree_map(jnp.array, self.params)
+        self.optimizer = optimizer or adam(3e-4)
+        self.opt_state = self.optimizer.init(self.params)
+
+        env_keys = jax.random.split(ek, num_envs)
+        self.env_state, self.obs = jax.vmap(env.reset)(env_keys)
+        self._ep_returns = jnp.zeros((num_envs,), jnp.float32)
+        self._completed: deque = deque(maxlen=100)
+
+        self._rollout_jit = jax.jit(self._rollout)
+        self._learn_jit = jax.jit(self._learn)
+        self._grad_jit = jax.jit(self._grads)
+        self._apply_jit = jax.jit(self._apply)
+
+    # --------------------------------------------------------------- rollout
+    def _act(self, params: PyTree, obs: jax.Array, key: jax.Array):
+        if self.algo == "dqn":
+            return self.policy.act(params, obs, key, jnp.asarray(self.epsilon))
+        return self.policy.act(params, obs, key)
+
+    def _rollout(self, params: PyTree, env_state: Any, obs: jax.Array, ep_ret: jax.Array, key: jax.Array):
+        def step_fn(carry, key_t):
+            env_state, obs, ep_ret = carry
+            k_act, k_env = jax.random.split(key_t)
+            action, logp, value, _ = self._act(params, obs, k_act)
+            env_keys = jax.random.split(k_env, self.num_envs)
+            env_state, next_obs, reward, done = jax.vmap(self.env.step)(
+                env_state, action, env_keys
+            )
+            new_ret = ep_ret + reward
+            completed = jnp.where(done, new_ret, 0.0)
+            ep_ret = jnp.where(done, 0.0, new_ret)
+            out = {
+                "obs": obs,
+                "actions": action,
+                "rewards": reward,
+                "dones": done.astype(jnp.float32),
+                "logp": logp,
+                "values": value,
+                "next_obs": next_obs,
+                "completed": completed,
+            }
+            return (env_state, next_obs, ep_ret), out
+
+        keys = jax.random.split(key, self.rollout_len)
+        (env_state, obs, ep_ret), cols = jax.lax.scan(step_fn, (env_state, obs, ep_ret), keys)
+
+        if self.algo in ("pg", "ppo"):
+            _, _, last_value, _ = self._act(params, obs, keys[-1])
+            adv, ret = gae(
+                cols["rewards"], cols["values"], cols["dones"], last_value, self.gamma, self.lam
+            )
+            cols["advantages"] = adv
+            cols["returns"] = ret
+        return env_state, obs, ep_ret, cols
+
+    def sample(self) -> SampleBatch:
+        self._key, k = jax.random.split(self._key)
+        self.env_state, self.obs, self._ep_returns, cols = self._rollout_jit(
+            self.params, self.env_state, self.obs, self._ep_returns, k
+        )
+        completed = np.asarray(cols.pop("completed"))
+        for r in completed[completed != 0.0]:
+            self._completed.append(float(r))
+        if self.algo in ("dqn", "sac"):
+            for k_ in ("logp", "values"):
+                cols.pop(k_, None)
+        return _to_numpy_batch(cols)
+
+    def sample_with_count(self) -> Tuple[SampleBatch, int]:
+        b = self.sample()
+        return b, b.count
+
+    # ----------------------------------------------------------------- learn
+    # NOTE: target_params must be an explicit argument (never closed over) or
+    # jit would bake the trace-time snapshot in as a constant.
+    def _loss_for(self, params: PyTree, target_params: PyTree, batch: Dict[str, jax.Array], key: jax.Array):
+        if self.algo == "dqn":
+            return self.policy.loss(params, target_params, batch)
+        if self.algo == "sac":
+            return self.policy.loss(params, target_params, batch, key)
+        return self.policy.loss(params, batch)
+
+    def _grads(self, params: PyTree, target_params: PyTree, batch: Dict[str, jax.Array], key: jax.Array):
+        (loss, aux), grads = jax.value_and_grad(self._loss_for, has_aux=True)(
+            params, target_params, batch, key
+        )
+        return grads, loss, aux
+
+    def _apply(self, params: PyTree, opt_state: PyTree, grads: PyTree):
+        return self.optimizer.apply(params, grads, opt_state)
+
+    def _learn(self, params: PyTree, target_params: PyTree, opt_state: PyTree, batch: Dict[str, jax.Array], key: jax.Array):
+        (loss, aux), grads = jax.value_and_grad(self._loss_for, has_aux=True)(
+            params, target_params, batch, key
+        )
+        params, opt_state = self.optimizer.apply(params, grads, opt_state)
+        return params, opt_state, loss, aux
+
+    @staticmethod
+    def _device_batch(batch: SampleBatch) -> Dict[str, jax.Array]:
+        return {k: jnp.asarray(v) for k, v in batch.items() if k != "batch_indices"}
+
+    def learn_on_batch(self, batch: SampleBatch, policy_id: Optional[str] = None) -> Dict[str, Any]:
+        self._key, k = jax.random.split(self._key)
+        self.params, self.opt_state, loss, aux = self._learn_jit(
+            self.params, self.target_params, self.opt_state, self._device_batch(batch), k
+        )
+        info = {"loss": float(loss)}
+        for name, v in aux.items():
+            if name == "td_error":
+                info["td_error"] = np.asarray(v)
+            else:
+                info[name] = float(v)
+        if self.algo == "sac" and self.target_polyak > 0:
+            tau = self.target_polyak
+            self.target_params = jax.tree_util.tree_map(
+                lambda t, p: (1 - tau) * t + tau * p, self.target_params, self.params
+            )
+        return info
+
+    def compute_gradients(self, batch: SampleBatch) -> Tuple[PyTree, Dict[str, Any]]:
+        self._key, k = jax.random.split(self._key)
+        grads, loss, aux = self._grad_jit(
+            self.params, self.target_params, self._device_batch(batch), k
+        )
+        info = {"loss": float(loss), "batch_count": batch.count}
+        return grads, info
+
+    def apply_gradients(self, grads: PyTree) -> None:
+        self.params, self.opt_state = self._apply_jit(self.params, self.opt_state, grads)
+
+    # ------------------------------------------------------------- messaging
+    def get_weights(self) -> PyTree:
+        return self.params
+
+    def set_weights(self, weights: PyTree) -> None:
+        self.params = weights
+
+    def update_target(self) -> None:
+        self.target_params = jax.tree_util.tree_map(jnp.array, self.params)
+
+    def episode_stats(self) -> Dict[str, float]:
+        if not self._completed:
+            return {"episode_reward_mean": float("nan"), "episodes": 0}
+        return {
+            "episode_reward_mean": float(np.mean(self._completed)),
+            "episodes": len(self._completed),
+        }
+
+    # --------------------------------------------------------------- MAML
+    def inner_adapt(self, batch: SampleBatch) -> None:
+        """One inner-loop PG step on worker-local params (first-order MAML)."""
+        self.learn_on_batch(batch)
+
+    def reset_inner(self) -> None:
+        # Meta-params were just broadcast via set_weights; nothing else to do
+        # because inner adaptation mutated self.params in place.
+        pass
+
+
+class MultiAgentRolloutWorker:
+    """Multi-policy rollouts for the PPO+DQN composition (paper §5.3).
+
+    Each agent index is mapped to a policy id; per-policy experiences are
+    returned as a MultiAgentBatch.  Policies may use different algorithms
+    (PPO and DQN here), which is exactly the composition the paper enables.
+    """
+
+    def __init__(
+        self,
+        env: Any,  # MultiAgentCartPole
+        policy_specs: Dict[str, Dict[str, Any]],
+        agent_to_policy: Dict[int, str],
+        rollout_len: int = 32,
+        gamma: float = 0.99,
+        lam: float = 0.95,
+        epsilon: float = 0.1,
+        seed: int = 0,
+        worker_index: int = 0,
+    ):
+        self.env = env
+        self.rollout_len = rollout_len
+        self.gamma = gamma
+        self.lam = lam
+        self.epsilon = epsilon
+        self.agent_to_policy = dict(agent_to_policy)
+        self._key = jax.random.PRNGKey(seed * 7919 + worker_index)
+
+        self.policies: Dict[str, Any] = {}
+        self.params: Dict[str, PyTree] = {}
+        self.target_params: Dict[str, PyTree] = {}
+        self.optimizers: Dict[str, Optimizer] = {}
+        self.opt_states: Dict[str, PyTree] = {}
+        self.algos: Dict[str, str] = {}
+        for pid, spec in policy_specs.items():
+            self._key, k = jax.random.split(self._key)
+            self.policies[pid] = spec["policy"]
+            self.algos[pid] = spec.get("algo", "ppo")
+            self.params[pid] = spec["policy"].init_params(k)
+            self.target_params[pid] = jax.tree_util.tree_map(jnp.array, self.params[pid])
+            self.optimizers[pid] = spec.get("optimizer") or adam(3e-4)
+            self.opt_states[pid] = self.optimizers[pid].init(self.params[pid])
+
+        self._key, ek = jax.random.split(self._key)
+        self.env_state, self.obs = env.reset(ek)
+        self._ep_returns = jnp.zeros((env.num_agents,), jnp.float32)
+        self._completed: deque = deque(maxlen=100)
+        self._rollout_jit = jax.jit(self._rollout)
+        self._learn_jits: Dict[str, Callable] = {
+            pid: jax.jit(functools.partial(self._learn, pid)) for pid in self.policies
+        }
+
+    # Agents grouped by policy for vectorized acting.
+    def _agents_of(self, pid: str):
+        return np.array([a for a, p in self.agent_to_policy.items() if p == pid])
+
+    def _rollout(self, params: Dict[str, PyTree], env_state, obs, ep_ret, key):
+        A = self.env.num_agents
+
+        def step_fn(carry, key_t):
+            env_state, obs, ep_ret = carry
+            k_act, k_env = jax.random.split(key_t)
+            actions = jnp.zeros((A,), jnp.int32)
+            logps = jnp.zeros((A,), jnp.float32)
+            values = jnp.zeros((A,), jnp.float32)
+            for pid, pol in self.policies.items():
+                idx = self._agents_of(pid)
+                o = obs[idx]
+                if self.algos[pid] == "dqn":
+                    a, lp, v, _ = pol.act(params[pid], o, k_act, jnp.asarray(self.epsilon))
+                else:
+                    a, lp, v, _ = pol.act(params[pid], o, k_act)
+                actions = actions.at[idx].set(a.astype(jnp.int32))
+                logps = logps.at[idx].set(lp)
+                values = values.at[idx].set(v)
+            env_state, next_obs, reward, done = self.env.step(env_state, actions, k_env)
+            new_ret = ep_ret + reward
+            completed = jnp.where(done, new_ret, 0.0)
+            ep_ret = jnp.where(done, 0.0, new_ret)
+            out = {
+                "obs": obs,
+                "actions": actions,
+                "rewards": reward,
+                "dones": done.astype(jnp.float32),
+                "logp": logps,
+                "values": values,
+                "next_obs": next_obs,
+                "completed": completed,
+            }
+            return (env_state, next_obs, ep_ret), out
+
+        keys = jax.random.split(key, self.rollout_len)
+        (env_state, obs, ep_ret), cols = jax.lax.scan(step_fn, (env_state, obs, ep_ret), keys)
+        adv, ret = gae(
+            cols["rewards"], cols["values"], cols["dones"],
+            jnp.zeros_like(ep_ret), self.gamma, self.lam,
+        )
+        cols["advantages"] = adv
+        cols["returns"] = ret
+        return env_state, obs, ep_ret, cols
+
+    def sample(self) -> MultiAgentBatch:
+        self._key, k = jax.random.split(self._key)
+        self.env_state, self.obs, self._ep_returns, cols = self._rollout_jit(
+            self.params, self.env_state, self.obs, self._ep_returns, k
+        )
+        completed = np.asarray(cols.pop("completed"))
+        for r in completed[completed != 0.0]:
+            self._completed.append(float(r))
+        # Split per policy: columns are [T, A, ...].
+        batches = {}
+        for pid in self.policies:
+            idx = self._agents_of(pid)
+            sub = {k_: np.asarray(v)[:, idx] for k_, v in cols.items()}
+            if self.algos[pid] == "dqn":
+                sub.pop("logp", None)
+                sub.pop("values", None)
+                sub.pop("advantages", None)
+                sub.pop("returns", None)
+            batches[pid] = _to_numpy_batch(sub)
+        return MultiAgentBatch(batches)
+
+    def _learn(self, pid: str, params, target_params, opt_state, batch, key):
+        pol = self.policies[pid]
+        if self.algos[pid] == "dqn":
+            loss_fn = lambda p: pol.loss(p, target_params, batch)
+        else:
+            loss_fn = lambda p: pol.loss(p, batch)
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = self.optimizers[pid].apply(params, grads, opt_state)
+        return params, opt_state, loss, aux
+
+    def learn_on_batch(self, batch: SampleBatch, policy_id: str = "ppo_policy") -> Dict[str, Any]:
+        dev = {k: jnp.asarray(v) for k, v in batch.items() if k != "batch_indices"}
+        self._key, k = jax.random.split(self._key)
+        self.params[policy_id], self.opt_states[policy_id], loss, aux = self._learn_jits[
+            policy_id
+        ](self.params[policy_id], self.target_params[policy_id], self.opt_states[policy_id], dev, k)
+        info: Dict[str, Any] = {"loss": float(loss)}
+        if "td_error" in aux:
+            info["td_error"] = np.asarray(aux["td_error"])
+        return info
+
+    def update_target(self) -> None:
+        for pid in self.policies:
+            if self.algos[pid] == "dqn":
+                self.target_params[pid] = jax.tree_util.tree_map(
+                    jnp.array, self.params[pid]
+                )
+
+    def get_weights(self) -> Dict[str, PyTree]:
+        return dict(self.params)
+
+    def set_weights(self, weights: Dict[str, PyTree]) -> None:
+        self.params.update(weights)
+
+    def episode_stats(self) -> Dict[str, float]:
+        if not self._completed:
+            return {"episode_reward_mean": float("nan"), "episodes": 0}
+        return {
+            "episode_reward_mean": float(np.mean(self._completed)),
+            "episodes": len(self._completed),
+        }

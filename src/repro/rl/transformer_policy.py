@@ -1,0 +1,126 @@
+"""Transformer actor-critic policy: the model zoo's attention stack as an
+RL trunk (connects repro/models to repro/rl).
+
+The observation is projected into a short learned token sequence, run
+through reduced-config transformer blocks (same attention/MLP code the LLM
+dry-run lowers at pod scale), mean-pooled, and decoded by policy/value
+heads.  Drop-in replacement for ActorCriticPolicy in any plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.layers import attention_init, attention_apply, mlp_apply, mlp_init, rms_norm
+from repro.rl.policy import mlp_init as head_init, mlp_apply as head_apply
+
+PyTree = Any
+
+__all__ = ["TransformerPolicy"]
+
+
+def _trunk_cfg(d_model: int, n_layers: int) -> ModelConfig:
+    return ModelConfig(
+        name="rl-trunk",
+        arch_type="dense",
+        num_layers=n_layers,
+        d_model=d_model,
+        num_heads=max(d_model // 32, 1),
+        num_kv_heads=max(d_model // 32, 1),
+        d_ff=d_model * 4,
+        vocab_size=2,  # unused (no embedding table; obs are projected)
+        block_pattern=(LayerSpec(kind="attn", mlp="dense"),),
+        dtype="float32",
+    )
+
+
+class TransformerPolicy:
+    """Discrete actor-critic with a transformer trunk over obs tokens."""
+
+    def __init__(
+        self,
+        obs_dim: int,
+        num_actions: int,
+        d_model: int = 64,
+        n_layers: int = 2,
+        n_tokens: int = 4,
+        loss_kind: str = "ppo",
+        vf_coef: float = 0.5,
+        ent_coef: float = 0.01,
+        clip_eps: float = 0.2,
+    ):
+        self.obs_dim = obs_dim
+        self.num_actions = num_actions
+        self.cfg = _trunk_cfg(d_model, n_layers)
+        self.n_tokens = n_tokens
+        self.loss_kind = loss_kind
+        self.vf_coef = vf_coef
+        self.ent_coef = ent_coef
+        self.clip_eps = clip_eps
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.num_layers + 4)
+        params: Dict[str, Any] = {
+            "obs_proj": (
+                jax.random.normal(ks[0], (self.obs_dim, self.n_tokens * cfg.d_model), jnp.float32)
+                * 0.2
+            ),
+            "pos": jax.random.normal(ks[1], (self.n_tokens, cfg.d_model), jnp.float32) * 0.02,
+            "pi_head": head_init(ks[2], (cfg.d_model, 64, self.num_actions)),
+            "vf_head": head_init(ks[3], (cfg.d_model, 64, 1), scale_last=1.0),
+        }
+        for i in range(cfg.num_layers):
+            lk1, lk2 = jax.random.split(ks[4 + i])
+            params[f"layer_{i}"] = {
+                "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": attention_init(lk1, cfg),
+                "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+                "mlp": mlp_init(lk2, cfg, cfg.d_ff),
+            }
+        return params
+
+    def _trunk(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        B = obs.shape[0]
+        x = (obs @ params["obs_proj"]).reshape(B, self.n_tokens, cfg.d_model)
+        x = x + params["pos"][None]
+        for i in range(cfg.num_layers):
+            lp = params[f"layer_{i}"]
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            x = x + attention_apply(lp["attn"], h, cfg)
+            h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            x = x + mlp_apply(lp["mlp"], h, cfg)
+        return jnp.mean(x, axis=1)  # [B, d]
+
+    def logits_value(self, params: PyTree, obs: jax.Array):
+        z = self._trunk(params, obs)
+        return head_apply(params["pi_head"], z), head_apply(params["vf_head"], z)[..., 0]
+
+    def act(self, params: PyTree, obs: jax.Array, key: jax.Array):
+        logits, value = self.logits_value(params, obs)
+        action = jax.random.categorical(key, logits)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, action[..., None], axis=-1)[..., 0]
+        return action, logp, value, logits
+
+    # Reuse ActorCriticPolicy's loss math via composition.
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]):
+        from repro.rl.policy import ActorCriticPolicy
+
+        proxy = ActorCriticPolicy.__new__(ActorCriticPolicy)
+        proxy.loss_kind = self.loss_kind
+        proxy.vf_coef = self.vf_coef
+        proxy.ent_coef = self.ent_coef
+        proxy.clip_eps = self.clip_eps
+        proxy.gamma = 0.99
+        proxy.rollout_len = 0
+        proxy.logits_value = lambda p, o: self.logits_value(p, o)
+        if self.loss_kind == "ppo":
+            return proxy._ppo_loss(params, batch)
+        return proxy._pg_loss(params, batch)

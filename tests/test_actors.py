@@ -1,0 +1,88 @@
+"""Virtual actor model: serialized execution, futures, wait, messaging."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.actor import ActorPool, VirtualActor, create_colocated, get, wait
+
+
+class Counter:
+    def __init__(self):
+        self.n = 0
+        self.thread_ids = set()
+
+    def incr(self, k=1):
+        self.thread_ids.add(threading.get_ident())
+        self.n += k
+        return self.n
+
+    def slow(self):
+        time.sleep(0.05)
+        return "slow"
+
+    def fast(self):
+        return "fast"
+
+    def boom(self):
+        raise ValueError("boom")
+
+
+def test_serialized_execution_single_thread():
+    a = VirtualActor(Counter())
+    futs = [a.call("incr") for _ in range(50)]
+    assert [f.result() for f in futs] == list(range(1, 51))
+    assert len(a.target.thread_ids) == 1  # mailbox thread only
+    a.stop()
+
+
+def test_fifo_ordering_per_actor():
+    a = VirtualActor(Counter())
+    f1 = a.call("slow")
+    f2 = a.call("fast")
+    # FIFO: fast cannot complete before slow.
+    assert f1.result() == "slow"
+    assert f2.done()
+    a.stop()
+
+
+def test_exceptions_propagate():
+    a = VirtualActor(Counter())
+    with pytest.raises(ValueError):
+        a.call("boom").result()
+    a.stop()
+
+
+def test_wait_num_returns():
+    a = VirtualActor(Counter())
+    b = VirtualActor(Counter())
+    futs = [a.call("slow"), b.call("fast")]
+    ready, pending = wait(futs, num_returns=1)
+    assert len(ready) >= 1
+    a.stop(); b.stop()
+
+
+def test_apply_sees_target():
+    a = VirtualActor(Counter())
+    assert a.apply(lambda t: t.incr(5)).result() == 5
+    a.stop()
+
+
+def test_pool_broadcast():
+    pool = ActorPool.from_targets([Counter(), Counter()])
+    assert pool.broadcast_sync("incr") == [1, 1]
+    pool.stop()
+
+
+def test_create_colocated():
+    pool = create_colocated(Counter, 3)
+    assert len(pool) == 3
+    pool.stop()
+
+
+def test_get_helper():
+    a = VirtualActor(Counter())
+    assert get([a.call("incr"), a.call("incr")]) == [1, 2]
+    assert get(42) == 42
+    a.stop()

@@ -1,0 +1,35 @@
+"""Dry-run machinery smoke test (subprocess: needs its own device count).
+
+The full 80-combination sweep runs via ``repro.launch.dryrun --arch all``
+(results in benchmarks/results/dryrun.jsonl); here we verify the machinery
+end-to-end for one small arch on a reduced 4x4 virtual mesh.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_dryrun_single_combination(tmp_path):
+    out = tmp_path / "dr.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    # Reduced virtual device count keeps the subprocess fast.
+    env["DRYRUN_XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "musicgen-large", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    row = json.loads(out.read_text().strip().splitlines()[-1])
+    assert row["ok"]
+    assert row["hlo_flops"] > 0
+    assert row["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,149 @@
+"""RL substrate: envs, advantages, replay, optimizers (with hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adam, chain_clip_by_global_norm, sgd
+from repro.rl.advantages import discounted_returns, gae, vtrace
+from repro.rl.env import CartPole, Pendulum
+from repro.rl.replay import ReplayBuffer
+from repro.rl.sample_batch import SampleBatch
+
+
+# ------------------------------------------------------------------- envs
+def test_cartpole_auto_reset_and_bounds():
+    env = CartPole()
+    key = jax.random.PRNGKey(0)
+    st_, obs = env.reset(key)
+    for i in range(300):
+        key, k = jax.random.split(key)
+        st_, obs, r, done = env.step(st_, jnp.asarray(i % 2), k)
+        assert obs.shape == (4,)
+        # after auto-reset, state is inside the reset range
+        if bool(done):
+            assert abs(float(obs[0])) <= 0.05
+    assert np.isfinite(np.asarray(obs)).all()
+
+
+def test_pendulum_reward_negative():
+    env = Pendulum()
+    key = jax.random.PRNGKey(1)
+    st_, obs = env.reset(key)
+    st_, obs, r, done = env.step(st_, jnp.asarray([0.5]), key)
+    assert float(r) <= 0.0
+
+
+# -------------------------------------------------------------- advantages
+def test_discounted_returns_brute_force():
+    r = jnp.array([1.0, 2.0, 3.0])
+    d = jnp.array([0.0, 0.0, 1.0])
+    out = discounted_returns(r, d, jnp.asarray(10.0), gamma=0.5)
+    # R2 = 3 (done), R1 = 2 + .5*3, R0 = 1 + .5*R1
+    assert np.allclose(np.asarray(out), [1 + 0.5 * 3.5, 3.5, 3.0])
+
+
+@given(st.integers(min_value=2, max_value=12), st.integers(min_value=0, max_value=100))
+@settings(max_examples=20, deadline=None)
+def test_gae_reduces_to_returns_when_lambda_1(T, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal(T).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal(T).astype(np.float32))
+    d = jnp.zeros(T)
+    last_v = jnp.asarray(0.0)
+    adv, targets = gae(r, v, d, last_v, gamma=0.9, lam=1.0)
+    rets = discounted_returns(r, d, last_v, gamma=0.9)
+    np.testing.assert_allclose(np.asarray(adv + v), np.asarray(rets), atol=1e-4)
+
+
+def test_vtrace_on_policy_equals_gae_lambda1():
+    """With behaviour == target policy (rho = c = 1), vs is the n-step
+    bootstrapped value target."""
+    T = 6
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(rng.standard_normal(T).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal(T).astype(np.float32))
+    logp = jnp.zeros(T)
+    d = jnp.zeros(T)
+    vs, pg = vtrace(logp, logp, r, v, d, jnp.asarray(0.0), gamma=0.9)
+    adv, target = gae(r, v, d, jnp.asarray(0.0), gamma=0.9, lam=1.0)
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(target), atol=1e-4)
+
+
+# ------------------------------------------------------------------ replay
+def _rb_batch(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return SampleBatch(
+        obs=rng.standard_normal((n, 4)).astype(np.float32),
+        actions=rng.integers(0, 2, n),
+        rewards=rng.standard_normal(n).astype(np.float32),
+        next_obs=rng.standard_normal((n, 4)).astype(np.float32),
+        dones=np.zeros(n, np.float32),
+    )
+
+
+def test_replay_cold_returns_none():
+    rb = ReplayBuffer(capacity=100, sample_batch_size=16, learning_starts=32)
+    rb.add_batch(_rb_batch(8))
+    assert rb.replay() is None
+
+
+def test_replay_sampling_and_weights():
+    rb = ReplayBuffer(capacity=128, sample_batch_size=16, learning_starts=16, seed=1)
+    rb.add_batch(_rb_batch(64))
+    out = rb.replay()
+    assert out.count == 16
+    assert "weights" in out and "batch_indices" in out
+    assert out["weights"].max() <= 1.0 + 1e-6
+
+
+def test_prioritized_sampling_bias():
+    rb = ReplayBuffer(capacity=64, sample_batch_size=32, learning_starts=32,
+                      alpha=1.0, seed=2)
+    rb.add_batch(_rb_batch(64))
+    # Give index 0 overwhelming priority.
+    rb.update_priorities(np.array([0]), np.array([1000.0]))
+    counts = 0
+    for _ in range(20):
+        counts += int((rb.replay()["batch_indices"] == 0).sum())
+    assert counts > 200  # ~ dominated by index 0
+
+
+def test_replay_circular_overwrite():
+    rb = ReplayBuffer(capacity=32, sample_batch_size=8, learning_starts=8)
+    for i in range(4):
+        rb.add_batch(_rb_batch(16, seed=i))
+    assert len(rb) == 32
+
+
+# -------------------------------------------------------------- optimizers
+def test_adam_first_step_magnitude():
+    params = {"w": jnp.ones((3,))}
+    opt = adam(1e-2)
+    state = opt.init(params)
+    grads = {"w": jnp.full((3,), 0.5)}
+    new, state = opt.apply(params, grads, state)
+    # First Adam step ~= -lr regardless of grad scale.
+    np.testing.assert_allclose(np.asarray(new["w"]), 1.0 - 1e-2, atol=1e-4)
+
+
+def test_global_norm_clip():
+    opt = chain_clip_by_global_norm(sgd(1.0), max_norm=1.0)
+    params = {"w": jnp.zeros((2,))}
+    state = opt.init(params)
+    grads = {"w": jnp.asarray([3.0, 4.0])}  # norm 5
+    new, _ = opt.apply(params, grads, state)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(new["w"])), 1.0, atol=1e-5)
+
+
+@given(st.integers(min_value=1, max_value=40))
+@settings(max_examples=10, deadline=None)
+def test_sgd_momentum_shapes(n):
+    params = {"w": jnp.ones((n,))}
+    opt = sgd(0.1, momentum=0.9)
+    state = opt.init(params)
+    new, state2 = opt.apply(params, {"w": jnp.ones((n,))}, state)
+    assert new["w"].shape == (n,)
+    assert int(state2.step) == 1
