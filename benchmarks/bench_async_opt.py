@@ -7,21 +7,20 @@ import time
 from typing import List, Tuple
 
 from benchmarks.common import pg_workers
-from repro.core.plans import a3c_plan
+from repro.flow import Algorithm
 from repro.rl.lowlevel import a3c_lowlevel
 
 
 def _run_flow(iters: int) -> float:
     ws = pg_workers(num_workers=2)
-    it = iter(a3c_plan(ws))
-    next(it)  # warmup/jit
+    algo = Algorithm.from_plan("a3c", ws)
+    algo.train()  # warmup/jit
     t0 = time.perf_counter()
-    steps0 = None
     for i in range(iters):
-        res = next(it)
+        res = algo.train()
     steps = res["counters"]["num_steps_trained"]
     dt = time.perf_counter() - t0
-    ws.stop()
+    algo.stop()
     return steps / dt
 
 

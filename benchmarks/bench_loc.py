@@ -23,15 +23,19 @@ def count_lines(obj: Any) -> int:
 
 
 def run() -> List[Tuple[str, float, str]]:
-    from repro.core import operators, plans
+    # Count the declarative graph builders (repro.flow.plans), not the
+    # compat shims in repro.core.plans — the builders are where the
+    # algorithm is actually expressed.
+    from repro.core import operators
+    from repro.flow import plans
     from repro.rl import lowlevel
 
     shared_ops = count_lines(operators)
 
     rows: List[Tuple[str, float, str]] = []
     pairs: Dict[str, Tuple[Any, Any]] = {
-        "a3c": (plans.a3c_plan, lowlevel.a3c_lowlevel),
-        "apex": (plans.apex_plan, lowlevel.apex_lowlevel),
+        "a3c": (plans.build_a3c, lowlevel.a3c_lowlevel),
+        "apex": (plans.build_apex, lowlevel.apex_lowlevel),
     }
     for name, (flow_fn, low_fn) in pairs.items():
         flow = count_lines(flow_fn)
@@ -39,7 +43,7 @@ def run() -> List[Tuple[str, float, str]]:
         rows.append((f"loc_{name}_flow", flow, f"lowlevel={low} ratio={low/flow:.1f}x"))
     # Flow-only plans (the paper's point: these need no low-level port at all).
     for name in ["a2c", "ppo", "dqn", "impala", "maml", "mbpo", "multi_agent_ppo_dqn"]:
-        fn = getattr(plans, f"{name}_plan")
+        fn = getattr(plans, f"build_{name}")
         rows.append((f"loc_{name}_flow", count_lines(fn), f"shared_ops={shared_ops}"))
     return rows
 

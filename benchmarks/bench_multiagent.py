@@ -22,7 +22,7 @@ from repro.core.operators import (
     TrainOneStep,
     UpdateTargetNetwork,
 )
-from repro.core.plans import multi_agent_ppo_dqn_plan
+from repro.flow import Algorithm
 
 
 def _iters_per_s(it, iters: int, warmup: int = 12) -> float:
@@ -87,9 +87,11 @@ def run(iters: int = 20) -> List[Tuple[str, float, str]]:
 
     ws = multiagent_workers()
     rp = replay_pool(1, batch=32, starts=64)
-    combined = multi_agent_ppo_dqn_plan(ws, rp, ppo_batch_size=128, dqn_target_update_freq=500)
-    r_comb = _iters_per_s(combined, iters)
-    ws.stop(); rp.stop()
+    algo = Algorithm.from_plan(
+        "multi_agent_ppo_dqn", ws, rp, ppo_batch_size=128, dqn_target_update_freq=500
+    )
+    r_comb = _iters_per_s(algo, iters)
+    algo.stop()
 
     # Amdahl ideal for time-sharing one driver: one (ppo, dqn) PAIR costs
     # 1/r_ppo + 1/r_dqn.  Round-robin emits branches ~1:1, so pair rate is

@@ -1,13 +1,16 @@
 """Paper §5.2: Ape-X — three concurrent sub-flows (store / replay / update)
-composed with Concurrently, prioritized replay actors, learner thread.
+composed around a learner-thread resource, run through the Algorithm facade.
+``algo.stop()`` (via the context manager) joins the learner thread and stops
+all actors — no manual thread bookkeeping in the driver.
 
 Run: PYTHONPATH=src python examples/apex_dqn.py
 """
 
 import time
 
-import repro.core as flow
 from repro.core.actor import create_colocated
+from repro.core.workers import WorkerSet
+from repro.flow import Algorithm
 from repro.rl import CartPole, DQNPolicy, ReplayBuffer, RolloutWorker
 
 
@@ -19,26 +22,26 @@ def main():
             seed=0, worker_index=i, epsilon=0.4 ** (1 + i),
         )
 
-    workers = flow.WorkerSet.create(factory, 3)
+    workers = WorkerSet.create(factory, 3)
     replay_actors = create_colocated(
         lambda: ReplayBuffer(capacity=50000, sample_batch_size=64,
                              learning_starts=1000, prioritized=True),
         2,
     )
 
-    plan = flow.apex_plan(workers, replay_actors, target_update_freq=2000)
-    t0 = time.time()
-    for i, result in zip(range(30), plan):
-        c = result["counters"]
-        print(
-            f"iter {i:2d} sampled={c['num_steps_sampled']:7d} "
-            f"trained={c['num_steps_trained']:6d} "
-            f"reward={result['episodes']['episode_reward_mean']:.1f} "
-            f"({time.time() - t0:.0f}s)"
-        )
-    plan.learner_thread.stop()
-    workers.stop()
-    replay_actors.stop()
+    with Algorithm.from_plan(
+        "apex", workers, replay_actors, target_update_freq=2000
+    ) as algo:
+        t0 = time.time()
+        for i in range(30):
+            result = algo.train()
+            c = result["counters"]
+            print(
+                f"iter {i:2d} sampled={c['num_steps_sampled']:7d} "
+                f"trained={c['num_steps_trained']:6d} "
+                f"reward={result['episodes']['episode_reward_mean']:.1f} "
+                f"({time.time() - t0:.0f}s)"
+            )
 
 
 if __name__ == "__main__":

@@ -1,13 +1,14 @@
 """IMPALA: async rollouts feeding a learner thread, V-trace off-policy
 correction, periodic weight broadcast — the paper's most complex Table 2
-algorithm (694 -> ~30 lines of plan).
+algorithm (694 -> ~30 lines of flow graph), via the Algorithm facade.
 
 Run: PYTHONPATH=src python examples/impala_vtrace.py
 """
 
 import time
 
-import repro.core as flow
+from repro.core.workers import WorkerSet
+from repro.flow import Algorithm
 from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
 
 
@@ -22,20 +23,20 @@ def main():
             seed=0, worker_index=i,
         )
 
-    workers = flow.WorkerSet.create(factory, 3)
-    plan = flow.impala_plan(workers, train_batch_size=512, num_async=2)
-
-    t0 = time.time()
-    for i, result in zip(range(30), plan):
-        c = result["counters"]
-        print(
-            f"iter {i:2d} sampled={c['num_steps_sampled']:7d} "
-            f"trained={c['num_steps_trained']:6d} "
-            f"reward={result['episodes']['episode_reward_mean']:.1f} "
-            f"({time.time() - t0:.0f}s)"
-        )
-    plan.learner_thread.stop()
-    workers.stop()
+    workers = WorkerSet.create(factory, 3)
+    with Algorithm.from_plan(
+        "impala", workers, train_batch_size=512, num_async=2
+    ) as algo:
+        t0 = time.time()
+        for i in range(30):
+            result = algo.train()
+            c = result["counters"]
+            print(
+                f"iter {i:2d} sampled={c['num_steps_sampled']:7d} "
+                f"trained={c['num_steps_trained']:6d} "
+                f"reward={result['episodes']['episode_reward_mean']:.1f} "
+                f"({time.time() - t0:.0f}s)"
+            )
 
 
 if __name__ == "__main__":

@@ -1,13 +1,14 @@
 """Model-based RL (MBPO-style) as a dataflow: real rollouts feed a replay
 buffer; a dynamics ensemble trains on real batches; the policy trains on
 synthetic rollouts through the learned model — three concurrent sub-flows
-composed with Concurrently (paper §2.2's 'breaks the mold' pattern).
+(paper §2.2's 'breaks the mold' pattern), via the Algorithm facade.
 
 Run: PYTHONPATH=src python examples/mbpo_model_based.py
 """
 
-import repro.core as flow
 from repro.core.actor import ActorPool
+from repro.core.workers import WorkerSet
+from repro.flow import Algorithm
 from repro.rl import ActorCriticPolicy, CartPole, ReplayBuffer
 from repro.rl.model_based import ModelBasedWorker
 
@@ -20,22 +21,21 @@ def main():
             ensemble_size=2, synth_rollout_len=8, synth_batch=128,
         )
 
-    workers = flow.WorkerSet.create(factory, 2)
+    workers = WorkerSet.create(factory, 2)
     replay = ActorPool.from_targets(
         [ReplayBuffer(capacity=20000, sample_batch_size=256, learning_starts=512,
                       prioritized=False)]
     )
-    plan = flow.mbpo_plan(workers, replay, model_train_weight=2)
-    for i, result in zip(range(40), plan):
-        lw = workers.local_worker()
-        print(
-            f"iter {i:2d} real={result['counters']['num_steps_sampled']:6d} "
-            f"synthetic_trained={result['counters']['num_steps_trained']:6d} "
-            f"dyn_loss={sum(lw.dyn_losses)/max(len(lw.dyn_losses),1):.4f} "
-            f"reward={result['episodes']['episode_reward_mean']:.1f}"
-        )
-    workers.stop()
-    replay.stop()
+    with Algorithm.from_plan("mbpo", workers, replay, model_train_weight=2) as algo:
+        for i in range(40):
+            result = algo.train()
+            lw = workers.local_worker()
+            print(
+                f"iter {i:2d} real={result['counters']['num_steps_sampled']:6d} "
+                f"synthetic_trained={result['counters']['num_steps_trained']:6d} "
+                f"dyn_loss={sum(lw.dyn_losses)/max(len(lw.dyn_losses),1):.4f} "
+                f"reward={result['episodes']['episode_reward_mean']:.1f}"
+            )
 
 
 if __name__ == "__main__":

@@ -1,11 +1,16 @@
 """Paper §5.3: composing PPO and DQN training for different policies in one
-environment — the composition 'not possible by end users before'.
+environment — the composition 'not possible by end users before'.  The
+duplicated rollout stream and both training branches are visible in the
+graph: run with --dot to print the live Figure 11/12 diagram.
 
-Run: PYTHONPATH=src python examples/multi_agent_ppo_dqn.py
+Run: PYTHONPATH=src python examples/multi_agent_ppo_dqn.py [--dot]
 """
 
-import repro.core as flow
+import argparse
+
 from repro.core.actor import ActorPool
+from repro.core.workers import WorkerSet
+from repro.flow import Algorithm
 from repro.rl import (
     ActorCriticPolicy,
     DQNPolicy,
@@ -16,6 +21,10 @@ from repro.rl import (
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dot", action="store_true", help="print the DOT graph and exit")
+    args = ap.parse_args()
+
     mapping = {0: "ppo_policy", 1: "ppo_policy", 2: "dqn_policy", 3: "dqn_policy"}
     specs = {
         "ppo_policy": {"policy": ActorCriticPolicy(4, 2, loss_kind="ppo"), "algo": "ppo"},
@@ -28,23 +37,26 @@ def main():
             rollout_len=32, seed=0, worker_index=i,
         )
 
-    workers = flow.WorkerSet.create(factory, 2)
+    workers = WorkerSet.create(factory, 2)
     replay = ActorPool.from_targets(
         [ReplayBuffer(capacity=20000, sample_batch_size=64, learning_starts=256)]
     )
 
-    plan = flow.multi_agent_ppo_dqn_plan(
-        workers, replay, ppo_batch_size=512, dqn_target_update_freq=500
-    )
-    for i, result in zip(range(40), plan):
-        c = result["counters"]
-        print(
-            f"iter {i:2d} trained={c['num_steps_trained']:6d} "
-            f"target_updates={c.get('num_target_updates', 0)} "
-            f"reward={result['episodes']['episode_reward_mean']:.1f}"
-        )
-    workers.stop()
-    replay.stop()
+    with Algorithm.from_plan(
+        "multi_agent_ppo_dqn", workers, replay,
+        ppo_batch_size=512, dqn_target_update_freq=500,
+    ) as algo:
+        if args.dot:
+            print(algo.to_dot())
+            return
+        for i in range(40):
+            result = algo.train()
+            c = result["counters"]
+            print(
+                f"iter {i:2d} trained={c['num_steps_trained']:6d} "
+                f"target_updates={c.get('num_target_updates', 0)} "
+                f"reward={result['episodes']['episode_reward_mean']:.1f}"
+            )
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""End-to-end driver: PPO on CartPole via the dataflow plan (paper's own
+"""End-to-end driver: PPO on CartPole via the Algorithm facade (paper's own
 benchmark environment) — trains for a few hundred plan iterations and
 reports the learning curve.
 
@@ -8,7 +8,8 @@ Run: PYTHONPATH=src python examples/ppo_cartpole.py [--iters 150]
 import argparse
 import time
 
-import repro.core as flow
+from repro.core.workers import WorkerSet
+from repro.flow import Algorithm
 from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
 
 
@@ -16,6 +17,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=150)
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--checkpoint", default="", help="save weights here when done")
     args = ap.parse_args()
 
     def factory(i):
@@ -25,25 +27,27 @@ def main():
             algo="ppo", num_envs=8, rollout_len=64, seed=0, worker_index=i,
         )
 
-    workers = flow.WorkerSet.create(factory, args.workers)
-    plan = flow.ppo_plan(
-        workers, train_batch_size=1024, num_sgd_iter=4, sgd_minibatch_size=256
-    )
-
-    t0 = time.time()
-    best = 0.0
-    for i, result in zip(range(args.iters), plan):
-        r = result["episodes"]["episode_reward_mean"]
-        best = max(best, r if r == r else 0.0)
-        if i % 10 == 0:
-            print(
-                f"iter {i:3d}  steps={result['counters']['num_steps_sampled']:7d} "
-                f"reward={r:6.1f}  best={best:6.1f}  ({time.time() - t0:.0f}s)"
-            )
-        if best >= 195.0:
-            print(f"solved at iter {i} ({time.time() - t0:.0f}s)")
-            break
-    workers.stop()
+    workers = WorkerSet.create(factory, args.workers)
+    with Algorithm.from_plan(
+        "ppo", workers, train_batch_size=1024, num_sgd_iter=4, sgd_minibatch_size=256
+    ) as algo:
+        t0 = time.time()
+        best = 0.0
+        for i in range(args.iters):
+            result = algo.train()
+            r = result["episodes"]["episode_reward_mean"]
+            best = max(best, r if r == r else 0.0)
+            if i % 10 == 0:
+                print(
+                    f"iter {i:3d}  steps={result['counters']['num_steps_sampled']:7d} "
+                    f"reward={r:6.1f}  best={best:6.1f}  ({time.time() - t0:.0f}s)"
+                )
+            if best >= 195.0:
+                print(f"solved at iter {i} ({time.time() - t0:.0f}s)")
+                break
+        if args.checkpoint:
+            algo.save(args.checkpoint)
+            print(f"saved checkpoint to {args.checkpoint}")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,16 @@
-"""Quickstart: the A3C dataflow from the paper's Figure 9a, verbatim shape.
+"""Quickstart: the A3C dataflow from the paper's Figure 9a as a declarative
+flow graph, run through the unified ``Algorithm`` facade.
 
-    workers  = create_rollout_workers()
-    grads    = ParallelRollouts -> ComputeGradients -> gather_async
-    apply_op = grads -> ApplyGradients(workers)
-    return ReportMetrics(apply_op, workers)
+    spec  = build_a3c(workers)         # the graph, as a value
+    spec.to_dot()                      # render it (paper Fig 9a)
+    algo  = Algorithm.from_plan(spec, workers)
+    algo.train()                       # side effects start here
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
-import repro.core as flow
+import repro.flow as flow
+from repro.core.workers import WorkerSet
 from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
 
 
@@ -19,27 +21,25 @@ def create_rollout_workers(n=2):
             num_envs=4, rollout_len=32, seed=0, worker_index=i,
         )
 
-    return flow.WorkerSet.create(factory, n)
+    return WorkerSet.create(factory, n)
 
 
 def main():
-    # type: List[RolloutActor]
     workers = create_rollout_workers()
-    # type: Iter[Gradients]
-    grads = flow.par_compute_gradients(workers).gather_async()
-    # type: Iter[TrainStats]
-    apply_op = grads.for_each(flow.ApplyGradients(workers))
-    # type: Iter[Metrics]
-    metrics = flow.StandardMetricsReporting(apply_op, workers)
+    spec = flow.build_a3c(workers)
 
-    for i, result in zip(range(20), metrics):
-        c = result["counters"]
-        ep = result["episodes"]
-        print(
-            f"iter {i:2d}  sampled={c['num_steps_sampled']:6d} "
-            f"reward_mean={ep['episode_reward_mean']:.1f}"
-        )
-    workers.stop()
+    # The dataflow graph is a first-class value: inspect it before running.
+    print(spec.to_dot())
+
+    with flow.Algorithm.from_plan(spec, workers) as algo:
+        for i in range(20):
+            result = algo.train()
+            c = result["counters"]
+            ep = result["episodes"]
+            print(
+                f"iter {i:2d}  sampled={c['num_steps_sampled']:6d} "
+                f"reward_mean={ep['episode_reward_mean']:.1f}"
+            )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the fast test suite (excludes tests marked `slow`).
+# Run the full suite, slow tests included, with: scripts/tier1.sh -m ""
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -m "not slow" "$@"

@@ -64,6 +64,7 @@ class Enqueue:
     """
 
     share_across_shards = True
+    flow_pure = True  # always returns the item (never NextValueNotReady)
 
     def __init__(self, out_queue: "queue.Queue", block: bool = False):
         self.queue = out_queue

@@ -146,6 +146,7 @@ class ApplyGradients:
     actor (A3C) or all actors (synchronous algorithms)."""
 
     share_across_shards = True
+    flow_pure = True  # never emits NextValueNotReady (see repro.flow.spec.pure)
 
     def __init__(self, workers: WorkerSet, update_all: bool = False):
         self.workers = workers
@@ -172,6 +173,8 @@ class ApplyGradients:
 class AverageGradients:
     """List[(grads, info)] -> (averaged grads, merged info) (sync A2C)."""
 
+    flow_pure = True
+
     def __call__(self, items: Sequence[Tuple[Any, Dict[str, Any]]]) -> Tuple[Any, Dict]:
         import jax
 
@@ -187,6 +190,7 @@ class TrainOneStep:
     local worker, then broadcast new weights (paper Fig 10b/11b)."""
 
     share_across_shards = True
+    flow_pure = True
 
     def __init__(
         self,
@@ -255,6 +259,8 @@ class ConcatBatches:
 class SelectExperiences:
     """Keep only the given policies' experiences (multi-agent, paper §5.3)."""
 
+    flow_pure = True
+
     def __init__(self, policy_ids: Sequence[str]):
         self.policy_ids = list(policy_ids)
 
@@ -266,6 +272,8 @@ class SelectExperiences:
 
 class StandardizeFields:
     """Z-score the given columns (PPO advantages)."""
+
+    flow_pure = True
 
     def __init__(self, fields: Sequence[str]):
         self.fields = list(fields)
@@ -292,6 +300,7 @@ class StoreToReplayBuffer:
     """Send each batch to a random replay actor (Ape-X store sub-flow)."""
 
     share_across_shards = True
+    flow_pure = True
 
     def __init__(self, actors: ActorPool, seed: int = 0):
         self.actors = actors
@@ -311,6 +320,7 @@ class UpdateReplayPriorities:
     """
 
     share_across_shards = True
+    flow_pure = True
 
     def __call__(self, item: Tuple[Tuple[Any, Dict], VirtualActor]) -> Any:
         (batch, info), actor = item
@@ -327,6 +337,7 @@ class UpdateTargetNetwork:
     """Periodically sync the target network (DQN family)."""
 
     share_across_shards = True
+    flow_pure = True
 
     def __init__(self, workers: WorkerSet, target_update_freq: int):
         self.workers = workers
@@ -348,6 +359,7 @@ class UpdateWorkerWeights:
     (Ape-X: max_weight_sync_delay staleness control)."""
 
     share_across_shards = True
+    flow_pure = True
 
     def __init__(self, workers: WorkerSet, max_weight_sync_delay: int = 400):
         self.workers = workers
@@ -374,6 +386,7 @@ class ReportMetrics:
     """item -> training-result dict, merging the shared metrics context."""
 
     share_across_shards = True
+    flow_pure = True
 
     def __init__(self, workers: Optional[WorkerSet] = None):
         self.workers = workers

@@ -1,39 +1,31 @@
-"""Execution plans: the paper's Table 2 algorithm suite as dataflow graphs.
+"""Execution plans: compat shims over the declarative flow graphs.
 
-Each plan is a handful of lines of operator composition — the paper's central
-claim (2–9× LOC reduction, Figure 9/10/11/12/A2).  ``benchmarks/bench_loc.py``
-counts these functions against the low-level ports in
-``repro/rl/lowlevel.py`` to reproduce Table 2.
+The paper's Table 2 algorithm suite now lives in ``repro.flow.plans`` as
+``FlowSpec`` graph builders — the graph is a first-class value there
+(inspectable via ``to_dot()``, optimizable via stage fusion, runnable via
+``repro.flow.Algorithm``).  These functions keep the original eager plan
+signatures working: each builds the graph, compiles it, and returns the
+result iterator, with side effects (learner-thread start) deferred to the
+first pull instead of firing at build time.
+
+New code should prefer::
+
+    from repro.flow import Algorithm
+    algo = Algorithm.from_plan("apex", workers, replay_actors)
+
+``benchmarks/bench_loc.py`` counts the flow builders (not these shims)
+against the low-level ports in ``repro/rl/lowlevel.py`` for Table 2.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence
-
-import numpy as np
+from typing import Dict, Sequence
 
 from repro.core.actor import ActorPool
-from repro.core.concurrency import Concurrently, Dequeue, Enqueue
 from repro.core.iterators import LocalIterator
-from repro.core.learner_thread import LearnerThread
-from repro.core.operators import (
-    ApplyGradients,
-    AverageGradients,
-    ConcatBatches,
-    ParallelRollouts,
-    Replay,
-    ReportMetrics,
-    SelectExperiences,
-    StandardizeFields,
-    StandardMetricsReporting,
-    StoreToReplayBuffer,
-    TrainOneStep,
-    UpdateReplayPriorities,
-    UpdateTargetNetwork,
-    UpdateWorkerWeights,
-    par_compute_gradients,
-)
 from repro.core.workers import WorkerSet
+from repro.flow import plans as flow_plans
+from repro.flow.spec import FlowSpec
 
 __all__ = [
     "a3c_plan",
@@ -50,48 +42,47 @@ __all__ = [
 ]
 
 
-# --------------------------------------------------------------------- A3C
+def _as_plan_iterator(spec: FlowSpec) -> LocalIterator[Dict]:
+    """Compile a flow graph and expose the legacy plan-iterator surface.
+
+    The returned iterator carries ``.flow`` (the CompiledFlow) and, when the
+    graph declares one, ``.learner_thread`` — kept so existing drivers'
+    ``plan.learner_thread.stop()`` still works.  The learner thread only
+    starts on the first pull.
+    """
+    compiled = spec.compile()
+    it = compiled.iterator()
+    it.flow = compiled
+    learner = compiled.runtime.resources.get("learner")
+    if learner is not None:
+        it.learner_thread = learner
+    return it
+
+
 def a3c_plan(workers: WorkerSet, num_async: int = 1) -> LocalIterator[Dict]:
-    """Figure 9a: async per-worker gradients applied centrally."""
-    grads = par_compute_gradients(workers).gather_async(num_async=num_async)
-    apply_op = grads.for_each(ApplyGradients(workers, update_all=False))
-    return StandardMetricsReporting(apply_op, workers)
+    return _as_plan_iterator(flow_plans.build_a3c(workers, num_async=num_async))
 
 
-# --------------------------------------------------------------------- A2C
 def a2c_plan(workers: WorkerSet) -> LocalIterator[Dict]:
-    """Synchronous A3C: barrier-gather gradients, average, apply, broadcast."""
-    grads = par_compute_gradients(workers).batch_across_shards()
-    apply_op = grads.for_each(AverageGradients()).for_each(
-        ApplyGradients(workers, update_all=True)
-    )
-    return StandardMetricsReporting(apply_op, workers)
+    return _as_plan_iterator(flow_plans.build_a2c(workers))
 
 
-# --------------------------------------------------------------------- PPO
 def ppo_plan(
     workers: WorkerSet,
     train_batch_size: int = 4000,
     num_sgd_iter: int = 8,
     sgd_minibatch_size: int = 128,
 ) -> LocalIterator[Dict]:
-    """Synchronous sample -> concat -> standardize -> multi-epoch SGD."""
-    rollouts = ParallelRollouts(workers, mode="bulk_sync")
-    train_op = (
-        rollouts.for_each(ConcatBatches(train_batch_size))
-        .for_each(StandardizeFields(["advantages"]))
-        .for_each(
-            TrainOneStep(
-                workers,
-                num_sgd_iter=num_sgd_iter,
-                sgd_minibatch_size=sgd_minibatch_size,
-            )
+    return _as_plan_iterator(
+        flow_plans.build_ppo(
+            workers,
+            train_batch_size=train_batch_size,
+            num_sgd_iter=num_sgd_iter,
+            sgd_minibatch_size=sgd_minibatch_size,
         )
     )
-    return StandardMetricsReporting(train_op, workers)
 
 
-# --------------------------------------------------------------------- DQN
 def dqn_plan(
     workers: WorkerSet,
     replay_actors: ActorPool,
@@ -99,36 +90,17 @@ def dqn_plan(
     store_weight: int = 1,
     replay_weight: int = 1,
 ) -> LocalIterator[Dict]:
-    """Store/replay sub-flows composed round-robin (rate-limited 1:1)."""
-    rollouts = ParallelRollouts(workers, mode="bulk_sync")
-    store_op = rollouts.for_each(StoreToReplayBuffer(replay_actors))
-
-    # Train on replayed batches, then push new priorities back to the source
-    # replay actor (fine-grained message passing).
-    train = TrainOneStep(workers)
-
-    def _train_keeping_actor(pair):
-        batch, actor = pair
-        out = train(batch)  # (batch, info)
-        return out, actor
-
-    replay_op = (
-        Replay(replay_actors)
-        .zip_with_source_actor()
-        .for_each(_train_keeping_actor)
-        .for_each(UpdateReplayPriorities())
-        .for_each(UpdateTargetNetwork(workers, target_update_freq))
+    return _as_plan_iterator(
+        flow_plans.build_dqn(
+            workers,
+            replay_actors,
+            target_update_freq=target_update_freq,
+            store_weight=store_weight,
+            replay_weight=replay_weight,
+        )
     )
-    merged = Concurrently(
-        [store_op, replay_op],
-        mode="round_robin",
-        output_indexes=[1],
-        round_robin_weights=[store_weight, replay_weight],
-    )
-    return StandardMetricsReporting(merged, workers)
 
 
-# -------------------------------------------------------------------- Ape-X
 def apex_plan(
     workers: WorkerSet,
     replay_actors: ActorPool,
@@ -137,86 +109,34 @@ def apex_plan(
     num_async_rollouts: int = 2,
     num_async_replay: int = 4,
 ) -> LocalIterator[Dict]:
-    """Listing A3: three concurrent sub-flows around a learner thread."""
-    learner = LearnerThread(workers.local_worker())
-    learner.start()
-
-    # (1) rollouts -> replay actors; fine-grained weight refresh.
-    rollouts = ParallelRollouts(workers, mode="async", num_async=num_async_rollouts)
-    store_op = (
-        rollouts.for_each(StoreToReplayBuffer(replay_actors))
-        .zip_with_source_actor()
-        .for_each(UpdateWorkerWeights(workers, max_weight_sync_delay))
+    return _as_plan_iterator(
+        flow_plans.build_apex(
+            workers,
+            replay_actors,
+            target_update_freq=target_update_freq,
+            max_weight_sync_delay=max_weight_sync_delay,
+            num_async_rollouts=num_async_rollouts,
+            num_async_replay=num_async_replay,
+        )
     )
 
-    # (2) replayed batches -> learner in-queue.
-    replay_op = (
-        Replay(replay_actors, num_async=num_async_replay)
-        .zip_with_source_actor()
-        .for_each(Enqueue(learner.inqueue, block=True))
-    )
 
-    # (3) learner out-queue -> priority updates + target sync + metrics.
-    def _record(item):
-        actor, batch, info = item
-        from repro.core.metrics import STEPS_TRAINED_COUNTER, get_metrics
-
-        get_metrics().counters[STEPS_TRAINED_COUNTER] += batch.count
-        return ((batch, info), actor)
-
-    update_op = (
-        Dequeue(learner.outqueue, check=learner.is_alive)
-        .for_each(_record)
-        .for_each(UpdateReplayPriorities())
-        .for_each(UpdateTargetNetwork(workers, target_update_freq))
-    )
-
-    merged = Concurrently(
-        [store_op, replay_op, update_op], mode="async", output_indexes=[2]
-    )
-    it = StandardMetricsReporting(merged, workers)
-    it.learner_thread = learner  # exposed so drivers can stop it
-    return it
-
-
-# ------------------------------------------------------------------- IMPALA
 def impala_plan(
     workers: WorkerSet,
     train_batch_size: int = 512,
     num_async: int = 2,
     broadcast_interval: int = 1,
 ) -> LocalIterator[Dict]:
-    """Async rollouts -> learner thread -> periodic weight broadcast."""
-    learner = LearnerThread(workers.local_worker())
-    learner.start()
-
-    rollouts = ParallelRollouts(workers, mode="async", num_async=num_async)
-    enqueue_op = rollouts.for_each(ConcatBatches(train_batch_size)).for_each(
-        Enqueue(learner.inqueue, block=True)
+    return _as_plan_iterator(
+        flow_plans.build_impala(
+            workers,
+            train_batch_size=train_batch_size,
+            num_async=num_async,
+            broadcast_interval=broadcast_interval,
+        )
     )
 
-    state = {"since_broadcast": 0}
 
-    def _broadcast(item):
-        _actor, batch, info = item
-        from repro.core.metrics import STEPS_TRAINED_COUNTER, get_metrics
-
-        get_metrics().counters[STEPS_TRAINED_COUNTER] += batch.count
-        state["since_broadcast"] += 1
-        if state["since_broadcast"] >= broadcast_interval and learner.weights_updated:
-            learner.weights_updated = False
-            state["since_broadcast"] = 0
-            workers.sync_weights()
-        return batch, info
-
-    update_op = Dequeue(learner.outqueue, check=learner.is_alive).for_each(_broadcast)
-    merged = Concurrently([enqueue_op, update_op], mode="async", output_indexes=[1])
-    it = StandardMetricsReporting(merged, workers)
-    it.learner_thread = learner
-    return it
-
-
-# ---------------------------------------------------------------------- SAC
 def sac_plan(
     workers: WorkerSet,
     replay_actors: ActorPool,
@@ -224,107 +144,53 @@ def sac_plan(
     store_weight: int = 1,
     replay_weight: int = 1,
 ) -> LocalIterator[Dict]:
-    """Off-policy continuous control: same dataflow shape as DQN."""
-    return dqn_plan(
-        workers,
-        replay_actors,
-        target_update_freq=target_update_freq,
-        store_weight=store_weight,
-        replay_weight=replay_weight,
+    return _as_plan_iterator(
+        flow_plans.build_sac(
+            workers,
+            replay_actors,
+            target_update_freq=target_update_freq,
+            store_weight=store_weight,
+            replay_weight=replay_weight,
+        )
     )
 
 
-# --------------------------------------------------------------------- MAML
 def maml_plan(workers: WorkerSet, inner_steps: int = 1) -> LocalIterator[Dict]:
-    """Figure A2: nested optimization — inner adaptation on workers, meta
-    update on the driver, broadcast."""
-
-    def _inner_adaptation(w: Any) -> Any:
-        # Pre-adaptation rollouts, inner-loop gradient steps (on the worker's
-        # own model ensemble member), post-adaptation rollouts.
-        pre = w.sample()
-        for _ in range(inner_steps):
-            w.inner_adapt(pre)
-        post = w.sample()
-        return {"pre": pre, "post": post}
-
-    from repro.core.iterators import ParallelIterator
-
-    rollouts = ParallelIterator.from_actors(
-        workers.remote_workers(), _inner_adaptation, name="MAMLInner"
-    )
-    meta = TrainOneStep(workers)
-
-    def _meta_update(items: Sequence[Dict[str, Any]]) -> Any:
-        from repro.rl.sample_batch import SampleBatch
-
-        batch = SampleBatch.concat_samples([d["post"] for d in items])
-        out = meta(batch)
-        # TrainOneStep already broadcast new weights; workers reset inner state.
-        for f in workers.remote_workers().broadcast("reset_inner"):
-            f.result()
-        return out
-
-    train_op = rollouts.batch_across_shards().for_each(_meta_update)
-    return StandardMetricsReporting(train_op, workers)
+    return _as_plan_iterator(flow_plans.build_maml(workers, inner_steps=inner_steps))
 
 
-# --------------------------------------------------------------------- APPO
 def appo_plan(
     workers: WorkerSet,
     train_batch_size: int = 512,
     num_async: int = 2,
     broadcast_interval: int = 1,
 ) -> LocalIterator[Dict]:
-    """Async PPO (IMPACT/APPO [Luo et al. 2020]): IMPALA's async pipeline
-    with a clipped-surrogate learner — same dataflow, different numerics,
-    which is exactly the paper's separation of concerns."""
-    return impala_plan(
-        workers,
-        train_batch_size=train_batch_size,
-        num_async=num_async,
-        broadcast_interval=broadcast_interval,
+    return _as_plan_iterator(
+        flow_plans.build_appo(
+            workers,
+            train_batch_size=train_batch_size,
+            num_async=num_async,
+            broadcast_interval=broadcast_interval,
+        )
     )
 
 
-# --------------------------------------------------------------- MBPO
 def mbpo_plan(
     workers: WorkerSet,
     replay_actors: ActorPool,
     model_train_weight: int = 1,
     policy_train_weight: int = 1,
 ) -> LocalIterator[Dict]:
-    """Model-based RL as three concurrent sub-flows (paper §2.2: the pattern
-    that 'breaks the mold' of model-free templates):
-
-      (1) real rollouts -> replay buffer
-      (2) replayed real batches -> supervised dynamics-model training
-      (3) replayed states -> synthetic on-policy rollouts through the
-          learned model -> policy TrainOneStep
-    """
-    lw = workers.local_worker()
-    rollouts = ParallelRollouts(workers, mode="bulk_sync")
-    store_op = rollouts.for_each(StoreToReplayBuffer(replay_actors))
-
-    model_op = Replay(replay_actors).for_each(lambda b: lw.train_dynamics(b))
-
-    train = TrainOneStep(workers)
-    policy_op = (
-        Replay(replay_actors)
-        .for_each(lambda b: lw.synthesize(b))
-        .for_each(train)
+    return _as_plan_iterator(
+        flow_plans.build_mbpo(
+            workers,
+            replay_actors,
+            model_train_weight=model_train_weight,
+            policy_train_weight=policy_train_weight,
+        )
     )
 
-    merged = Concurrently(
-        [store_op, model_op, policy_op],
-        mode="round_robin",
-        output_indexes=[2],
-        round_robin_weights=[1, model_train_weight, policy_train_weight],
-    )
-    return StandardMetricsReporting(merged, workers)
 
-
-# ------------------------------------------------- Multi-agent composition
 def multi_agent_ppo_dqn_plan(
     workers: WorkerSet,
     replay_actors: ActorPool,
@@ -333,46 +199,13 @@ def multi_agent_ppo_dqn_plan(
     ppo_batch_size: int = 1024,
     dqn_target_update_freq: int = 500,
 ) -> LocalIterator[Dict]:
-    """Figure 11/12: one environment, PPO trains some policies, DQN others.
-
-    The rollout stream is duplicated; each branch selects its policies and
-    runs its own training dataflow; the union composes them.
-    """
-    rollouts = ParallelRollouts(workers, mode="bulk_sync")
-    ppo_rollouts, dqn_rollouts = rollouts.duplicate(2)
-
-    ppo_op = (
-        ppo_rollouts.for_each(SelectExperiences(ppo_policies))
-        .for_each(ConcatBatches(ppo_batch_size))
-        .for_each(StandardizeFields(["advantages"]))
-        .for_each(TrainOneStep(workers, policies=ppo_policies))
+    return _as_plan_iterator(
+        flow_plans.build_multi_agent_ppo_dqn(
+            workers,
+            replay_actors,
+            ppo_policies=ppo_policies,
+            dqn_policies=dqn_policies,
+            ppo_batch_size=ppo_batch_size,
+            dqn_target_update_freq=dqn_target_update_freq,
+        )
     )
-
-    def _select_dqn(batch):
-        selected = SelectExperiences(dqn_policies)(batch)
-        # Replay stores flat SampleBatches; all dqn policies share the buffer.
-        from repro.rl.sample_batch import SampleBatch
-
-        return SampleBatch.concat_samples(list(selected.policy_batches.values()))
-
-    store_op = dqn_rollouts.for_each(_select_dqn).for_each(
-        StoreToReplayBuffer(replay_actors)
-    )
-    train_dqn = TrainOneStep(workers, policies=dqn_policies)
-
-    def _train_keeping_actor(pair):
-        batch, actor = pair
-        return train_dqn(batch), actor
-
-    dqn_op = (
-        Replay(replay_actors)
-        .zip_with_source_actor()
-        .for_each(_train_keeping_actor)
-        .for_each(UpdateReplayPriorities())
-        .for_each(UpdateTargetNetwork(workers, dqn_target_update_freq))
-    )
-
-    merged = Concurrently(
-        [ppo_op, store_op, dqn_op], mode="round_robin", output_indexes=[0, 2]
-    )
-    return StandardMetricsReporting(merged, workers)

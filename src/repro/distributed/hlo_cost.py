@@ -47,6 +47,40 @@ _CONST_RE = re.compile(r"constant\((\d+)\)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 
 
+def _split_operands(arglist: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only.
+
+    Operands may be typed (``f32[64,64]{1,0} %gte.4``), so commas inside
+    ``[]``/``{}`` must not split.
+    """
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in arglist:
+        if ch in "[{(":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _operand_name(operand: str) -> str:
+    """'f32[64,64]{1,0} %get-tuple-element.4' -> 'get-tuple-element.4'."""
+    return operand.split()[-1].lstrip("%") if operand.split() else ""
+
+
+def _operand_names(arglist: str) -> List[str]:
+    return [_operand_name(o) for o in _split_operands(arglist)]
+
+
 def _shape_elems(dims: str) -> int:
     n = 1
     if dims:
@@ -129,10 +163,11 @@ def _dot_flops(instr: _Instr, shapes: Dict[str, Tuple[str, List[int]]]) -> float
     ops = re.search(r"\bdot\(([^)]*)\)", instr.rhs)
     if not ops:
         return 0.0
-    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    operands = _split_operands(ops.group(1))
     contract = 1
     if mdims and operands:
-        lhs = shapes.get(operands[0])
+        # Typed operands carry their shape inline; otherwise resolve by name.
+        lhs = _first_shape(operands[0]) or shapes.get(_operand_name(operands[0]))
         if lhs:
             for d in mdims.group(1).split(","):
                 if d:
@@ -180,7 +215,7 @@ def _param_access_bytes(comp: str, comps: Dict[str, List[_Instr]]) -> Dict[int, 
             ops_m = re.search(r"\b([a-z\-]+)\(([^)]*)\)", ins.rhs)
             if not ops_m:
                 continue
-            opnames = [o.strip().lstrip("%") for o in ops_m.group(2).split(",")]
+            opnames = _operand_names(ops_m.group(2))
             if pname not in opnames:
                 continue
             kind = ops_m.group(1)
@@ -239,9 +274,9 @@ def _cost_of(
             upd = res
             if ops_m:
                 sizes = [
-                    _size(shapes[o.strip().lstrip("%")])
-                    for o in ops_m.group(1).split(",")
-                    if o.strip().lstrip("%") in shapes
+                    _size(shapes[o])
+                    for o in _operand_names(ops_m.group(1))
+                    if o in shapes
                 ]
                 if sizes:
                     upd = min(sizes)
@@ -256,9 +291,8 @@ def _cost_of(
             )
         ops_m = re.search(r"\b[a-z\-]+\(([^)]*)\)", ins.rhs)
         if ops_m:
-            for oi, o in enumerate(ops_m.group(1).split(",")):
-                o = o.strip().lstrip("%")
-                shp = shapes.get(o)
+            for oi, o in enumerate(_split_operands(ops_m.group(1))):
+                shp = shapes.get(_operand_name(o)) or _first_shape(o)
                 if shp is not None:
                     total += eff.get(oi, _size(shp)) if eff else _size(shp)
         return total

@@ -1,0 +1,58 @@
+"""repro.flow: declarative dataflow-graph IR + unified Algorithm runtime.
+
+The three layers (build / optimize+lower / run):
+
+    from repro.flow import FlowSpec, Algorithm, build_apex
+
+    spec = build_apex(workers, replay_actors)     # declarative graph
+    print(spec.to_dot())                          # paper Fig 9-12, live
+    algo = Algorithm.from_plan(spec, workers, replay_actors)
+    result = algo.train()                         # side effects start here
+    algo.stop()                                   # ... and end here
+"""
+
+from repro.flow.algorithm import Algorithm
+from repro.flow.compile import CompiledFlow, FlowRuntime, compose_stages, fuse_for_each
+from repro.flow.plans import (
+    PLAN_BUILDERS,
+    REPLAY_PLANS,
+    build_a2c,
+    build_a3c,
+    build_apex,
+    build_appo,
+    build_dqn,
+    build_impala,
+    build_maml,
+    build_mbpo,
+    build_multi_agent_ppo_dqn,
+    build_ppo,
+    build_sac,
+)
+from repro.flow.spec import FlowSpec, Node, ResourceRef, StageSpec, Stream, pure
+
+__all__ = [
+    "Algorithm",
+    "CompiledFlow",
+    "FlowRuntime",
+    "FlowSpec",
+    "Node",
+    "PLAN_BUILDERS",
+    "REPLAY_PLANS",
+    "ResourceRef",
+    "StageSpec",
+    "Stream",
+    "build_a2c",
+    "build_a3c",
+    "build_apex",
+    "build_appo",
+    "build_dqn",
+    "build_impala",
+    "build_maml",
+    "build_mbpo",
+    "build_multi_agent_ppo_dqn",
+    "build_ppo",
+    "build_sac",
+    "compose_stages",
+    "fuse_for_each",
+    "pure",
+]

@@ -1,0 +1,292 @@
+"""Lowering: FlowSpec -> LocalIterator/ParallelIterator runtime + passes.
+
+``CompiledFlow`` walks the graph from the output node and maps every node
+onto the existing iterator runtime (``repro.core``).  Deferred resources
+(learner threads) are instantiated here but *started* only on the first pull
+of the compiled iterator, and stopped + joined by ``stop()`` — no side
+effects at build or compile time.
+
+Graph-level optimization: ``fuse_for_each`` merges chains of adjacent local
+``for_each`` nodes into a single node whose stages compose into one closure
+(``compose_stages``).  The composition elides the ``NextValueNotReady``
+sentinel check after stages marked pure (``repro.flow.spec.pure`` /
+``flow_pure = True``), so an N-stage chain costs one stage dispatch per item
+instead of N — ``benchmarks/bench_streaming.py`` measures the win.
+"""
+
+from __future__ import annotations
+
+import copy
+import threading
+import types
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.concurrency import Concurrently, Dequeue, Enqueue
+from repro.core.iterators import (
+    LocalIterator,
+    NextValueNotReady,
+    ParallelIterator,
+    from_items,
+)
+from repro.core.learner_thread import LearnerThread
+from repro.core.operators import (
+    ParallelRollouts,
+    Replay,
+    StandardMetricsReporting,
+    par_compute_gradients,
+)
+from repro.flow.spec import EdgeRef, FlowSpec, Node, StageSpec, is_pure
+
+__all__ = ["CompiledFlow", "FlowRuntime", "fuse_for_each", "compose_stages"]
+
+
+# --------------------------------------------------------------------------
+# Optimization pass: stage fusion
+# --------------------------------------------------------------------------
+def fuse_for_each(spec: FlowSpec) -> FlowSpec:
+    """Fuse adjacent local ``for_each`` nodes into single multi-stage nodes.
+
+    Only local stages are fused: parallel ``for_each`` stages keep their
+    per-shard clone semantics from ``ParallelIterator.for_each``.
+    """
+    while True:
+        pair = _find_fusable(spec)
+        if pair is None:
+            return spec
+        spec = _merge_pair(spec, *pair)
+
+
+def _find_fusable(spec: FlowSpec) -> Optional[tuple]:
+    for node in spec.nodes.values():
+        if node.kind != "for_each" or node.parallel or len(node.inputs) != 1:
+            continue
+        pred = spec.nodes[node.inputs[0][0]]
+        if pred.kind != "for_each" or pred.parallel:
+            continue
+        if spec.consumers(pred.id) != 1:
+            continue
+        return (pred.id, node.id)
+    return None
+
+
+def _merge_pair(spec: FlowSpec, pred_id: str, node_id: str) -> FlowSpec:
+    nodes = dict(spec.nodes)
+    pred, node = nodes.pop(pred_id), nodes[node_id]
+    stages = tuple(pred.params["stages"]) + tuple(node.params["stages"])
+    nodes[node_id] = Node(
+        id=node.id,
+        kind="for_each",
+        inputs=pred.inputs,
+        params={"stages": stages},
+        label=" + ".join(s.label for s in stages),
+        parallel=False,
+        num_outputs=1,
+    )
+    return spec.replace_nodes(nodes)
+
+
+def compose_stages(fns: Sequence[Callable]) -> Callable:
+    """Whole-stage codegen: compose stage callables into one flat function.
+
+    Generates a single function body with one direct call per stage — no
+    dispatch loop, no extra call frames — and a ``NextValueNotReady``
+    sentinel check only after stages that may emit it (anything not marked
+    pure).  The same trick streaming/SQL engines use for operator fusion.
+    """
+    if len(fns) == 1:
+        return fns[0]
+    ns: Dict[str, Any] = {f"_f{i}": fn for i, fn in enumerate(fns)}
+    ns["_NotReady"] = NextValueNotReady
+    lines = ["def _fused(item):"]
+    for i, fn in enumerate(fns):
+        lines.append(f"    item = _f{i}(item)")
+        if not is_pure(fn) and i < len(fns) - 1:
+            lines.append("    if isinstance(item, _NotReady): return item")
+    lines.append("    return item")
+    exec("\n".join(lines), ns)  # noqa: S102 - compile-time codegen, no user input
+    fused = ns["_fused"]
+    fused.__name__ = f"fused[{len(fns)}]"
+    fused.flow_pure = all(is_pure(f) for f in fns)
+    return fused
+
+
+# --------------------------------------------------------------------------
+# Runtime: deferred resources
+# --------------------------------------------------------------------------
+class FlowRuntime:
+    """Owns the compiled flow's deferred resources.
+
+    Resources are built (never started) at construction; ``ensure_started``
+    is invoked by the output iterator on its first pull; ``stop`` flags all
+    resources and joins their threads so none outlive the flow.
+    """
+
+    def __init__(self, spec: FlowSpec):
+        self.spec = spec
+        self.resources: Dict[str, Any] = {}
+        self._lock = threading.Lock()
+        self._started = False
+        self._stopped = False
+        for res in spec.resources.values():
+            if res.kind == "learner_thread":
+                params = dict(res.params)
+                workers = params.pop("workers")
+                self.resources[res.name] = LearnerThread(workers.local_worker(), **params)
+            else:
+                raise ValueError(f"unknown resource kind {res.kind!r}")
+
+    def resource(self, name: str) -> Any:
+        return self.resources[name]
+
+    @property
+    def started(self) -> bool:
+        return self._started
+
+    def ensure_started(self) -> None:
+        with self._lock:
+            if self._started or self._stopped:
+                return
+            for r in self.resources.values():
+                r.start()
+            self._started = True
+
+    def stop(self) -> None:
+        with self._lock:
+            self._stopped = True
+            for r in self.resources.values():
+                r.stop()
+            for r in self.resources.values():
+                if r.ident is not None:
+                    r.join(timeout=5.0)
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+class CompiledFlow:
+    """A FlowSpec lowered onto the iterator runtime, ready to run."""
+
+    def __init__(self, spec: FlowSpec, fuse: bool = True):
+        spec.validate()
+        self.source_spec = spec
+        self.spec = fuse_for_each(spec) if fuse else spec
+        self.runtime = FlowRuntime(self.spec)
+        self._cache: Dict[str, Any] = {}
+        inner = self._lower_ref(self.spec.output)
+        self._out = self._deferred_start_wrapper(inner)
+
+    # ------------------------------------------------------------- running
+    def iterator(self) -> LocalIterator:
+        """The result stream; first pull starts deferred resources."""
+        return self._out
+
+    def __iter__(self):
+        return iter(self._out)
+
+    def take(self, n: int) -> List[Any]:
+        return self._out.take(n)
+
+    def stop(self) -> None:
+        """Stop and join all deferred resources (idempotent)."""
+        self.runtime.stop()
+
+    def to_dot(self) -> str:
+        return self.spec.to_dot()
+
+    # ------------------------------------------------------------ internal
+    def _deferred_start_wrapper(self, inner: LocalIterator) -> LocalIterator:
+        runtime = self.runtime
+
+        def _base():
+            runtime.ensure_started()
+            yield from iter(inner)
+
+        return LocalIterator(_base, metrics=inner.metrics, name=self.spec.name)
+
+    def _lower_ref(self, ref: EdgeRef) -> Any:
+        nid, port = ref
+        obj = self._lower(nid)
+        return obj[port] if isinstance(obj, list) else obj
+
+    def _lower(self, nid: str) -> Any:
+        if nid in self._cache:
+            return self._cache[nid]
+        node = self.spec.nodes[nid]
+        out = self._lower_node(node)
+        self._cache[nid] = out
+        return out
+
+    def _lower_node(self, node: Node) -> Any:
+        k, p = node.kind, node.params
+        if k == "rollouts":
+            return ParallelRollouts(p["workers"], mode=p["mode"], num_async=p["num_async"])
+        if k == "replay":
+            return Replay(p["actors"], num_async=p["num_async"])
+        if k == "par_gradients":
+            return par_compute_gradients(p["workers"])
+        if k == "par_source":
+            return ParallelIterator.from_actors(p["pool"], p["pull_fn"], name=node.label)
+        if k == "from_items":
+            return from_items(p["items"], repeat=p["repeat"])
+        if k == "dequeue":
+            res = self.runtime.resource(p["resource"])
+            return Dequeue(res.outqueue, check=res.is_alive)
+
+        up = self._lower_ref(node.inputs[0]) if node.inputs else None
+        if k == "for_each":
+            if isinstance(up, ParallelIterator):
+                # Parallel stages keep ParallelIterator's own per-shard
+                # cloning; apply each stage separately, uninstantiated.
+                for stage in p["stages"]:
+                    fn = stage.fn(self.runtime) if stage.ctx else stage.fn
+                    up = up.for_each(fn)
+                return up
+            fns = [self._instantiate(s) for s in p["stages"]]
+            return up.for_each(compose_stages(fns))
+        if k == "filter":
+            return up.filter(p["predicate"])
+        if k == "zip_source_actor":
+            return up.zip_with_source_actor()
+        if k == "gather_async":
+            return up.gather_async(num_async=p["num_async"])
+        if k == "gather_sync":
+            return up.gather_sync()
+        if k == "batch_across_shards":
+            return up.batch_across_shards()
+        if k == "enqueue":
+            res = self.runtime.resource(p["resource"])
+            return up.for_each(Enqueue(res.inqueue, block=p["block"]))
+        if k == "concurrently":
+            ops = [self._lower_ref(r) for r in node.inputs]
+            return Concurrently(
+                ops,
+                mode=p["mode"],
+                output_indexes=p["output_indexes"],
+                round_robin_weights=p["round_robin_weights"],
+            )
+        if k == "duplicate":
+            return up.duplicate(p["n"])
+        if k == "report":
+            return StandardMetricsReporting(up, p["workers"], report_interval=p["interval"])
+        raise ValueError(f"unknown node kind {k!r}")
+
+    def _instantiate(self, stage: StageSpec) -> Callable:
+        """Materialize a stage callable for this compile.
+
+        Context factories see the runtime; stateful operator instances are
+        deep-copied when possible so recompiling the same spec yields fresh
+        operator state (operators holding live actor handles fall back to
+        the shared instance, matching ``ParallelIterator.for_each``).
+        """
+        if stage.ctx:
+            return stage.fn(self.runtime)
+        fn = stage.fn
+        if not isinstance(fn, types.FunctionType) and not isinstance(fn, type):
+            try:
+                fn = copy.deepcopy(fn)
+            except Exception:
+                fn = stage.fn
+        return fn
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"CompiledFlow({self.spec.name!r}, nodes={len(self.spec.nodes)})"

@@ -1,0 +1,450 @@
+"""FlowSpec: a declarative dataflow-graph IR for RL execution plans.
+
+The paper argues RL algorithms *are* dataflow graphs (§2), yet the eager
+plan functions in ``repro.core.plans`` only materialize that graph implicitly
+inside chained iterators: the topology is gone by the time the plan returns,
+and side effects (learner-thread start) fire at build time.  ``FlowSpec``
+makes the graph a first-class value, following MSRL's split between the
+algorithm's *fragmented dataflow graph* and its execution mapping:
+
+  * **build**    — plan builders assemble a ``FlowSpec``: typed operator
+    nodes (sources, transformations, sequencing, concurrency) connected by
+    stream edges, plus *deferred resources* (learner threads) that are only
+    instantiated/started at run time.
+  * **optimize** — graph passes rewrite the spec (``repro.flow.compile``
+    fuses adjacent ``for_each`` stages into one stage closure).
+  * **lower**    — ``spec.compile()`` maps nodes onto the existing
+    ``LocalIterator``/``ParallelIterator``/``Concurrently`` runtime.
+  * **run**      — pulling from the compiled iterator drives the graph;
+    resources start lazily on the first pull and stop with the flow.
+
+``to_dot()`` renders the graph in Graphviz DOT — the paper's Figures 9–12
+reproduced from live plans instead of hand-drawn.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+__all__ = ["FlowSpec", "Stream", "Node", "StageSpec", "ResourceRef", "pure"]
+
+# Edge endpoint: (producer node id, output port).  Port > 0 only for
+# multi-output nodes (duplicate).
+EdgeRef = Tuple[str, int]
+
+
+def pure(fn: Callable) -> Callable:
+    """Mark a callable as never returning ``NextValueNotReady``.
+
+    The stage-fusion pass elides the sentinel check after pure stages when
+    composing a fused chain; unmarked callables keep the check (safe default).
+    """
+    fn.flow_pure = True  # type: ignore[attr-defined]
+    return fn
+
+
+def is_pure(fn: Callable) -> bool:
+    return bool(getattr(fn, "flow_pure", False))
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """One transformation inside a ``for_each`` node.
+
+    ``ctx=True`` means ``fn`` is a factory ``fn(runtime) -> callable`` run at
+    compile time — the hook for stages that need a deferred resource (e.g.
+    IMPALA's broadcast gate reading the learner thread's dirty bit).
+    """
+
+    fn: Callable
+    label: str
+    ctx: bool = False
+
+
+@dataclass(frozen=True)
+class Node:
+    id: str
+    kind: str
+    inputs: Tuple[EdgeRef, ...]
+    params: Dict[str, Any]
+    label: str
+    parallel: bool  # True -> output stream is a ParallelIterator
+    num_outputs: int = 1
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """A deferred side-effectful runtime object (today: learner threads).
+
+    Declared in the graph, instantiated at compile time, *started* only when
+    the flow is first pulled, stopped and joined on ``stop()``.
+    """
+
+    name: str
+    kind: str
+    params: Dict[str, Any] = field(default_factory=dict)
+
+
+class ResourceRef:
+    """Builder-side handle to a declared resource."""
+
+    def __init__(self, spec: "FlowSpec", name: str):
+        self.spec = spec
+        self.name = name
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"ResourceRef({self.name})"
+
+
+def _fn_label(fn: Any) -> str:
+    return getattr(fn, "__name__", type(fn).__name__)
+
+
+class Stream:
+    """A builder handle to one output edge of a node (fluent API)."""
+
+    def __init__(self, spec: "FlowSpec", node_id: str, port: int = 0, parallel: bool = False):
+        self.spec = spec
+        self.node_id = node_id
+        self.port = port
+        self.parallel = parallel
+
+    @property
+    def ref(self) -> EdgeRef:
+        return (self.node_id, self.port)
+
+    # ----------------------------------------------------- transformations
+    def for_each(self, fn: Callable, label: Optional[str] = None) -> "Stream":
+        """Transformation stage.  On parallel streams the callable runs on the
+        source actor (and is cloned per shard at lowering, as today)."""
+        stage = StageSpec(fn=fn, label=label or _fn_label(fn))
+        node = self.spec._add(
+            "for_each", (self.ref,), {"stages": (stage,)}, stage.label, self.parallel
+        )
+        return Stream(self.spec, node.id, 0, self.parallel)
+
+    def for_each_ctx(self, factory: Callable, label: str) -> "Stream":
+        """Like ``for_each`` but ``factory(runtime)`` builds the callable at
+        compile time, with access to deferred resources."""
+        stage = StageSpec(fn=factory, label=label, ctx=True)
+        node = self.spec._add(
+            "for_each", (self.ref,), {"stages": (stage,)}, label, self.parallel
+        )
+        return Stream(self.spec, node.id, 0, self.parallel)
+
+    def filter(self, predicate: Callable[[Any], bool]) -> "Stream":
+        self._require_local("filter")
+        node = self.spec._add(
+            "filter", (self.ref,), {"predicate": predicate},
+            f"Filter({_fn_label(predicate)})", False,
+        )
+        return Stream(self.spec, node.id)
+
+    def zip_with_source_actor(self) -> "Stream":
+        self._require_local("zip_with_source_actor")
+        node = self.spec._add("zip_source_actor", (self.ref,), {}, "ZipWithSourceActor", False)
+        return Stream(self.spec, node.id)
+
+    # --------------------------------------------------------- sequencing
+    def gather_async(self, num_async: int = 1) -> "Stream":
+        self._require_parallel("gather_async")
+        node = self.spec._add(
+            "gather_async", (self.ref,), {"num_async": num_async},
+            f"GatherAsync(num_async={num_async})", False,
+        )
+        return Stream(self.spec, node.id)
+
+    def gather_sync(self) -> "Stream":
+        self._require_parallel("gather_sync")
+        node = self.spec._add("gather_sync", (self.ref,), {}, "GatherSync", False)
+        return Stream(self.spec, node.id)
+
+    def batch_across_shards(self) -> "Stream":
+        self._require_parallel("batch_across_shards")
+        node = self.spec._add("batch_across_shards", (self.ref,), {}, "BatchAcrossShards", False)
+        return Stream(self.spec, node.id)
+
+    # -------------------------------------------------------- concurrency
+    def duplicate(self, n: int) -> List["Stream"]:
+        """Split the stream into ``n`` buffered copies (paper Fig 8, split)."""
+        self._require_local("duplicate")
+        node = self.spec._add(
+            "duplicate", (self.ref,), {"n": n}, f"Duplicate({n})", False, num_outputs=n
+        )
+        return [Stream(self.spec, node.id, port=i) for i in range(n)]
+
+    def enqueue(self, resource: ResourceRef, block: bool = True) -> "Stream":
+        """Push items into a deferred resource's in-queue (learner feed)."""
+        self._require_local("enqueue")
+        node = self.spec._add(
+            "enqueue", (self.ref,), {"resource": resource.name, "block": block},
+            f"Enqueue({resource.name}.inqueue)", False,
+        )
+        return Stream(self.spec, node.id)
+
+    # -------------------------------------------------------------- sinks
+    def report(self, workers: Any = None, interval: int = 1) -> "Stream":
+        """Standard metrics-reporting sink (result-dict stream)."""
+        self._require_local("report")
+        node = self.spec._add(
+            "report", (self.ref,), {"workers": workers, "interval": interval},
+            "ReportMetrics", False,
+        )
+        return Stream(self.spec, node.id)
+
+    # ------------------------------------------------------------ helpers
+    def _require_parallel(self, op: str) -> None:
+        if not self.parallel:
+            raise TypeError(f"{op}() requires a parallel stream (got local)")
+
+    def _require_local(self, op: str) -> None:
+        if self.parallel:
+            raise TypeError(
+                f"{op}() requires a local stream; sequence the parallel stream "
+                "first (gather_sync/gather_async/batch_across_shards)"
+            )
+
+    def __repr__(self) -> str:  # pragma: no cover
+        kind = "ParStream" if self.parallel else "Stream"
+        return f"{kind}({self.node_id}:{self.port})"
+
+
+class FlowSpec:
+    """The declarative dataflow graph: nodes + stream edges + resources."""
+
+    def __init__(self, name: str = "flow"):
+        self.name = name
+        self.nodes: Dict[str, Node] = {}
+        self.resources: Dict[str, ResourceSpec] = {}
+        self.output: Optional[EdgeRef] = None
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------- construction
+    def _add(
+        self,
+        kind: str,
+        inputs: Tuple[EdgeRef, ...],
+        params: Dict[str, Any],
+        label: str,
+        parallel: bool,
+        num_outputs: int = 1,
+    ) -> Node:
+        for nid, port in inputs:
+            if nid not in self.nodes:
+                raise ValueError(f"unknown input node {nid!r}")
+            if not (0 <= port < self.nodes[nid].num_outputs):
+                raise ValueError(f"invalid port {port} for node {nid!r}")
+        node = Node(
+            id=f"n{next(self._ids)}_{kind}",
+            kind=kind,
+            inputs=tuple(inputs),
+            params=dict(params),
+            label=label,
+            parallel=parallel,
+            num_outputs=num_outputs,
+        )
+        self.nodes[node.id] = node
+        return node
+
+    # ------------------------------------------------------------ sources
+    def rollouts(self, workers: Any, mode: str = "bulk_sync", num_async: int = 1) -> Stream:
+        """Experience stream from the rollout workers (paper Fig 5)."""
+        if mode not in ("raw", "bulk_sync", "async"):
+            raise ValueError(f"unknown rollout mode {mode!r}")
+        node = self._add(
+            "rollouts", (), {"workers": workers, "mode": mode, "num_async": num_async},
+            f"ParallelRollouts({mode})", parallel=(mode == "raw"),
+        )
+        return Stream(self, node.id, parallel=(mode == "raw"))
+
+    def replay(self, actors: Any, num_async: int = 4) -> Stream:
+        """Replayed-batch stream from replay-buffer actors (Ape-X §5.2)."""
+        node = self._add(
+            "replay", (), {"actors": actors, "num_async": num_async}, "Replay", False
+        )
+        return Stream(self, node.id)
+
+    def par_gradients(self, workers: Any) -> Stream:
+        """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C)."""
+        node = self._add("par_gradients", (), {"workers": workers}, "ComputeGradients", True)
+        return Stream(self, node.id, parallel=True)
+
+    def par_source(self, pool: Any, pull_fn: Callable, name: str = "ParSource") -> Stream:
+        """Generic parallel source over an actor pool (MAML inner loop, LM
+        data pipelines)."""
+        node = self._add("par_source", (), {"pool": pool, "pull_fn": pull_fn}, name, True)
+        return Stream(self, node.id, parallel=True)
+
+    def from_items(self, items: Sequence[Any], repeat: bool = False) -> Stream:
+        """Local stream over in-memory items (tests, micro-benchmarks)."""
+        node = self._add("from_items", (), {"items": list(items), "repeat": repeat}, "FromItems", False)
+        return Stream(self, node.id)
+
+    def dequeue(self, resource: ResourceRef) -> Stream:
+        """Stream popped from a deferred resource's out-queue."""
+        node = self._add(
+            "dequeue", (), {"resource": resource.name},
+            f"Dequeue({resource.name}.outqueue)", False,
+        )
+        return Stream(self, node.id)
+
+    # ---------------------------------------------------------- resources
+    def learner_thread(self, workers: Any, name: str = "learner", **params: Any) -> ResourceRef:
+        """Declare a learner thread fed/drained by enqueue/dequeue nodes.
+
+        Nothing is constructed or started here — instantiation happens at
+        compile time, ``Thread.start()`` on the first pull of the compiled
+        flow, ``stop()`` + join when the flow stops.
+        """
+        if name in self.resources:
+            raise ValueError(f"duplicate resource {name!r}")
+        self.resources[name] = ResourceSpec(name, "learner_thread", {"workers": workers, **params})
+        return ResourceRef(self, name)
+
+    # -------------------------------------------------------- concurrency
+    def concurrently(
+        self,
+        streams: Sequence[Stream],
+        mode: str = "round_robin",
+        output_indexes: Optional[Sequence[int]] = None,
+        round_robin_weights: Optional[Sequence[Union[int, str]]] = None,
+    ) -> Stream:
+        """Union concurrent sub-flows (paper Fig 8); emit ``output_indexes``."""
+        if mode not in ("round_robin", "async"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if not streams:
+            raise ValueError("concurrently() needs at least one stream")
+        for s in streams:
+            s._require_local("concurrently")
+        out_idx = list(output_indexes) if output_indexes is not None else list(range(len(streams)))
+        for i in out_idx:
+            if not (0 <= i < len(streams)):
+                raise ValueError(f"output index {i} out of range")
+        if round_robin_weights is not None and len(round_robin_weights) != len(streams):
+            raise ValueError("round_robin_weights must match #streams")
+        node = self._add(
+            "concurrently",
+            tuple(s.ref for s in streams),
+            {
+                "mode": mode,
+                "output_indexes": out_idx,
+                "round_robin_weights": list(round_robin_weights) if round_robin_weights else None,
+            },
+            f"Concurrently({mode})",
+            False,
+        )
+        return Stream(self, node.id)
+
+    def set_output(self, stream: Stream) -> None:
+        stream._require_local("set_output")
+        self.output = stream.ref
+
+    # --------------------------------------------------------- validation
+    def validate(self) -> None:
+        if self.output is None:
+            raise ValueError(f"flow {self.name!r}: no output set (call set_output)")
+        consumed: Dict[EdgeRef, int] = {}
+        for node in self.nodes.values():
+            for ref in node.inputs:
+                consumed[ref] = consumed.get(ref, 0) + 1
+        consumed[self.output] = consumed.get(self.output, 0) + 1
+        for ref, n in consumed.items():
+            if n > 1:
+                raise ValueError(
+                    f"flow {self.name!r}: edge {ref} consumed {n} times; "
+                    "use duplicate() to split a stream"
+                )
+        for name in self._referenced_resources():
+            if name not in self.resources:
+                raise ValueError(f"flow {self.name!r}: undeclared resource {name!r}")
+
+    def _referenced_resources(self) -> List[str]:
+        return [
+            n.params["resource"] for n in self.nodes.values() if n.kind in ("enqueue", "dequeue")
+        ]
+
+    # ------------------------------------------------------ introspection
+    def consumers(self, node_id: str) -> int:
+        """How many edges read from ``node_id`` (any port), incl. the output."""
+        n = sum(1 for node in self.nodes.values() for ref in node.inputs if ref[0] == node_id)
+        if self.output is not None and self.output[0] == node_id:
+            n += 1
+        return n
+
+    def replace_nodes(self, nodes: Dict[str, Node]) -> "FlowSpec":
+        """Structural copy with a rewritten node table (optimization passes)."""
+        out = FlowSpec(self.name)
+        out.nodes = dict(nodes)
+        out.resources = dict(self.resources)
+        out.output = self.output
+        out._ids = self._ids
+        return out
+
+    def compile(self, fuse: bool = True) -> Any:
+        """Lower onto the iterator runtime; see ``repro.flow.compile``."""
+        from repro.flow.compile import CompiledFlow
+
+        return CompiledFlow(self, fuse=fuse)
+
+    # -------------------------------------------------------------- DOT
+    def to_dot(self) -> str:
+        """Render the graph as Graphviz DOT (paper Figures 9–12).
+
+        Stream edges are solid; edges into/out of deferred resources are
+        dotted; branches merged by an async union are dashed pink (the
+        paper's asynchronous-dependency arrows).
+        """
+
+        def esc(s: str) -> str:
+            return s.replace("\\", "\\\\").replace('"', '\\"')
+
+        lines = [
+            f'digraph "{esc(self.name)}" {{',
+            "  rankdir=LR;",
+            '  node [shape=box, fontname="Helvetica", fontsize=11];',
+        ]
+        for res in self.resources.values():
+            lines.append(
+                f'  "{esc(res.name)}" [shape=ellipse, style=filled, '
+                f'fillcolor=lightgrey, label="LearnerThread({esc(res.name)})"];'
+            )
+        for node in self.nodes.values():
+            if node.kind == "for_each":
+                label = "\\n".join(esc(s.label) for s in node.params["stages"])
+            else:
+                label = esc(node.label)
+            shape = ""
+            if node.kind == "concurrently":
+                shape = ", shape=hexagon"
+            elif node.kind in ("duplicate",):
+                shape = ", shape=trapezium"
+            elif node.parallel or node.kind in ("rollouts", "replay", "par_gradients", "par_source"):
+                shape = ", style=rounded"
+            lines.append(f'  "{node.id}" [label="{label}"{shape}];')
+        for node in self.nodes.values():
+            async_union = node.kind == "concurrently" and node.params.get("mode") == "async"
+            for i, (src, port) in enumerate(node.inputs):
+                attrs = []
+                if async_union and i not in node.params["output_indexes"]:
+                    attrs.append("style=dashed")
+                    attrs.append("color=deeppink")
+                elif async_union:
+                    attrs.append("color=deeppink")
+                if node.kind == "concurrently":
+                    attrs.append(f'label="{i}"')
+                a = f" [{', '.join(attrs)}]" if attrs else ""
+                lines.append(f'  "{src}" -> "{node.id}"{a};')
+            if node.kind == "enqueue":
+                lines.append(f'  "{node.id}" -> "{node.params["resource"]}" [style=dotted];')
+            if node.kind == "dequeue":
+                lines.append(f'  "{node.params["resource"]}" -> "{node.id}" [style=dotted];')
+        if self.output is not None:
+            lines.append(f'  "__out" [shape=plaintext, label="results"];')
+            lines.append(f'  "{self.output[0]}" -> "__out";')
+        lines.append("}")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"FlowSpec({self.name!r}, nodes={len(self.nodes)}, resources={list(self.resources)})"

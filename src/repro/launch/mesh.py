@@ -12,9 +12,12 @@ __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # jax.sharding.AxisType landed in jax 0.5.x; older releases neither have
+    # the enum nor accept an ``axis_types`` kwarg to ``jax.make_mesh``.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

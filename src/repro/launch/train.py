@@ -1,9 +1,11 @@
 """LM training driver: the paper's dataflow model driving pjit SPMD steps.
 
-The training loop IS a dataflow plan (ppo_plan-shaped, minus the RL loss):
+The training loop IS a dataflow graph (ppo-shaped, minus the RL loss),
+declared as a ``FlowSpec`` and run through the ``Algorithm`` facade:
 
-    data actors -> ParallelRollouts(bulk_sync) -> ConcatBatches
-                -> TrainOneStep(SPMDLearnerWorker)  -> ReportMetrics
+    data actors -> par_source -> batch_across_shards -> merge
+                -> SPMD train step (pjit-fused synchronous fragment)
+                -> report
 
 Data pipeline shards are actors (one per host in production; N virtual
 actors here); the learner's ``learn_on_batch`` is the pjit-fused synchronous
@@ -22,6 +24,33 @@ import time
 import numpy as np
 
 
+def build_lm_flow(workers, pipes):
+    """The LM pretrain dataflow as a declarative graph."""
+    from repro.core.metrics import get_metrics
+    from repro.flow import FlowSpec, pure
+
+    spec = FlowSpec("lm_pretrain")
+
+    def _merge(shards):
+        return {
+            k: np.concatenate([s[k] for s in shards], axis=0) for k in shards[0]
+        }
+
+    @pure
+    def _train(batch):  # dict batches (no .count/.minibatches)
+        info = workers.local_worker().learn_on_batch(batch)
+        get_metrics().counters["num_steps_trained"] += batch["tokens"].shape[0]
+        return batch, info
+
+    data_op = (
+        spec.par_source(pipes, lambda p: p.sample(), name="TokenPipeline")
+        .batch_across_shards()
+        .for_each(pure(_merge), label="MergeShards")
+    )
+    spec.set_output(data_op.for_each(_train, label="SPMDTrainStep").report())
+    return spec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
@@ -32,6 +61,7 @@ def main() -> None:
     ap.add_argument("--data-shards", type=int, default=2)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--dot", action="store_true", help="print the flow graph and exit")
     args = ap.parse_args()
 
     import jax
@@ -40,12 +70,10 @@ def main() -> None:
     from repro.configs import get_config, reduced_config
     from repro.configs.base import InputShape
     from repro.core.actor import ActorPool
-    from repro.core.iterators import ParallelIterator
-    from repro.core.metrics import get_metrics
-    from repro.core.operators import ConcatBatches, ReportMetrics, TrainOneStep
     from repro.core.spmd import SPMDLearnerWorker, SPMDTrainContext
     from repro.core.workers import WorkerSet
     from repro.data import TokenPipeline
+    from repro.flow import Algorithm
     from repro.launch.mesh import make_local_mesh, make_production_mesh
     from repro.optim import adamw, chain_clip_by_global_norm, linear_warmup_cosine
 
@@ -68,40 +96,25 @@ def main() -> None:
         name="data",
     )
     workers = WorkerSet(learner, pipes)
-
-    # The dataflow: per-shard batches -> global batch -> one SPMD step.
-    def _merge(shards):
-        return {
-            k: np.concatenate([s[k] for s in shards], axis=0) for k in shards[0]
-        }
-
-    data_op = ParallelIterator.from_actors(
-        pipes, lambda p: p.sample(), name="data"
-    ).batch_across_shards().for_each(_merge)
-
-    class _DictTrain(TrainOneStep):
-        def __call__(self, batch):  # dict batches (no .count/.minibatches)
-            info = self.workers.local_worker().learn_on_batch(batch)
-            get_metrics().counters["num_steps_trained"] += batch["tokens"].shape[0]
-            return batch, info
-
-    train_op = data_op.for_each(_DictTrain(workers)).for_each(ReportMetrics())
+    spec = build_lm_flow(workers, pipes)
+    if args.dot:
+        print(spec.to_dot())
+        return
 
     t0 = time.time()
-    it = iter(train_op)
-    for step in range(args.steps):
-        res = next(it)
-        loss = res["info"].get("loss", float("nan"))
-        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
-            print(
-                f"step {step:4d} loss {loss:.4f} "
-                f"({(time.time() - t0) / (step + 1):.2f}s/step)",
-                flush=True,
-            )
-    if args.checkpoint:
-        save_pytree(args.checkpoint, learner.params)
-        print(f"saved checkpoint to {args.checkpoint}")
-    pipes.stop()
+    with Algorithm.from_plan(spec, workers) as algo:
+        for step in range(args.steps):
+            res = algo.train()
+            loss = res["info"].get("loss", float("nan"))
+            if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+                print(
+                    f"step {step:4d} loss {loss:.4f} "
+                    f"({(time.time() - t0) / (step + 1):.2f}s/step)",
+                    flush=True,
+                )
+        if args.checkpoint:
+            save_pytree(args.checkpoint, learner.params)
+            print(f"saved checkpoint to {args.checkpoint}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,8 @@
 """Property-based tests of the dataflow model's core guarantees (paper §4)."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core as c
