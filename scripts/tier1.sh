@@ -1,7 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the fast test suite (excludes tests marked `slow`).
-# Run the full suite, slow tests included, with: scripts/tier1.sh -m ""
+#   scripts/tier1.sh            -> fast suite (includes chaos tests)
+#   scripts/tier1.sh --chaos    -> chaos stage only (fault-injection suite)
+#   scripts/tier1.sh -m ""      -> full suite, slow tests included
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--chaos" ]]; then
+  shift
+  exec python -m pytest -x -q -m "chaos and not slow" "$@"
+fi
 exec python -m pytest -x -q -m "not slow" "$@"

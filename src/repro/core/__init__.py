@@ -20,6 +20,16 @@ from repro.core.actor import (
     wait,
 )
 from repro.core.concurrency import Concurrently, Dequeue, Enqueue
+from repro.core.executor import (
+    ActorDiedError,
+    ActorError,
+    ExecutionBackend,
+    FailurePolicy,
+    ProcessBackend,
+    SupervisorSpec,
+    ThreadBackend,
+    resolve_backend,
+)
 from repro.core.iterators import (
     LocalIterator,
     NextValueNotReady,

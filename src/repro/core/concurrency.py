@@ -12,6 +12,7 @@ import queue
 from typing import Any, List, Optional, Sequence, Union
 
 from repro.core.iterators import LocalIterator, NextValueNotReady
+from repro.core.metrics import NUM_SAMPLES_DROPPED, get_metrics
 
 __all__ = ["Concurrently", "Enqueue", "Dequeue"]
 
@@ -60,22 +61,39 @@ class Enqueue:
     """Push items into a bounded queue (e.g. a learner thread's in-queue).
 
     Returns the item (so the flow can continue); drops with a counter if the
-    queue is full — matching Ape-X's num_samples_dropped behaviour.
+    queue is full — matching Ape-X's num_samples_dropped behaviour.  Drops
+    are also recorded in the shared metrics context (``num_samples_dropped``)
+    so they surface in ``Algorithm.train()`` result dicts.
+
+    ``check`` (like ``Dequeue``'s) guards blocking puts: while the consumer
+    is alive the put retries with a timeout; once ``check()`` is False the
+    stage raises instead of blocking a Concurrently driver thread forever
+    against a queue nobody will ever drain (flow teardown, dead learner).
     """
 
     share_across_shards = True
     flow_pure = True  # always returns the item (never NextValueNotReady)
 
-    def __init__(self, out_queue: "queue.Queue", block: bool = False):
+    def __init__(self, out_queue: "queue.Queue", block: bool = False, check: Any = None):
         self.queue = out_queue
         self.block = block
+        self.check = check
         self.num_dropped = 0
 
     def __call__(self, item: Any) -> Any:
+        if self.block and self.check is not None:
+            while self.check():
+                try:
+                    self.queue.put(item, timeout=0.05)
+                    return item
+                except queue.Full:
+                    continue
+            raise RuntimeError("Enqueue check failed: consumer is dead")
         try:
             self.queue.put(item, block=self.block)
         except queue.Full:
             self.num_dropped += 1
+            get_metrics().counters[NUM_SAMPLES_DROPPED] += 1
         return item
 
 

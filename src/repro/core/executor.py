@@ -1,0 +1,397 @@
+"""Pluggable execution backends + actor supervision (the executor runtime).
+
+The paper's dataflow shards run on Ray actors and inherit Ray's fault
+tolerance for free.  Our virtual actors were thread-only: one worker
+exception poisoned the whole flow.  This module makes the execution vehicle
+pluggable (MSRL: dataflow fragments must be remappable across heterogeneous
+backends) and supervised (SRL: scaling hinges on decoupled, restartable
+worker groups):
+
+  * ``ThreadBackend``  — a mailbox thread per actor, target lives in-process
+    (the original semantics; JAX releases the GIL inside compiled code so
+    device compute still overlaps).
+  * ``ProcessBackend`` — the target is built *inside a child process* from a
+    pickled factory ("picklable-target transport"); method calls are RPCs
+    over a pipe.  ``apply()`` still works with arbitrary closures: the
+    closure runs driver-side against a proxy whose method calls round-trip
+    to the child, so only method arguments/results must be picklable.
+  * ``SupervisorSpec`` — ``max_restarts`` with exponential backoff, plus a
+    ``FailurePolicy`` (restart / drop_shard / raise) that the gather
+    operators in ``core.iterators`` and ``WorkerSet`` honor: a dead rollout
+    worker shrinks the shard set instead of poisoning the stream.
+
+``VirtualActor`` (``core.actor``) keeps its public API and delegates the
+execution locus to a backend *cell*; everything above the actor layer is
+backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import logging
+import multiprocessing
+import pickle
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+__all__ = [
+    "ActorError",
+    "ActorDiedError",
+    "FailurePolicy",
+    "SupervisorSpec",
+    "ExecutionBackend",
+    "ThreadBackend",
+    "ProcessBackend",
+    "BACKENDS",
+    "resolve_backend",
+]
+
+_logger = logging.getLogger(__name__)
+
+
+class ActorError(RuntimeError):
+    """A failure attributable to a (virtual) actor's execution vehicle."""
+
+
+class ActorDiedError(ActorError):
+    """The actor's execution vehicle is gone (process exit, restart budget
+    exhausted, explicit ``kill()``).  Gather operators treat this as a shard
+    loss, never as a recoverable item failure."""
+
+
+class FailurePolicy:
+    """What the *consumers* of an actor do when one of its calls fails.
+
+    RAISE      -> propagate to the driver (legacy behaviour, default).
+    RESTART    -> the supervisor restarts the target (factory rebuild with
+                  exponential backoff); the failed item is skipped and the
+                  shard stays in the set.  Once the restart budget is
+                  exhausted the actor dies and the shard is dropped.
+    DROP_SHARD -> remove the shard from the iterator's active set on first
+                  failure; the stream continues with the survivors.
+    """
+
+    RAISE = "raise"
+    RESTART = "restart"
+    DROP_SHARD = "drop_shard"
+    ALL = frozenset((RAISE, RESTART, DROP_SHARD))
+
+    @classmethod
+    def validate(cls, policy: str) -> str:
+        if policy not in cls.ALL:
+            raise ValueError(
+                f"unknown failure policy {policy!r}; expected one of {sorted(cls.ALL)}"
+            )
+        return policy
+
+
+@dataclass(frozen=True)
+class SupervisorSpec:
+    """Restart budget + backoff schedule + consumer-facing failure policy."""
+
+    max_restarts: int = 0
+    backoff_base: float = 0.05
+    backoff_cap: float = 2.0
+    failure_policy: str = FailurePolicy.RAISE
+
+    def __post_init__(self) -> None:
+        FailurePolicy.validate(self.failure_policy)
+        if self.max_restarts < 0:
+            raise ValueError("max_restarts must be >= 0")
+        if self.backoff_base < 0 or self.backoff_cap < 0:
+            raise ValueError("backoff must be >= 0")
+
+    def backoff(self, n_prior_restarts: int) -> float:
+        return min(self.backoff_base * (2.0 ** n_prior_restarts), self.backoff_cap)
+
+
+# --------------------------------------------------------------------------
+# Cells: the execution locus behind one actor
+# --------------------------------------------------------------------------
+class Cell(ABC):
+    """Owns the target object (or a proxy to it) for one actor."""
+
+    @property
+    @abstractmethod
+    def target(self) -> Any:
+        """The object method calls are dispatched onto (real or proxy)."""
+
+    @property
+    @abstractmethod
+    def alive(self) -> bool:
+        """Whether the execution vehicle can still run calls."""
+
+    @abstractmethod
+    def restart(self) -> None:
+        """Rebuild the target from its factory (fresh state)."""
+
+    @abstractmethod
+    def stop(self) -> None:
+        """Graceful shutdown of the vehicle (idempotent)."""
+
+    @abstractmethod
+    def kill(self) -> None:
+        """Forceful shutdown (process terminate; best-effort for threads)."""
+
+
+class ThreadCell(Cell):
+    """Target lives in-process; the actor's mailbox thread calls it directly."""
+
+    def __init__(self, factory: Optional[Callable[[], Any]] = None, target: Any = None):
+        self._factory = factory
+        self._target = target if target is not None else factory()  # type: ignore[misc]
+
+    @property
+    def target(self) -> Any:
+        return self._target
+
+    @property
+    def alive(self) -> bool:
+        return True
+
+    def restart(self) -> None:
+        if self._factory is None:
+            raise ActorError("thread cell has no factory; target is not restartable")
+        self._target = self._factory()
+
+    def stop(self) -> None:
+        pass
+
+    def kill(self) -> None:
+        # Threads cannot be preempted; the actor layer marks itself dead and
+        # fails queued work.  A call already executing cannot be interrupted.
+        pass
+
+
+def _serve(conn: Any, payload: bytes) -> None:
+    """Child-process loop: build the target from its pickled factory, then
+    execute (method, args, kwargs) requests until shutdown/EOF."""
+    try:
+        target = pickle.loads(payload)()
+    except BaseException as exc:  # construction failure: report and exit
+        try:
+            conn.send((False, ActorError(f"target construction failed: {exc!r}")))
+        except Exception:
+            pass
+        return
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        if msg is None:
+            conn.close()
+            return
+        method, args, kwargs = msg
+        try:
+            result = getattr(target, method)(*args, **kwargs)
+        except BaseException as exc:
+            try:
+                conn.send((False, exc))
+            except Exception:  # unpicklable exception: degrade to a summary
+                conn.send((False, ActorError(f"{type(exc).__name__}: {exc}")))
+            continue
+        try:
+            conn.send((True, result))
+        except Exception as exc:
+            conn.send((False, ActorError(f"unpicklable result from {method}(): {exc}")))
+
+
+class _Proxy:
+    """Driver-side stand-in for a process-hosted target.
+
+    Attribute access returns RPC stubs, so ``apply(lambda t: t.sample())``
+    works unchanged: the closure runs on the driver's mailbox thread and
+    every method call round-trips to the child process.
+    """
+
+    __slots__ = ("_cell",)
+
+    def __init__(self, cell: "ProcessCell"):
+        object.__setattr__(self, "_cell", cell)
+
+    def __getattr__(self, name: str) -> Any:
+        cell = object.__getattribute__(self, "_cell")
+
+        def _stub(*args: Any, **kwargs: Any) -> Any:
+            return cell.rpc(name, args, kwargs)
+
+        _stub.__name__ = name
+        return _stub
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"_Proxy({object.__getattribute__(self, '_cell')!r})"
+
+
+class _ReturnTarget:
+    """Picklable factory wrapper for a pre-built (picklable) target object."""
+
+    def __init__(self, target: Any):
+        self.target = target
+
+    def __call__(self) -> Any:
+        return self.target
+
+
+class ProcessCell(Cell):
+    """Target lives in a child process; calls are pipe RPCs.
+
+    The factory (or the target itself) is pickled eagerly — the
+    "picklable-target transport" contract — so a cell that constructs at all
+    can always be restarted, under any multiprocessing start method.
+    """
+
+    def __init__(
+        self,
+        factory: Optional[Callable[[], Any]] = None,
+        target: Any = None,
+        start_method: Optional[str] = None,
+    ):
+        payload = factory if factory is not None else _ReturnTarget(target)
+        self._payload = pickle.dumps(payload)
+        if start_method is None:
+            # Default to fork where available: ~10ms per worker vs ~1s for
+            # forkserver/spawn (measured; the chaos suites restart workers
+            # constantly).  Fork-with-threads is a known CPython hazard, but
+            # the child here only unpickles the factory and serves numpy
+            # calls — it never touches the driver's JAX/logging state.  Pass
+            # ``ProcessBackend(start_method="forkserver"|"spawn")`` for
+            # drivers where that tradeoff goes the other way.
+            start_method = "fork" if "fork" in multiprocessing.get_all_start_methods() else "spawn"
+        self._ctx = multiprocessing.get_context(start_method)
+        self._proc: Any = None
+        self._conn: Any = None
+        self._proxy = _Proxy(self)
+        self._spawn()
+
+    def _spawn(self) -> None:
+        parent, child = self._ctx.Pipe()
+        self._conn = parent
+        self._proc = self._ctx.Process(
+            target=_serve, args=(child, self._payload), daemon=True, name="actor-cell"
+        )
+        self._proc.start()
+        child.close()
+
+    # ------------------------------------------------------------------ rpc
+    def rpc(self, method: str, args: tuple, kwargs: dict) -> Any:
+        if not self.alive:
+            raise self._death_error(method)
+        try:
+            self._conn.send((method, args, kwargs))
+            ok, payload = self._conn.recv()
+        except (EOFError, OSError, BrokenPipeError):
+            raise self._death_error(method) from None
+        if ok:
+            return payload
+        raise payload
+
+    def _death_error(self, method: str) -> ActorDiedError:
+        """Build the death error, draining any buffered report from the
+        child first — a target whose constructor raised sends the real
+        exception into the pipe before exiting, and that beats a generic
+        'process is dead'."""
+        buffered: Optional[BaseException] = None
+        try:
+            if self._conn.poll(0.05):
+                ok, payload = self._conn.recv()
+                if not ok and isinstance(payload, BaseException):
+                    buffered = payload
+        except (EOFError, OSError, BrokenPipeError, ValueError):
+            pass
+        err = ActorDiedError(
+            f"process cell died during {method}() (exitcode={self._exitcode()})"
+            + (f": {buffered}" if buffered is not None else "")
+        )
+        err.__cause__ = buffered
+        return err
+
+    def _exitcode(self) -> Any:
+        return self._proc.exitcode if self._proc is not None else None
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def target(self) -> Any:
+        return self._proxy
+
+    @property
+    def alive(self) -> bool:
+        return self._proc is not None and self._proc.is_alive()
+
+    def restart(self) -> None:
+        self.kill()
+        self._spawn()
+
+    def stop(self) -> None:
+        if self._proc is None:
+            return
+        try:
+            if self._proc.is_alive():
+                self._conn.send(None)
+                self._proc.join(timeout=1.0)
+        except (OSError, BrokenPipeError, ValueError):
+            pass
+        self.kill()
+
+    def kill(self) -> None:
+        if self._proc is None:
+            return
+        if self._proc.is_alive():
+            self._proc.terminate()
+            self._proc.join(timeout=2.0)
+        try:
+            self._conn.close()
+        except Exception:
+            pass
+
+
+# --------------------------------------------------------------------------
+# Backends
+# --------------------------------------------------------------------------
+class ExecutionBackend(ABC):
+    """Factory for cells: where an actor's target executes."""
+
+    name: str = "abstract"
+
+    @abstractmethod
+    def make_cell(
+        self, factory: Optional[Callable[[], Any]] = None, target: Any = None
+    ) -> Cell:
+        ...
+
+
+class ThreadBackend(ExecutionBackend):
+    name = "thread"
+
+    def make_cell(
+        self, factory: Optional[Callable[[], Any]] = None, target: Any = None
+    ) -> Cell:
+        return ThreadCell(factory=factory, target=target)
+
+
+class ProcessBackend(ExecutionBackend):
+    name = "process"
+
+    def __init__(self, start_method: Optional[str] = None):
+        self.start_method = start_method
+
+    def make_cell(
+        self, factory: Optional[Callable[[], Any]] = None, target: Any = None
+    ) -> Cell:
+        return ProcessCell(factory=factory, target=target, start_method=self.start_method)
+
+
+BACKENDS = {"thread": ThreadBackend, "process": ProcessBackend}
+
+
+def resolve_backend(backend: Any) -> ExecutionBackend:
+    """None -> ThreadBackend; str -> registry lookup; instance passthrough."""
+    if backend is None:
+        return ThreadBackend()
+    if isinstance(backend, ExecutionBackend):
+        return backend
+    if isinstance(backend, str):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; known: {sorted(BACKENDS)}")
+        return BACKENDS[backend]()
+    raise TypeError(f"backend must be None, str, or ExecutionBackend (got {backend!r})")

@@ -16,6 +16,14 @@ Two iterator kinds (paper §4):
 
 Iterators are lazy: building a dataflow does nothing; pulling items from the
 output iterator drives the whole graph (Volcano-style).
+
+Fault tolerance (executor runtime): the gather operators honor each source
+actor's ``FailurePolicy`` — a failing worker either restarts (item skipped,
+shard kept), gets its shard dropped (the stream continues with survivors),
+or propagates the error (default).  Failures and dropped shards are counted
+into the shared metrics context.  Pool-backed parallel iterators are also
+*elastic*: actors added to / removed from the source ``ActorPool`` mid-stream
+are picked up by the gather loops (``Algorithm.add_workers()``).
 """
 
 from __future__ import annotations
@@ -24,9 +32,11 @@ import copy
 import logging
 import queue
 import threading
+import types
 from typing import (
     Any,
     Callable,
+    Dict,
     Generic,
     Iterable,
     Iterator,
@@ -38,7 +48,14 @@ from typing import (
 )
 
 from repro.core.actor import ActorPool, VirtualActor, wait
-from repro.core.metrics import MetricsContext, get_metrics, set_metrics_for_thread
+from repro.core.executor import FailurePolicy
+from repro.core.metrics import (
+    NUM_SHARDS_DROPPED,
+    NUM_WORKER_FAILURES,
+    MetricsContext,
+    get_metrics,
+    set_metrics_for_thread,
+)
 
 T = TypeVar("T")
 U = TypeVar("U")
@@ -78,22 +95,87 @@ def _apply_stages(item: Any, stages: Sequence[Callable]) -> Any:
 
 
 class _Exhausted:
-    """Internal marker: a shard's underlying stream raised StopIteration."""
+    """Internal marker: a shard's underlying stream raised StopIteration.
+
+    PEP 479: raising StopIteration inside a generator is a RuntimeError, so
+    the gather generators map finite shards' exhaustion to this marker."""
 
 
 _EXHAUSTED = _Exhausted()
 
 
-def _result_or_exhausted(fut: Any) -> Any:
-    """Future.result() that maps StopIteration to a marker.
+class _ShardVerdict:
+    """Internal marker: how a shard failure was absorbed (policy != raise)."""
 
-    PEP 479: raising StopIteration inside a generator is a RuntimeError, so
-    finite shards (testing) must signal exhaustion out-of-band.
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{self.name}>"
+
+
+_SKIPPED = _ShardVerdict("item-skipped")  # restart policy: shard stays
+_DROPPED = _ShardVerdict("shard-dropped")  # shard leaves the active set
+
+
+def _absorb_shard_failure(actor: Any, exc: Exception, dropped: Dict[int, str], stream: str) -> Any:
+    """Apply the source actor's FailurePolicy to a failed shard dispatch.
+
+    Returns ``_SKIPPED`` (keep shard, lose item) or ``_DROPPED`` (shard
+    leaves the set), or re-raises under the default RAISE policy.  Counts
+    failures/drops into the driving thread's metrics context.
+
+    ``dropped`` maps actor_id -> drop reason: ``"dead"`` drops are pruned by
+    the gather loops when the actor comes back alive (``recover()``'s
+    in-place restart), ``"policy"`` drops are permanent for this stream.
     """
-    try:
-        return fut.result()
-    except StopIteration:
-        return _EXHAUSTED
+    policy = getattr(actor, "failure_policy", FailurePolicy.RAISE)
+    metrics = get_metrics()
+    metrics.counters[NUM_WORKER_FAILURES] += 1
+    if policy == FailurePolicy.RAISE:
+        raise exc
+    alive = getattr(actor, "alive", True)
+    # RESTART is only meaningful when the supervisor can actually heal the
+    # worker: it needs a restart budget, and AttributeError is exempt from
+    # supervision (protocol probes, see actor._run_loop) so a persistent one
+    # can never be fixed by restarting.  Either way, skipping would
+    # re-dispatch the same failing call forever (livelock) — degrade to
+    # dropping the shard.
+    restartable = (
+        getattr(getattr(actor, "supervision", None), "max_restarts", 0) > 0
+        and not isinstance(exc, AttributeError)
+    )
+    if policy == FailurePolicy.DROP_SHARD or not alive or not restartable:
+        dropped[actor.actor_id] = "dead" if not alive else "policy"
+        metrics.counters[NUM_SHARDS_DROPPED] += 1
+        logger.warning(
+            "%s: dropping shard %s after failure (%r); %s",
+            stream, getattr(actor, "name", actor), exc,
+            "actor dead" if not alive
+            else ("drop_shard policy" if policy == FailurePolicy.DROP_SHARD
+                  else "restart policy without restart budget"),
+        )
+        return _DROPPED
+    # RESTART policy with a live (supervisor-restarted) actor: the failed
+    # item is lost, the shard stays in the set.
+    logger.warning(
+        "%s: worker %s failed (%r); restart policy, item skipped",
+        stream, getattr(actor, "name", actor), exc,
+    )
+    return _SKIPPED
+
+
+def _rejoin_revived(dropped: Dict[int, str], shards: Sequence["_Shard"]) -> List["_Shard"]:
+    """Prune ``"dead"`` drops whose actor is alive again (healed by
+    ``recover()``'s in-place restart) so they rejoin the stream; returns the
+    shards revived this round."""
+    revived = []
+    for s in shards:
+        aid = s.actor.actor_id
+        if dropped.get(aid) == "dead" and getattr(s.actor, "alive", True):
+            del dropped[aid]
+            revived.append(s)
+    return revived
 
 
 # --------------------------------------------------------------------------
@@ -108,18 +190,37 @@ class LocalIterator(Generic[T]):
         metrics: Optional[MetricsContext] = None,
         stages: Optional[List[Callable]] = None,
         name: str = "LocalIterator",
+        parents: Optional[List["LocalIterator"]] = None,
     ):
         self._base_builder = base_builder
         self._stages: List[Callable] = list(stages or [])
         self.metrics = metrics or MetricsContext()
         self.name = name
         self._built: Optional[Iterator[T]] = None
+        # Upstream iterators captured by wrapper generators (flatten,
+        # duplicate, union children): close() propagates teardown to them.
+        self._parents: List["LocalIterator"] = list(parents or [])
 
     # ------------------------------------------------------------- plumbing
     def _build(self) -> Iterator[T]:
         if self._built is None:
             self._built = self._base_builder()
         return self._built
+
+    def close(self) -> None:
+        """Tear down the driven stream: close the built generator so its
+        ``finally`` blocks run now (joining union driver threads, closing
+        child branches) instead of at GC time, then close parents."""
+        gen = self._built
+        if gen is not None and hasattr(gen, "close"):
+            try:
+                gen.close()
+            except RuntimeError:
+                # Generator currently executing on another thread; its own
+                # teardown path (done-flag) will unwind it.
+                pass
+        for p in self._parents:
+            p.close()
 
     def __iter__(self) -> Iterator[T]:
         it = self._build()
@@ -167,6 +268,7 @@ class LocalIterator(Generic[T]):
             metrics=self.metrics,
             stages=self._stages + [fn],
             name=f"{self.name}.{name}",
+            parents=self._parents,
         )
 
     # ------------------------------------------------------------ operators
@@ -200,7 +302,9 @@ class LocalIterator(Generic[T]):
                 for sub in item:
                     yield sub
 
-        return LocalIterator(_gen, metrics=self.metrics, name=f"{self.name}.flatten")
+        return LocalIterator(
+            _gen, metrics=self.metrics, name=f"{self.name}.flatten", parents=[parent]
+        )
 
     def combine(self, fn: Callable[[T], Iterable[U]]) -> "LocalIterator[U]":
         """for_each returning a list, flattened (RLlib's ``combine``)."""
@@ -237,7 +341,9 @@ class LocalIterator(Generic[T]):
             pulls k items per turn, ``'*'`` drains what is ready).  This is
             the rate-limiting mechanism [Acme] for e.g. replay:sample ratios.
         deterministic=False -> async merge: each child is driven by its own
-            thread; items surface in completion order (pink arrows).
+            thread; items surface in completion order (pink arrows).  The
+            driver threads are joined when the merged stream is closed or
+            exhausted — they do not leak across dataflows.
         """
         children = [self, *others]
         # Children share one metrics context so counters/current_actor flow.
@@ -256,23 +362,29 @@ class LocalIterator(Generic[T]):
                 # Sentinel-aware pulls: a branch that reports "not ready"
                 # (e.g. a cold replay buffer) yields its turn instead of
                 # blocking the whole union (paper: rate-limited concurrency).
-                iters = [c._iter_with_sentinels() for c in children]
-                alive = [True] * len(iters)
-                while any(alive):
-                    for i, it in enumerate(iters):
-                        if not alive[i]:
-                            continue
-                        pulls = weights[i]
-                        n = 1 if pulls == "*" else int(pulls)
-                        for _ in range(n):
-                            try:
-                                item = next(it)
-                            except StopIteration:
-                                alive[i] = False
-                                break
-                            yield item  # may be a sentinel; consumer skips
+                try:
+                    iters = [c._iter_with_sentinels() for c in children]
+                    alive = [True] * len(iters)
+                    while any(alive):
+                        for i, it in enumerate(iters):
+                            if not alive[i]:
+                                continue
+                            pulls = weights[i]
+                            n = 1 if pulls == "*" else int(pulls)
+                            for _ in range(n):
+                                try:
+                                    item = next(it)
+                                except StopIteration:
+                                    alive[i] = False
+                                    break
+                                yield item  # may be a sentinel; consumer skips
+                finally:
+                    for c in children:
+                        c.close()
 
-            return LocalIterator(_rr_gen, metrics=merged_metrics, name="union_rr")
+            return LocalIterator(
+                _rr_gen, metrics=merged_metrics, name="union_rr", parents=children
+            )
 
         def _async_gen() -> Iterator[Any]:
             q: "queue.Queue[Any]" = queue.Queue(maxsize=max(8, 2 * len(children)))
@@ -280,23 +392,36 @@ class LocalIterator(Generic[T]):
             n_alive = [len(children)]
             lock = threading.Lock()
 
+            def _put(item: Any) -> bool:
+                # Bounded-blocking put that aborts on teardown, so a driver
+                # blocked against a full queue can always exit and be joined.
+                while not done.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        return True
+                    except queue.Full:
+                        pass
+                return False
+
             def _drive(child: LocalIterator) -> None:
                 try:
                     set_metrics_for_thread(merged_metrics)
                     for item in child:
-                        if done.is_set():
+                        if not _put(item):
                             return
-                        q.put(item)
                 except BaseException as exc:  # surface errors to consumer
-                    q.put(exc)
+                    _put(exc)
                 finally:
                     with lock:
                         n_alive[0] -= 1
                         if n_alive[0] == 0:
-                            q.put(StopIteration())
+                            _put(StopIteration())
 
             threads = [
-                threading.Thread(target=_drive, args=(c,), daemon=True) for c in children
+                threading.Thread(
+                    target=_drive, args=(c,), daemon=True, name=f"union-drive-{i}"
+                )
+                for i, c in enumerate(children)
             ]
             for t in threads:
                 t.start()
@@ -310,8 +435,21 @@ class LocalIterator(Generic[T]):
                     yield item
             finally:
                 done.set()
+                # Unblock drivers racing a full queue, then join them so no
+                # daemon threads outlive the merged stream.
+                while True:
+                    try:
+                        q.get_nowait()
+                    except queue.Empty:
+                        break
+                for t in threads:
+                    t.join(timeout=2.0)
+                for c in children:
+                    c.close()
 
-        return LocalIterator(_async_gen, metrics=merged_metrics, name="union_async")
+        return LocalIterator(
+            _async_gen, metrics=merged_metrics, name="union_async", parents=children
+        )
 
     def duplicate(self, n: int, bound: int = 1000) -> List["LocalIterator[T]"]:
         """Split an iterator into ``n`` copies (paper Fig 8, split).
@@ -350,7 +488,12 @@ class LocalIterator(Generic[T]):
                 yield item
 
         return [
-            LocalIterator(lambda i=i: _make(i), metrics=self.metrics, name=f"{self.name}.dup{i}")
+            LocalIterator(
+                lambda i=i: _make(i),
+                metrics=self.metrics,
+                name=f"{self.name}.dup{i}",
+                parents=[self],
+            )
             for i in range(n)
         ]
 
@@ -379,17 +522,40 @@ class _Shard:
         return self.actor.apply(_produce)
 
 
+def _clone_stage(fn: Callable) -> Callable:
+    """Per-shard stage cloning rule (see ``ParallelIterator.for_each``)."""
+    if isinstance(fn, types.FunctionType) or getattr(fn, "share_across_shards", False):
+        return fn
+    try:
+        return copy.deepcopy(fn)
+    except Exception:
+        return fn
+
+
 class ParallelIterator(Generic[T]):
-    """A parallel stream sharded over an actor pool (``ParIter[T]``)."""
+    """A parallel stream sharded over an actor pool (``ParIter[T]``).
+
+    When built ``from_actors`` the iterator keeps a reference to the source
+    pool and re-syncs shard membership with it inside the gather loops, so
+    workers added or removed mid-stream (elastic training, supervision
+    replacing a dead actor) join/leave the stream without a rebuild.
+    """
 
     def __init__(
         self,
         shards: Sequence[_Shard],
         name: str = "ParallelIterator",
+        pool: Optional[ActorPool] = None,
+        pull_fn: Optional[Callable[[Any], Any]] = None,
     ):
         self._shards = list(shards)
-        # List of per-stage, per-shard callables: _stage_clones[stage][shard].
-        self._stage_clones: List[List[Callable]] = []
+        self._pool = pool
+        self._pull_fn = pull_fn
+        self._pool_version = pool.version if pool is not None else None
+        # Original stage callables; per-actor clones are made lazily so that
+        # shards added later (elasticity) get their own stateful copies.
+        self._stage_fns: List[Callable] = []
+        self._clones: List[Dict[int, Callable]] = []
         self.name = name
 
     # ------------------------------------------------------------- creation
@@ -400,7 +566,9 @@ class ParallelIterator(Generic[T]):
         pull_fn: Callable[[Any], Any],
         name: str = "ParallelIterator",
     ) -> "ParallelIterator":
-        return cls([_Shard(a, pull_fn) for a in pool], name=name)
+        return cls(
+            [_Shard(a, pull_fn) for a in pool], name=name, pool=pool, pull_fn=pull_fn
+        )
 
     @property
     def actors(self) -> List[VirtualActor]:
@@ -419,24 +587,39 @@ class ParallelIterator(Generic[T]):
         they set ``share_across_shards = True`` or are not deep-copyable
         (operators that hold actor handles).
         """
-        import types
-
-        if isinstance(fn, types.FunctionType) or getattr(fn, "share_across_shards", False):
-            clones = [fn] * len(self._shards)
-        else:
-            try:
-                clones = [copy.deepcopy(fn) for _ in self._shards]
-            except Exception:
-                clones = [fn] * len(self._shards)
-        out = ParallelIterator(self._shards, name=f"{self.name}.for_each")
-        out._stage_clones = getattr(self, "_stage_clones", []) + [clones]  # type: ignore[attr-defined]
+        out = ParallelIterator(
+            self._shards, name=f"{self.name}.for_each",
+            pool=self._pool, pull_fn=self._pull_fn,
+        )
+        out._stage_fns = self._stage_fns + [fn]
+        out._clones = [dict() for _ in out._stage_fns]
         return out
 
     # Alias matching the paper's pseudocode.
     par_for_each = for_each
 
-    def _shard_stages(self, i: int) -> List[Callable]:
-        return [stage_clones[i] for stage_clones in self._stage_clones]
+    def _stages_for(self, actor: VirtualActor) -> List[Callable]:
+        """The per-actor stage chain (clones created lazily per shard)."""
+        out: List[Callable] = []
+        for i, fn in enumerate(self._stage_fns):
+            cache = self._clones[i]
+            if actor.actor_id not in cache:
+                cache[actor.actor_id] = _clone_stage(fn)
+            out.append(cache[actor.actor_id])
+        return out
+
+    def _sync_shards(self) -> bool:
+        """Reflect source-pool membership changes (elastic add/remove)."""
+        if self._pool is None or self._pull_fn is None:
+            return False
+        if self._pool.version == self._pool_version:
+            return False
+        self._pool_version = self._pool.version
+        have = {s.actor.actor_id: s for s in self._shards}
+        self._shards = [
+            have.get(a.actor_id) or _Shard(a, self._pull_fn) for a in self._pool
+        ]
+        return True
 
     def union(self, other: "ParallelIterator") -> "ParallelIterator":
         """Union of two parallel iterators (shards side by side).
@@ -446,8 +629,8 @@ class ParallelIterator(Generic[T]):
         """
         def _freeze(par: "ParallelIterator") -> List[_Shard]:
             frozen = []
-            for i, s in enumerate(par._shards):
-                stages = par._shard_stages(i)
+            for s in par._shards:
+                stages = par._stages_for(s.actor)
                 pull = s.pull_fn
 
                 def _pull(target: Any, _p=pull, _st=tuple(stages)) -> Any:
@@ -464,24 +647,48 @@ class ParallelIterator(Generic[T]):
 
         One item is pulled from every shard; upstream actors are fully halted
         between fetches, so messages sent to source actors between item
-        fetches are ordered w.r.t. the dataflow (black arrows).
+        fetches are ordered w.r.t. the dataflow (black arrows).  Failed
+        shards are skipped/dropped per their actor's FailurePolicy.
         """
 
         def _gen() -> Iterator[Any]:
+            dropped: Dict[int, str] = {}
             while True:
-                futures = [
-                    shard.dispatch(self._shard_stages(i))
-                    for i, shard in enumerate(self._shards)
-                ]
+                self._sync_shards()
+                _rejoin_revived(dropped, self._shards)
+                shards = [s for s in self._shards if s.actor.actor_id not in dropped]
+                if not shards:
+                    if dropped:
+                        raise RuntimeError(f"{self.name}: all shards failed")
+                    return
+                # Dispatch defensively: an actor stopped mid-round (elastic
+                # remove_workers race / teardown) is skipped, but futures
+                # already dispatched this round are still gathered so their
+                # items are never silently discarded.
+                futures = []
+                for s in shards:
+                    try:
+                        futures.append((s, s.dispatch(self._stages_for(s.actor))))
+                    except RuntimeError:
+                        pass
+                if not futures:
+                    if self._sync_shards():
+                        continue  # membership changed: retry with survivors
+                    return  # all actors stopped: stream teardown
                 # Global barrier: wait for every shard's item.
-                results = [
-                    (_result_or_exhausted(f), s.actor)
-                    for f, s in zip(futures, self._shards)
-                ]
+                results = []
+                for s, f in futures:
+                    try:
+                        item = f.result()
+                    except StopIteration:
+                        item = _EXHAUSTED
+                    except Exception as exc:
+                        item = _absorb_shard_failure(s.actor, exc, dropped, self.name)
+                    results.append((item, s.actor))
                 if any(isinstance(item, _Exhausted) for item, _ in results):
                     return
                 for item, actor in results:
-                    if isinstance(item, NextValueNotReady):
+                    if isinstance(item, (NextValueNotReady, _ShardVerdict)):
                         continue
                     get_metrics().current_actor = actor
                     yield item
@@ -494,34 +701,83 @@ class ParallelIterator(Generic[T]):
         Keeps up to ``num_async`` items in flight *per shard*; yields items in
         completion order and immediately backfills the producing shard —
         equivalent to RLlib Flow's async gather with configurable pipeline
-        parallelism.
+        parallelism.  A failed shard is skipped or dropped per its actor's
+        FailurePolicy; newly added pool actors join the pipeline mid-stream.
         """
         if num_async < 1:
             raise ValueError("num_async must be >= 1")
 
         def _gen() -> Iterator[Any]:
             result_q: "queue.Queue[tuple]" = queue.Queue()
-            inflight = 0
+            shard_by_id: Dict[int, _Shard] = {}
+            inflight: Dict[int, int] = {}
+            dropped: Dict[int, str] = {}
+            exhausted: set = set()
+            removed: set = set()
 
-            def _dispatch(i: int) -> None:
-                nonlocal inflight
-                fut = self._shards[i].dispatch(self._shard_stages(i))
-                fut.add_done_callback(lambda f, i=i: result_q.put((i, f)))
-                inflight += 1
+            def _dispatch(s: _Shard) -> None:
+                aid = s.actor.actor_id
+                try:
+                    fut = s.dispatch(self._stages_for(s.actor))
+                except RuntimeError:
+                    # Actor stopped between membership sync and dispatch
+                    # (graceful remove_workers race): treat as removed.
+                    removed.add(aid)
+                    return
+                inflight[aid] = inflight.get(aid, 0) + 1
+                fut.add_done_callback(lambda f, aid=aid: result_q.put((aid, f)))
 
-            for i in range(len(self._shards)):
-                for _ in range(num_async):
-                    _dispatch(i)
-            while inflight:
-                i, fut = result_q.get()
-                inflight -= 1
-                item = _result_or_exhausted(fut)  # re-raises worker errors
-                if isinstance(item, _Exhausted):
-                    continue  # shard drained; stop backfilling it
-                _dispatch(i)
+            def _admit() -> None:
+                # Pick up pool membership changes (elastic add/remove) and
+                # rejoin shards whose dead actor was revived by recover().
+                self._sync_shards()
+                for s in _rejoin_revived(dropped, self._shards):
+                    for _ in range(num_async - inflight.get(s.actor.actor_id, 0)):
+                        _dispatch(s)
+                current = set()
+                for s in self._shards:
+                    aid = s.actor.actor_id
+                    current.add(aid)
+                    if aid not in shard_by_id:
+                        shard_by_id[aid] = s
+                        for _ in range(num_async):
+                            _dispatch(s)
+                for aid in shard_by_id:
+                    if aid not in current:
+                        removed.add(aid)  # stop backfilling; drain in-flight
+
+            _admit()
+            while True:
+                _admit()  # cheap (pool version compare); elastic sync point
+                if sum(inflight.values()) == 0:
+                    active = set(shard_by_id) - set(dropped) - exhausted - removed
+                    if not active:
+                        if dropped and not (exhausted or removed):
+                            raise RuntimeError(f"{self.name}: all shards failed")
+                        return
+                try:
+                    aid, fut = result_q.get(timeout=0.1)
+                except queue.Empty:
+                    continue  # elastic wake-up: re-check membership
+                inflight[aid] -= 1
+                gone = aid in dropped or aid in removed
+                try:
+                    item = fut.result()
+                except StopIteration:
+                    exhausted.add(aid)
+                    continue
+                except Exception as exc:
+                    verdict = _absorb_shard_failure(
+                        shard_by_id[aid].actor, exc, dropped, self.name
+                    )
+                    if verdict is _SKIPPED and not gone:
+                        _dispatch(shard_by_id[aid])  # keep the pipeline full
+                    continue
+                if not gone:
+                    _dispatch(shard_by_id[aid])
                 if isinstance(item, NextValueNotReady):
                     continue
-                get_metrics().current_actor = self._shards[i].actor
+                get_metrics().current_actor = shard_by_id[aid].actor
                 yield item
 
         return LocalIterator(_gen, name=f"{self.name}.gather_async")
@@ -530,15 +786,43 @@ class ParallelIterator(Generic[T]):
         """One synchronized list of per-shard items per pull (sync barrier)."""
 
         def _gen() -> Iterator[Any]:
+            dropped: Dict[int, str] = {}
             while True:
-                futures = [
-                    shard.dispatch(self._shard_stages(i))
-                    for i, shard in enumerate(self._shards)
-                ]
-                items = [_result_or_exhausted(f) for f in futures]
+                self._sync_shards()
+                _rejoin_revived(dropped, self._shards)
+                shards = [s for s in self._shards if s.actor.actor_id not in dropped]
+                if not shards:
+                    if dropped:
+                        raise RuntimeError(f"{self.name}: all shards failed")
+                    return
+                # Defensive dispatch: see gather_sync — skip actors stopped
+                # mid-round but never abandon already-dispatched futures.
+                futures = []
+                for s in shards:
+                    try:
+                        futures.append((s, s.dispatch(self._stages_for(s.actor))))
+                    except RuntimeError:
+                        pass
+                if not futures:
+                    if self._sync_shards():
+                        continue
+                    return
+                items = []
+                for s, f in futures:
+                    try:
+                        items.append(f.result())
+                    except StopIteration:
+                        items.append(_EXHAUSTED)
+                    except Exception as exc:
+                        items.append(
+                            _absorb_shard_failure(s.actor, exc, dropped, self.name)
+                        )
                 if any(isinstance(x, _Exhausted) for x in items):
                     return
-                items = [x for x in items if not isinstance(x, NextValueNotReady)]
+                items = [
+                    x for x in items
+                    if not isinstance(x, (NextValueNotReady, _ShardVerdict))
+                ]
                 if items:
                     yield items
 

@@ -22,6 +22,12 @@ STEPS_TRAINED_COUNTER = "num_steps_trained"
 AGENT_STEPS_SAMPLED_COUNTER = "num_agent_steps_sampled"
 TARGET_NET_UPDATES = "num_target_updates"
 
+# Fault-tolerance counters (executor runtime, ISSUE 2): recorded by the
+# gather operators / Enqueue so failures surface in Algorithm.train() results.
+NUM_SAMPLES_DROPPED = "num_samples_dropped"
+NUM_WORKER_FAILURES = "num_worker_failures"
+NUM_SHARDS_DROPPED = "num_shards_dropped"
+
 SAMPLE_TIMER = "sample"
 GRAD_WAIT_TIMER = "grad_wait"
 APPLY_GRADS_TIMER = "apply_grad"
@@ -79,13 +85,31 @@ class MetricsContext:
         self.current_actor: Any = None
         self._lock = threading.Lock()
 
+    @staticmethod
+    def _racefree_copy(d: Dict) -> Dict:
+        """Copy a dict that other (driver) threads may be inserting into.
+
+        Concurrently/union driver threads insert first-time counter/timer
+        keys without locking; a plain ``dict()`` copy can then raise
+        "dictionary changed size during iteration".  Retry — key insertion
+        is rare (values mutating mid-copy is fine)."""
+        for _ in range(1000):
+            try:
+                return dict(d)
+            except RuntimeError:
+                continue
+        return dict(d)  # pragma: no cover - pathological contention
+
+    def snapshot_counters(self) -> Dict[str, int]:
+        return self._racefree_copy(self.counters)
+
     def save(self) -> Dict[str, Any]:
         return {
-            "counters": dict(self.counters),
-            "info": dict(self.info),
+            "counters": self.snapshot_counters(),
+            "info": self._racefree_copy(self.info),
             "timers": {
                 k: {"mean": v.mean, "count": v.count, "throughput": v.mean_throughput}
-                for k, v in self.timers.items()
+                for k, v in self._racefree_copy(self.timers).items()
             },
         }
 

@@ -391,6 +391,9 @@ class ReportMetrics:
     def __init__(self, workers: Optional[WorkerSet] = None):
         self.workers = workers
         self._t0 = time.perf_counter()
+        # None = unknown, probed on first report; False = targets lack
+        # episode_stats(), stop dispatching (and spamming logs) every tick.
+        self._remote_has_stats: Optional[bool] = None
 
     def __call__(self, item: Any) -> Dict[str, Any]:
         metrics = get_metrics()
@@ -404,10 +407,32 @@ class ReportMetrics:
             lw = self.workers.local_worker()
             if hasattr(lw, "episode_stats"):
                 stats.append(lw.episode_stats())
-            try:
-                stats += self.workers.remote_workers().broadcast_sync("episode_stats")
-            except AttributeError:
-                pass
+            # Per-worker stats: dispatch to all live workers in parallel
+            # (batched wait, not N serial round-trips), then absorb per-
+            # worker failures — a dropped shard must not poison reporting.
+            # apply() (not call()) so a missing episode_stats() doesn't hit
+            # the fire-and-forget ERROR logger; after one AttributeError the
+            # capability is cached and dispatch stops entirely.
+            futures = []
+            if self._remote_has_stats is not False:
+                for actor in self.workers.remote_workers():
+                    if not getattr(actor, "alive", True):
+                        continue
+                    try:
+                        futures.append(actor.apply(lambda t: t.episode_stats()))
+                    except RuntimeError:
+                        continue
+            for f in futures:
+                try:
+                    stats.append(f.result())
+                except AttributeError:
+                    self._remote_has_stats = False
+                    break  # targets predate episode_stats(): skip the rest
+                except Exception:
+                    continue
+            else:
+                if futures:
+                    self._remote_has_stats = True
             rewards = [
                 s["episode_reward_mean"]
                 for s in stats

@@ -128,21 +128,88 @@ class Algorithm:
     def to_dot(self) -> str:
         return self._compiled.to_dot()
 
+    # ------------------------------------------------- fault tolerance
+    def recover(self) -> Dict[str, List[str]]:
+        """Heal the worker group after failures: dead rollout workers are
+        restarted in place (factory rebuild) or replaced, then the canonical
+        weights are re-broadcast.  Pool-aware gather loops pick the healed
+        workers back up mid-stream.  Returns a report of what was done."""
+        if self._stopped:
+            raise RuntimeError("Algorithm is stopped")
+        if not hasattr(self._workers, "recover"):
+            raise RuntimeError("workers do not support recover()")
+        return self._workers.recover()
+
+    def add_workers(self, num_workers: int) -> List[str]:
+        """Elastically grow the rollout group mid-training; new workers join
+        the compiled flow's gather loops via the pool version bump."""
+        if self._stopped:
+            raise RuntimeError("Algorithm is stopped")
+        return [a.name for a in self._workers.add_workers(num_workers)]
+
+    def remove_workers(self, num_workers: int = 1) -> List[str]:
+        """Elastically shrink the rollout group mid-training."""
+        if self._stopped:
+            raise RuntimeError("Algorithm is stopped")
+        return self._workers.remove_workers(num_workers)
+
     # -------------------------------------------------------- durability
     def save(self, path: str) -> None:
-        """Checkpoint the canonical policy weights (the paper's §3 model:
-        weights are the only durable state; operator state is rebuilt)."""
+        """Checkpoint the canonical policy weights plus the flow's resumable
+        state (metrics counters, replay-buffer contents + RNG).
+
+        Weights go to ``path`` (.npz, backward compatible); the flow state
+        goes to ``path + ".state.pkl"`` so a mid-stream restore resumes
+        training with identical counters and replay state (ISSUE 2).
+
+        All state is collected *before* any file is written: a dead replay
+        actor raises here (recover() first), never leaving a half-written
+        checkpoint that would later restore silently without flow state."""
+        import pickle
+
         from repro.checkpoint import save_pytree
 
-        save_pytree(path, self._workers.local_worker().get_weights())
+        weights = self._workers.local_worker().get_weights()
+        state: Dict[str, Any] = {"counters": self._it.metrics.snapshot_counters()}
+        if self._replay is not None:
+            try:
+                state["replay"] = [a.sync("get_state") for a in self._replay]
+            except AttributeError:
+                pass  # replay target predates get_state(): counters-only state
+        save_pytree(path, weights)
+        with open(path + ".state.pkl", "wb") as f:
+            pickle.dump(state, f)
 
     def restore(self, path: str) -> None:
-        """Restore weights into the local worker and broadcast to remotes."""
+        """Restore weights into the local worker, broadcast to remotes, and
+        (when a state sidecar exists) restore metrics counters and replay
+        state so training resumes exactly where ``save()`` left off."""
+        import os
+        import pickle
+
         from repro.checkpoint import restore_pytree
 
         lw = self._workers.local_worker()
         lw.set_weights(restore_pytree(path, lw.get_weights()))
         self._workers.sync_weights()
+        sidecar = path + ".state.pkl"
+        if not os.path.exists(sidecar):
+            return
+        with open(sidecar, "rb") as f:
+            state = pickle.load(f)
+        metrics = self._it.metrics
+        metrics.counters.clear()
+        metrics.counters.update(state.get("counters", {}))
+        replay_states = state.get("replay")
+        if replay_states and self._replay is not None:
+            if len(replay_states) != len(self._replay):
+                raise ValueError(
+                    f"checkpoint has {len(replay_states)} replay-actor states "
+                    f"but this Algorithm has {len(self._replay)} replay actors; "
+                    "restore into a matching topology"
+                )
+            for actor, rstate in zip(self._replay, replay_states):
+                actor.sync("set_state", rstate)
 
     # ------------------------------------------------------------ shutdown
     def stop(self) -> None:

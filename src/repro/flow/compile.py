@@ -17,6 +17,7 @@ instead of N — ``benchmarks/bench_streaming.py`` measures the win.
 from __future__ import annotations
 
 import copy
+import logging
 import threading
 import types
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -38,6 +39,8 @@ from repro.core.operators import (
 from repro.flow.spec import EdgeRef, FlowSpec, Node, StageSpec, is_pure
 
 __all__ = ["CompiledFlow", "FlowRuntime", "fuse_for_each", "compose_stages"]
+
+logger = logging.getLogger(__name__)
 
 
 # --------------------------------------------------------------------------
@@ -81,6 +84,7 @@ def _merge_pair(spec: FlowSpec, pred_id: str, node_id: str) -> FlowSpec:
         label=" + ".join(s.label for s in stages),
         parallel=False,
         num_outputs=1,
+        annotations={**pred.annotations, **node.annotations},
     )
     return spec.replace_nodes(nodes)
 
@@ -158,6 +162,15 @@ class FlowRuntime:
             for r in self.resources.values():
                 if r.ident is not None:
                     r.join(timeout=5.0)
+            # Drain learner in-queues so producers blocked on a full
+            # blocking Enqueue wake up and can observe flow teardown.
+            for r in self.resources.values():
+                q = getattr(r, "inqueue", None)
+                while q is not None:
+                    try:
+                        q.get_nowait()
+                    except Exception:
+                        break
 
 
 # --------------------------------------------------------------------------
@@ -172,6 +185,7 @@ class CompiledFlow:
         self.spec = fuse_for_each(spec) if fuse else spec
         self.runtime = FlowRuntime(self.spec)
         self._cache: Dict[str, Any] = {}
+        self._annotated_policies: Dict[int, str] = {}
         inner = self._lower_ref(self.spec.output)
         self._out = self._deferred_start_wrapper(inner)
 
@@ -187,8 +201,21 @@ class CompiledFlow:
         return self._out.take(n)
 
     def stop(self) -> None:
-        """Stop and join all deferred resources (idempotent)."""
+        """Stop and join all deferred resources, then close the lowered
+        iterators so stream teardown (joining Concurrently/union driver
+        threads) happens now rather than at GC time (idempotent)."""
         self.runtime.stop()
+        try:
+            self._out.close()
+        except Exception:  # pragma: no cover - teardown is best-effort
+            pass
+        for obj in self._cache.values():
+            for it in obj if isinstance(obj, list) else [obj]:
+                if isinstance(it, LocalIterator):
+                    try:
+                        it.close()
+                    except Exception:  # pragma: no cover
+                        pass
 
     def to_dot(self) -> str:
         return self.spec.to_dot()
@@ -216,15 +243,47 @@ class CompiledFlow:
         self._cache[nid] = out
         return out
 
+    def _lower_annotations(self, node: Node, actors: Any) -> None:
+        """Apply a node's failure annotations to its source actors.
+
+        This is the lowering step for fault tolerance: the graph carries the
+        policy declaratively; the chosen backend's actors enforce it (gather
+        loops read ``actor.failure_policy``).  The policy is a property of
+        the *actor*, so two nodes annotating the same pool differently is a
+        conflict (last writer wins) — flagged loudly.
+        """
+        policy = node.annotations.get("failure_policy")
+        if policy is None:
+            return
+        from repro.core.executor import FailurePolicy
+
+        FailurePolicy.validate(policy)
+        for a in actors:
+            prior = self._annotated_policies.get(id(a))
+            if prior is not None and prior != policy:
+                logger.warning(
+                    "flow %s: node %s sets failure_policy=%r on actor %s, "
+                    "overriding %r set by another node of this flow — the "
+                    "policy is per-actor, and the last lowered node wins "
+                    "for every stream sharing the pool",
+                    self.spec.name, node.id, policy, getattr(a, "name", a), prior,
+                )
+            self._annotated_policies[id(a)] = policy
+            a.failure_policy = policy
+
     def _lower_node(self, node: Node) -> Any:
         k, p = node.kind, node.params
         if k == "rollouts":
+            self._lower_annotations(node, p["workers"].remote_workers())
             return ParallelRollouts(p["workers"], mode=p["mode"], num_async=p["num_async"])
         if k == "replay":
+            self._lower_annotations(node, p["actors"])
             return Replay(p["actors"], num_async=p["num_async"])
         if k == "par_gradients":
+            self._lower_annotations(node, p["workers"].remote_workers())
             return par_compute_gradients(p["workers"])
         if k == "par_source":
+            self._lower_annotations(node, p["pool"])
             return ParallelIterator.from_actors(p["pool"], p["pull_fn"], name=node.label)
         if k == "from_items":
             return from_items(p["items"], repeat=p["repeat"])
@@ -255,7 +314,10 @@ class CompiledFlow:
             return up.batch_across_shards()
         if k == "enqueue":
             res = self.runtime.resource(p["resource"])
-            return up.for_each(Enqueue(res.inqueue, block=p["block"]))
+            # check=is_alive: a blocking feed must not wedge its driver
+            # thread once the learner is gone (teardown/crash) — it raises
+            # and the Concurrently driver unwinds instead.
+            return up.for_each(Enqueue(res.inqueue, block=p["block"], check=res.is_alive))
         if k == "concurrently":
             ops = [self._lower_ref(r) for r in node.inputs]
             return Concurrently(

@@ -144,11 +144,16 @@ def build_apex(
     max_weight_sync_delay: int = 400,
     num_async_rollouts: int = 2,
     num_async_replay: int = 4,
+    block_on_enqueue: bool = True,
 ) -> FlowSpec:
     """Listing A3: three concurrent sub-flows around a learner thread.
 
     The learner thread is a *deferred resource*: declared here, constructed
     at compile time, started on the first pull, joined on ``stop()``.
+    ``block_on_enqueue=False`` reproduces the paper's lossy Ape-X feed: when
+    the learner falls behind, batches are dropped and counted
+    (``num_samples_dropped`` in train() results) instead of backpressuring
+    the replay sub-flow.
     """
     spec = FlowSpec("apex")
     learner = spec.learner_thread(workers)
@@ -165,7 +170,7 @@ def build_apex(
     replay_op = (
         spec.replay(replay_actors, num_async=num_async_replay)
         .zip_with_source_actor()
-        .enqueue(learner, block=True)
+        .enqueue(learner, block=block_on_enqueue)
     )
 
     # (3) learner out-queue -> priority updates + target sync + metrics.

@@ -72,6 +72,10 @@ class Node:
     label: str
     parallel: bool  # True -> output stream is a ParallelIterator
     num_outputs: int = 1
+    # Resource/failure annotations (executor runtime): e.g.
+    # {"failure_policy": "drop_shard", "resources": {"num_cpus": 1}}.
+    # ``compile()`` lowers failure policies onto the node's source actors.
+    annotations: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass(frozen=True)
@@ -114,6 +118,26 @@ class Stream:
     @property
     def ref(self) -> EdgeRef:
         return (self.node_id, self.port)
+
+    @property
+    def node(self) -> "Node":
+        return self.spec.nodes[self.node_id]
+
+    def annotate(self, **annotations: Any) -> "Stream":
+        """Attach resource/failure annotations to the producing node.
+
+        Recognized by ``compile()``: ``failure_policy`` ("raise" | "restart"
+        | "drop_shard") is applied to the node's source actors at lowering
+        time.  Other keys (e.g. ``resources={"num_cpus": 1}``) are carried
+        as placement metadata for schedulers/introspection.
+        """
+        import dataclasses
+
+        node = self.spec.nodes[self.node_id]
+        self.spec.nodes[self.node_id] = dataclasses.replace(
+            node, annotations={**node.annotations, **annotations}
+        )
+        return self
 
     # ----------------------------------------------------- transformations
     def for_each(self, fn: Callable, label: Optional[str] = None) -> "Stream":
@@ -230,6 +254,7 @@ class FlowSpec:
         label: str,
         parallel: bool,
         num_outputs: int = 1,
+        annotations: Optional[Dict[str, Any]] = None,
     ) -> Node:
         for nid, port in inputs:
             if nid not in self.nodes:
@@ -244,37 +269,88 @@ class FlowSpec:
             label=label,
             parallel=parallel,
             num_outputs=num_outputs,
+            annotations=dict(annotations or {}),
         )
         self.nodes[node.id] = node
         return node
 
     # ------------------------------------------------------------ sources
-    def rollouts(self, workers: Any, mode: str = "bulk_sync", num_async: int = 1) -> Stream:
-        """Experience stream from the rollout workers (paper Fig 5)."""
+    @staticmethod
+    def _source_annotations(
+        failure_policy: Optional[str], resources: Optional[Dict[str, Any]]
+    ) -> Dict[str, Any]:
+        ann: Dict[str, Any] = {}
+        if failure_policy is not None:
+            from repro.core.executor import FailurePolicy
+
+            ann["failure_policy"] = FailurePolicy.validate(failure_policy)
+        if resources is not None:
+            ann["resources"] = dict(resources)
+        return ann
+
+    def rollouts(
+        self,
+        workers: Any,
+        mode: str = "bulk_sync",
+        num_async: int = 1,
+        failure_policy: Optional[str] = None,
+        resources: Optional[Dict[str, Any]] = None,
+    ) -> Stream:
+        """Experience stream from the rollout workers (paper Fig 5).
+
+        ``failure_policy`` annotates the node; ``compile()`` lowers it onto
+        the rollout actors so gather loops restart/drop/raise per-worker.
+        """
         if mode not in ("raw", "bulk_sync", "async"):
             raise ValueError(f"unknown rollout mode {mode!r}")
         node = self._add(
             "rollouts", (), {"workers": workers, "mode": mode, "num_async": num_async},
             f"ParallelRollouts({mode})", parallel=(mode == "raw"),
+            annotations=self._source_annotations(failure_policy, resources),
         )
         return Stream(self, node.id, parallel=(mode == "raw"))
 
-    def replay(self, actors: Any, num_async: int = 4) -> Stream:
+    def replay(
+        self,
+        actors: Any,
+        num_async: int = 4,
+        failure_policy: Optional[str] = None,
+        resources: Optional[Dict[str, Any]] = None,
+    ) -> Stream:
         """Replayed-batch stream from replay-buffer actors (Ape-X §5.2)."""
         node = self._add(
-            "replay", (), {"actors": actors, "num_async": num_async}, "Replay", False
+            "replay", (), {"actors": actors, "num_async": num_async}, "Replay", False,
+            annotations=self._source_annotations(failure_policy, resources),
         )
         return Stream(self, node.id)
 
-    def par_gradients(self, workers: Any) -> Stream:
+    def par_gradients(
+        self,
+        workers: Any,
+        failure_policy: Optional[str] = None,
+        resources: Optional[Dict[str, Any]] = None,
+    ) -> Stream:
         """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C)."""
-        node = self._add("par_gradients", (), {"workers": workers}, "ComputeGradients", True)
+        node = self._add(
+            "par_gradients", (), {"workers": workers}, "ComputeGradients", True,
+            annotations=self._source_annotations(failure_policy, resources),
+        )
         return Stream(self, node.id, parallel=True)
 
-    def par_source(self, pool: Any, pull_fn: Callable, name: str = "ParSource") -> Stream:
+    def par_source(
+        self,
+        pool: Any,
+        pull_fn: Callable,
+        name: str = "ParSource",
+        failure_policy: Optional[str] = None,
+        resources: Optional[Dict[str, Any]] = None,
+    ) -> Stream:
         """Generic parallel source over an actor pool (MAML inner loop, LM
         data pipelines)."""
-        node = self._add("par_source", (), {"pool": pool, "pull_fn": pull_fn}, name, True)
+        node = self._add(
+            "par_source", (), {"pool": pool, "pull_fn": pull_fn}, name, True,
+            annotations=self._source_annotations(failure_policy, resources),
+        )
         return Stream(self, node.id, parallel=True)
 
     def from_items(self, items: Sequence[Any], repeat: bool = False) -> Stream:
@@ -415,6 +491,9 @@ class FlowSpec:
                 label = "\\n".join(esc(s.label) for s in node.params["stages"])
             else:
                 label = esc(node.label)
+            if node.annotations:
+                ann = ", ".join(f"{k}={v}" for k, v in sorted(node.annotations.items()))
+                label = f"{label}\\n[{esc(ann)}]"
             shape = ""
             if node.kind == "concurrently":
                 shape = ", shape=hexagon"

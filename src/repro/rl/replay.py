@@ -101,5 +101,39 @@ class ReplayBuffer:
             "sampled": self.num_sampled,
         }
 
+    # ------------------------------------------------------------ durability
+    def get_state(self) -> Dict[str, Any]:
+        """Full resumable state (storage, priorities, cursors, RNG) for
+        ``Algorithm.save()``: a restore replays *identically*, including the
+        sampling stream."""
+        with self._lock:
+            return {
+                "cols": {k: v.copy() for k, v in self._cols.items()},
+                "priorities": self._priorities.copy(),
+                "next": self._next,
+                "size": self._size,
+                "max_prio": self._max_prio,
+                "num_added": self.num_added,
+                "num_sampled": self.num_sampled,
+                "rng": self._rng.bit_generator.state,
+            }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        if len(state["priorities"]) != self.capacity:
+            raise ValueError(
+                f"checkpointed replay state has capacity {len(state['priorities'])} "
+                f"but this buffer was built with capacity {self.capacity}; "
+                "restore into a matching buffer"
+            )
+        with self._lock:
+            self._cols = {k: v.copy() for k, v in state["cols"].items()}
+            self._priorities = state["priorities"].copy()
+            self._next = int(state["next"])
+            self._size = int(state["size"])
+            self._max_prio = float(state["max_prio"])
+            self.num_added = int(state["num_added"])
+            self.num_sampled = int(state["num_sampled"])
+            self._rng.bit_generator.state = state["rng"]
+
     def __len__(self) -> int:
         return self._size

@@ -1,0 +1,246 @@
+"""Deterministic chaos-testing harness for the executor runtime (ISSUE 2).
+
+Everything here is seeded and call-count driven, so every failure path in
+the supervision/gather layer is exercised *reproducibly*:
+
+  * ``RaiseOnNth``  — raise on the nth call of a method (``sticky=True``
+    keeps raising from the nth call on, simulating a dead worker).
+  * ``Hang``        — block inside the nth call (event-released for thread
+    backends; duration-bounded so suites cannot wedge).
+  * ``SlowWorker``  — seeded per-call delays (straggler simulation).
+
+``FaultInjector`` wraps *any* worker target and applies faults by method
+name; ``ChaosFactory`` is a picklable factory wrapper so injected workers
+run under ``ProcessBackend`` too.  ``StubWorker`` is a numpy-only rollout
+worker implementing the full WorkerSet protocol with outputs that are a
+pure function of (worker index, call number) — the reference the
+thread/process backend matrix asserts exact equality against.
+
+Write a chaos test (see README "Chaos testing"):
+
+    faults = {2: [chaos.RaiseOnNth("sample", n=3, sticky=True)]}
+    factory = chaos.ChaosFactory(chaos.make_stub_worker, faults, seed=7)
+    ws = WorkerSet.create(factory, 4, failure_policy="drop_shard")
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.rl.sample_batch import SampleBatch
+
+__all__ = [
+    "Fault",
+    "RaiseOnNth",
+    "Hang",
+    "SlowWorker",
+    "FaultInjector",
+    "ChaosFactory",
+    "StubWorker",
+    "make_stub_worker",
+]
+
+
+class Fault:
+    """Base class: ``apply(call_index, rng)`` runs before the real call."""
+
+    method: str
+
+    def apply(self, call_index: int, rng: np.random.Generator) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclass
+class RaiseOnNth(Fault):
+    """Raise on the nth call of ``method`` (1-based).
+
+    ``sticky=True`` raises on every call from the nth on — the deterministic
+    stand-in for a permanently dead worker (drop-shard scenarios).  With
+    ``sticky=False`` the worker "recovers" after the one failure, which is
+    the restart-policy scenario (a supervisor rebuild also resets counts).
+    """
+
+    method: str
+    n: int
+    exc: type = RuntimeError
+    message: str = "chaos"
+    sticky: bool = False
+
+    def apply(self, call_index: int, rng: np.random.Generator) -> None:
+        if call_index == self.n or (self.sticky and call_index >= self.n):
+            raise self.exc(f"{self.message}: {self.method}() call #{call_index}")
+
+
+@dataclass
+class Hang(Fault):
+    """Block inside the nth call of ``method``.
+
+    With a ``release`` event (thread backend) the hang ends when the test
+    sets it; otherwise it sleeps ``duration`` seconds (process backend —
+    events do not pickle — where the test typically kills the worker).
+    """
+
+    method: str
+    n: int
+    duration: float = 30.0
+    sticky: bool = False
+    release: Optional[threading.Event] = field(default=None, repr=False)
+
+    def apply(self, call_index: int, rng: np.random.Generator) -> None:
+        if call_index == self.n or (self.sticky and call_index >= self.n):
+            if self.release is not None:
+                self.release.wait(self.duration)
+            else:
+                time.sleep(self.duration)
+
+
+@dataclass
+class SlowWorker(Fault):
+    """Seeded straggler: delay every call of ``method`` from ``first_call``
+    on by an exponential draw from the injector's RNG (deterministic given
+    the seed, because actor calls are serialized)."""
+
+    method: str
+    mean_delay: float = 0.005
+    first_call: int = 1
+
+    def apply(self, call_index: int, rng: np.random.Generator) -> None:
+        if call_index >= self.first_call:
+            time.sleep(float(rng.exponential(self.mean_delay)))
+
+
+class FaultInjector:
+    """Wrap a worker target; apply faults by method name + call count.
+
+    Transparent for untouched methods/attributes.  The per-method call
+    counters and the seeded RNG make every schedule reproducible; a
+    supervisor restart rebuilds the injector via its factory, resetting
+    counts (fresh worker semantics).
+    """
+
+    def __init__(self, target: Any, faults: List[Fault], seed: int = 0):
+        self._target = target
+        self._faults = list(faults)
+        self._counts: Dict[str, int] = {}
+        self._rng = np.random.default_rng(seed)
+
+    def fault_counts(self) -> Dict[str, int]:
+        """Per-method call counts (introspection for tests)."""
+        return dict(self._counts)
+
+    def __getattr__(self, name: str) -> Any:
+        if name.startswith("_"):
+            raise AttributeError(name)
+        target = self.__dict__["_target"]
+        attr = getattr(target, name)
+        faults = [f for f in self.__dict__["_faults"] if f.method == name]
+        if not callable(attr) or not faults:
+            return attr
+        counts, rng = self.__dict__["_counts"], self.__dict__["_rng"]
+
+        def _wrapped(*args: Any, **kwargs: Any) -> Any:
+            counts[name] = i = counts.get(name, 0) + 1
+            for f in faults:
+                f.apply(i, rng)
+            return attr(*args, **kwargs)
+
+        _wrapped.__name__ = name
+        return _wrapped
+
+
+@dataclass
+class ChaosFactory:
+    """Picklable per-index worker factory with fault plans.
+
+    ``base(index)`` builds the real worker; workers whose index appears in
+    ``faults_by_index`` are wrapped in a ``FaultInjector`` seeded by
+    ``seed * 1000 + index``.  Being a module-level dataclass, it pickles —
+    the ProcessBackend contract — as long as ``base`` and the faults do
+    (avoid ``Hang(release=Event())`` for process workers).
+    """
+
+    base: Callable[[int], Any]
+    faults_by_index: Dict[int, List[Fault]] = field(default_factory=dict)
+    seed: int = 0
+
+    def __call__(self, index: int) -> Any:
+        worker = self.base(index)
+        faults = self.faults_by_index.get(index)
+        if not faults:
+            return worker
+        return FaultInjector(worker, faults, seed=self.seed * 1000 + index)
+
+
+class StubWorker:
+    """Deterministic numpy-only rollout worker (full WorkerSet protocol).
+
+    Every output is a pure function of (worker index, per-method call
+    count), so the thread/process backend matrix can assert *exact* equality
+    of streams, and chaos tests can tell exactly which worker produced an
+    item (``obs // 10_000``).
+    """
+
+    def __init__(self, index: int = 0, batch_size: int = 8):
+        self.index = index
+        self.batch_size = batch_size
+        self.weights = np.zeros((2,), np.float32)
+        self.target_weights = np.zeros((2,), np.float32)
+        self._n_samples = 0
+        self._n_trained = 0
+
+    # ------------------------------------------------------------- sampling
+    def sample(self) -> SampleBatch:
+        self._n_samples += 1
+        base = self.index * 10_000 + self._n_samples * 100
+        obs = np.arange(self.batch_size, dtype=np.float64) + base
+        return SampleBatch(
+            {
+                "obs": obs,
+                "rewards": np.full((self.batch_size,), float(self.index), np.float32),
+            }
+        )
+
+    def sample_with_count(self) -> Tuple[SampleBatch, int]:
+        b = self.sample()
+        return b, b.count
+
+    # ------------------------------------------------------------- learning
+    def learn_on_batch(self, batch: SampleBatch, policy_id: Any = None) -> Dict[str, Any]:
+        self._n_trained += batch.count
+        self.weights = self.weights + np.float32(1.0)
+        return {"loss": float(np.asarray(batch["obs"]).mean()), "trained": self._n_trained}
+
+    def compute_gradients(self, batch: SampleBatch) -> Tuple[Any, Dict[str, Any]]:
+        grads = {"w": np.full((2,), np.asarray(batch["obs"]).mean(), np.float64)}
+        return grads, {"loss": float(grads["w"][0]), "batch_count": batch.count}
+
+    def apply_gradients(self, grads: Any) -> None:
+        self.weights = self.weights - np.float32(1e-3) * grads["w"].astype(np.float32)
+
+    # ------------------------------------------------------------ messaging
+    def get_weights(self) -> np.ndarray:
+        return self.weights
+
+    def set_weights(self, weights: np.ndarray) -> None:
+        self.weights = np.asarray(weights, np.float32).copy()
+
+    def update_target(self) -> None:
+        self.target_weights = self.weights.copy()
+
+    def episode_stats(self) -> Dict[str, float]:
+        return {"episode_reward_mean": float(self.index), "episodes": self._n_samples}
+
+
+def make_stub_worker(index: int) -> StubWorker:
+    """Module-level (hence picklable) StubWorker factory."""
+    return StubWorker(index)
+
+
+def expected_obs_base(index: int, nth_sample: int) -> int:
+    """The obs offset StubWorker.sample() produces for a given call."""
+    return index * 10_000 + nth_sample * 100

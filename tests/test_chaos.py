@@ -1,0 +1,209 @@
+"""Chaos suite: seeded fault injection against the executor runtime.
+
+Every test uses the deterministic harness in ``tests/chaos.py`` (raise-on-
+nth-call, hang, slow-worker) so failure paths reproduce exactly.  Marked
+``chaos`` (see pytest.ini); run with ``scripts/tier1.sh --chaos``."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import chaos
+import repro.flow as flow
+from repro.core import WorkerSet
+from repro.core.metrics import (
+    NUM_SHARDS_DROPPED,
+    NUM_WORKER_FAILURES,
+    MetricsContext,
+    set_metrics_for_thread,
+)
+from repro.core.operators import ParallelRollouts, TrainOneStep
+from repro.flow.spec import FlowSpec
+
+pytestmark = pytest.mark.chaos
+
+BACKENDS = ["thread", "process"]
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request):
+    return request.param
+
+
+def build_stub_plan(ws, failure_policy="drop_shard"):
+    """A minimal but complete training flow over StubWorkers: async rollouts
+    -> TrainOneStep (local learn + weight broadcast) -> metrics report."""
+    spec = FlowSpec("chaos_plan")
+    out = (
+        spec.rollouts(ws, mode="async", num_async=1, failure_policy=failure_policy)
+        .for_each(TrainOneStep(ws))
+    )
+    spec.set_output(out.report(ws))
+    return spec
+
+
+# ----------------------------------------------------------- the acceptance
+def test_kill_2_of_4_workers_mid_plan_completes_training(backend):
+    """ISSUE 2 acceptance: a chaos test killing 2 of 4 workers mid-plan
+    completes training with the shrunken shard set and records the failures
+    in metrics — through the full Algorithm/flow stack."""
+    factory = chaos.ChaosFactory(
+        chaos.make_stub_worker,
+        {
+            2: [chaos.RaiseOnNth("sample", n=3, sticky=True, message="node-loss")],
+            4: [chaos.RaiseOnNth("sample", n=4, sticky=True, message="node-loss")],
+        },
+        seed=7,
+    )
+    ws = WorkerSet.create(factory, 4, backend=backend, failure_policy="drop_shard")
+    algo = flow.Algorithm.from_plan(build_stub_plan(ws), ws, own_workers=True)
+
+    result = algo.train()  # training starts with all 4 shards
+    deadline = time.time() + 30
+    while result["counters"].get(NUM_SHARDS_DROPPED, 0) < 2 and time.time() < deadline:
+        result = algo.train()
+
+    # Failures recorded in train() result metrics.
+    assert result["counters"][NUM_SHARDS_DROPPED] == 2
+    assert result["counters"][NUM_WORKER_FAILURES] >= 2
+    # ... and training continues on the shrunken shard set.
+    before = result["counters"]["num_steps_trained"]
+    for _ in range(6):
+        result = algo.train()
+    assert result["counters"]["num_steps_trained"] > before
+    assert result["counters"][NUM_SHARDS_DROPPED] == 2  # no further losses
+    # Survivors keep learning; the learner weights kept moving.
+    assert float(ws.local_worker().get_weights()[0]) > 0
+    algo.stop()
+
+
+def test_algorithm_recover_after_worker_death(backend):
+    """recover() heals dead workers mid-training and the stream re-expands."""
+    factory = chaos.ChaosFactory(
+        chaos.make_stub_worker,
+        {1: [chaos.RaiseOnNth("sample", n=2, sticky=True)]},
+    )
+    ws = WorkerSet.create(
+        factory, 2, backend=backend,
+        max_restarts=1, backoff_base=0.0, failure_policy="restart",
+    )
+    algo = flow.Algorithm.from_plan(build_stub_plan(ws, "restart"), ws)
+    algo.train()
+    deadline = time.time() + 30
+    while ws.num_healthy_workers() == 2 and time.time() < deadline:
+        algo.train()
+    assert ws.num_healthy_workers() == 1
+
+    report = algo.recover()
+    assert report["restarted"] or report["replaced"]
+    assert ws.num_healthy_workers() == 2
+    algo.train()  # still trains after recovery
+    algo.stop()
+
+
+def test_elastic_resize_through_algorithm(backend):
+    ws = WorkerSet.create(chaos.make_stub_worker, 2, backend=backend)
+    algo = flow.Algorithm.from_plan(build_stub_plan(ws, "raise"), ws)
+    algo.train()
+    added = algo.add_workers(2)
+    assert added == ["rollout-3", "rollout-4"]
+    assert len(ws.remote_workers()) == 4
+    # New workers received the canonical weights on admission.
+    deadline = time.time() + 20
+    while time.time() < deadline:
+        algo.train()
+        w3 = [a for a in ws.remote_workers() if a.name == "rollout-3"]
+        if w3 and float(np.asarray(w3[0].sync("get_weights"))[0]) > 0:
+            break
+    removed = algo.remove_workers(2)
+    assert removed == ["rollout-4", "rollout-3"]
+    assert len(ws.remote_workers()) == 2
+    algo.train()
+    algo.stop()
+
+
+# ------------------------------------------------------------- fault shapes
+def test_hang_does_not_block_async_gather():
+    """A hung worker must not stall the other shards of an async gather."""
+    release = threading.Event()
+    factory = chaos.ChaosFactory(
+        chaos.make_stub_worker,
+        {1: [chaos.Hang("sample", n=2, duration=60.0, release=release)]},
+    )
+    ws = WorkerSet.create(factory, 2, failure_policy="drop_shard")
+    try:
+        it = ParallelRollouts(ws, mode="async", num_async=1)
+        t0 = time.time()
+        got = it.take(10)
+        assert time.time() - t0 < 10.0, "hung worker stalled the stream"
+        # Worker 2 supplied the tail while worker 1 hung.
+        tail_workers = {int(np.asarray(b["obs"])[0]) // 10_000 for b in got[-6:]}
+        assert tail_workers == {2}
+    finally:
+        release.set()  # let the hung mailbox thread unwind
+        ws.stop()
+
+
+def test_slow_worker_is_deterministic_and_stream_completes():
+    """Seeded stragglers: the same seed produces the same per-shard stream."""
+
+    def run():
+        factory = chaos.ChaosFactory(
+            chaos.make_stub_worker,
+            {1: [chaos.SlowWorker("sample", mean_delay=0.002)]},
+            seed=123,
+        )
+        ws = WorkerSet.create(factory, 2)
+        try:
+            it = ParallelRollouts(ws, mode="raw").gather_sync()
+            return [int(np.asarray(b["obs"])[0]) for b in it.take(8)]
+        finally:
+            ws.stop()
+
+    first, second = run(), run()
+    assert first == second
+    assert first == [10100, 20100, 10200, 20200, 10300, 20300, 10400, 20400]
+
+
+def test_injector_transparent_without_faults():
+    w = chaos.FaultInjector(chaos.StubWorker(3), [], seed=0)
+    assert w.index == 3
+    assert w.sample().count == 8
+    assert w.episode_stats()["episodes"] == 1
+
+
+def test_raise_on_nth_is_exact():
+    w = chaos.FaultInjector(
+        chaos.StubWorker(1), [chaos.RaiseOnNth("sample", n=3, exc=ValueError)], seed=0
+    )
+    assert w.sample().count == 8
+    assert w.sample().count == 8
+    with pytest.raises(ValueError, match="call #3"):
+        w.sample()
+    assert w.sample().count == 8  # non-sticky: recovers after the nth
+    assert w.fault_counts() == {"sample": 4}
+
+
+def test_sticky_fault_simulates_death():
+    w = chaos.FaultInjector(
+        chaos.StubWorker(1), [chaos.RaiseOnNth("sample", n=2, sticky=True)], seed=0
+    )
+    w.sample()
+    for _ in range(3):
+        with pytest.raises(RuntimeError):
+            w.sample()
+
+
+def test_process_worker_kill_and_recover_roundtrip():
+    """True process loss: kill the OS process, then recover() the set."""
+    ws = WorkerSet.create(chaos.make_stub_worker, 2, backend="process")
+    victim = ws.remote_workers()[0]
+    victim.kill()
+    assert ws.num_healthy_workers() == 1
+    report = ws.recover()
+    assert report["restarted"] == ["rollout-1"]
+    assert ws.num_healthy_workers() == 2
+    assert victim.sync("sample").count == 8
+    ws.stop()

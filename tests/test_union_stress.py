@@ -1,0 +1,129 @@
+"""Stress tests: union(deterministic=False) / Concurrently under contention.
+
+ISSUE 2 satellites: (a) no lost or duplicated items with 8+ producer
+branches and randomized (seeded) delays; (b) async-union driver threads are
+joined on iterator teardown instead of leaking across tests."""
+
+import random
+import threading
+import time
+
+import pytest
+
+import repro.core as c
+
+
+def union_driver_threads():
+    return [t for t in threading.enumerate() if t.name.startswith("union-drive")]
+
+
+def delayed_branch(branch_id, n_items, seed, max_delay=0.002):
+    """A branch emitting (branch_id, seq) with seeded random per-item delays."""
+    rnd = random.Random(seed * 7919 + branch_id)
+
+    def _delay(item):
+        time.sleep(rnd.random() * max_delay)
+        return item
+
+    return c.from_items([(branch_id, i) for i in range(n_items)]).for_each(_delay)
+
+
+@pytest.mark.parametrize("n_branches,n_items", [(8, 40), (12, 25)])
+def test_union_async_no_lost_or_duplicated_items(n_branches, n_items):
+    branches = [delayed_branch(b, n_items, seed=1) for b in range(n_branches)]
+    merged = branches[0].union(*branches[1:], deterministic=False)
+    out = merged.take(n_branches * n_items)
+
+    expected = {(b, i) for b in range(n_branches) for i in range(n_items)}
+    assert len(out) == len(expected), "items lost"
+    assert set(out) == expected, "items lost or duplicated"
+    assert len(set(out)) == len(out), "duplicated items"
+    # Per-branch FIFO survives contention.
+    for b in range(n_branches):
+        seq = [i for bb, i in out if bb == b]
+        assert seq == list(range(n_items))
+    merged.close()
+
+
+def test_concurrently_async_under_contention():
+    n_branches, n_items = 9, 30
+    ops = [delayed_branch(b, n_items, seed=2) for b in range(n_branches)]
+    merged = c.Concurrently(ops, mode="async")
+    out = merged.take(n_branches * n_items)
+    assert set(out) == {(b, i) for b in range(n_branches) for i in range(n_items)}
+    assert len(out) == n_branches * n_items
+    merged.close()
+
+
+def test_concurrently_round_robin_under_contention():
+    n_branches, n_items = 8, 20
+    ops = [delayed_branch(b, n_items, seed=3, max_delay=0.001) for b in range(n_branches)]
+    merged = c.Concurrently(ops, mode="round_robin")
+    out = merged.take(n_branches * n_items)
+    assert set(out) == {(b, i) for b in range(n_branches) for i in range(n_items)}
+    # Deterministic interleave: round r emits every alive branch in order.
+    assert out[:n_branches] == [(b, 0) for b in range(n_branches)]
+    merged.close()
+
+
+def test_union_async_driver_threads_joined_on_close():
+    """Satellite: Concurrently/union async driver threads must not leak."""
+    baseline = len(union_driver_threads())
+    merged = c.Concurrently(
+        [c.from_items([(b, i) for i in range(1000)]) for b in range(6)],
+        mode="async",
+    )
+    merged.take(30)  # partial consumption: drivers still live/blocked
+    assert len(union_driver_threads()) > baseline
+    merged.close()
+    deadline = time.time() + 5
+    while len(union_driver_threads()) > baseline and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(union_driver_threads()) == baseline, "driver threads leaked"
+
+
+def test_union_async_driver_threads_joined_on_exhaustion():
+    baseline = len(union_driver_threads())
+    merged = c.from_items([1, 2]).union(c.from_items([3, 4]), deterministic=False)
+    assert sorted(merged.take(10)) == [1, 2, 3, 4]  # stream drains
+    deadline = time.time() + 5
+    while len(union_driver_threads()) > baseline and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(union_driver_threads()) == baseline
+    merged.close()
+
+
+def test_nested_union_close_propagates():
+    baseline = len(union_driver_threads())
+    inner = c.from_items(range(1000)).union(c.from_items(range(1000)))
+    outer = inner.union(c.from_items(range(1000)))
+    outer.take(10)
+    outer.close()
+    deadline = time.time() + 5
+    while len(union_driver_threads()) > baseline and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(union_driver_threads()) == baseline, "nested drivers leaked"
+
+
+def test_algorithm_stop_joins_flow_threads():
+    """Flow-level teardown: Algorithm.stop() closes the compiled stream and
+    joins its Concurrently drivers (plus learner threads, already covered)."""
+    import chaos
+    import repro.flow as flow
+    from repro.core import WorkerSet
+    from repro.flow.spec import FlowSpec
+
+    baseline = len(union_driver_threads())
+    ws = WorkerSet.create(chaos.make_stub_worker, 2)
+    spec = FlowSpec("teardown")
+    a = spec.rollouts(ws, mode="async").for_each(flow.pure(lambda b: b.count), label="count")
+    bq = spec.rollouts(ws, mode="bulk_sync").for_each(flow.pure(lambda b: b.count), label="count2")
+    spec.set_output(spec.concurrently([a, bq], mode="async"))
+    algo = flow.Algorithm.from_plan(spec, ws)
+    algo.iterate(5)
+    assert len(union_driver_threads()) > baseline
+    algo.stop()
+    deadline = time.time() + 5
+    while len(union_driver_threads()) > baseline and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(union_driver_threads()) == baseline, "flow teardown leaked drivers"
