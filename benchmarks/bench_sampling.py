@@ -3,6 +3,10 @@
 Dummy policy (one trainable scalar) isolates the data-movement overheads of
 the executor itself.  The paper's claim: the flow version matches or exceeds
 the hand-written loop thanks to batched waits.
+
+Process-backend sampling throughput (shared-memory vs pickle-pipe data
+plane, the BENCH_PR3 gate) lives in ``benchmarks/bench_transport.py`` —
+that suite forks numpy-only workers and must run before JAX is imported.
 """
 
 from __future__ import annotations

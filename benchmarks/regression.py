@@ -1,0 +1,78 @@
+"""Benchmark regression gate (ISSUE 3): compare a fresh run to the
+committed baseline and fail on throughput regressions.
+
+The baseline (``BENCH_PR3.json``) carries a ``gated`` section::
+
+    "gated": {
+        "transport_shm_speedup_256kb": {"min": 1.5, "value": 1.6},
+        ...
+    }
+
+A gated metric passes when ``current >= max(min, value * (1 - tolerance))``:
+``min`` is the hard acceptance floor (e.g. the >=1.5x shm-vs-pickle claim),
+``value`` a conservative capability level for CI-class machines, and
+``tolerance`` the ISSUE's 10% regression budget.  Gated metrics are
+*ratios* between implementations measured in the same run, so the gate
+transfers across machines — absolute MB/s numbers are recorded for humans
+but never gated.
+
+Usage:
+    python -m benchmarks.regression --baseline BENCH_PR3.json --current out.json
+or let ``benchmarks.run --json out.json --gate BENCH_PR3.json`` call it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+DEFAULT_TOLERANCE = 0.10
+
+
+def check(
+    current: Dict, baseline: Dict, tolerance: float = DEFAULT_TOLERANCE
+) -> List[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures: List[str] = []
+    cur_metrics = current.get("metrics", {})
+    for name, spec in sorted(baseline.get("gated", {}).items()):
+        value = cur_metrics.get(name)
+        if value is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        floor = float(spec.get("min", 0.0))
+        ref = float(spec.get("value", floor))
+        need = max(floor, ref * (1.0 - tolerance))
+        if float(value) < need:
+            failures.append(
+                f"{name}: {value} < required {need:.3f} "
+                f"(floor {floor}, baseline {ref}, tolerance {tolerance:.0%})"
+            )
+    return failures
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures = check(current, baseline, tolerance=args.tolerance)
+    if failures:
+        print("BENCH REGRESSION GATE: FAIL", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    gated = sorted(baseline.get("gated", {}))
+    print(f"BENCH REGRESSION GATE: PASS ({len(gated)} gated metrics: {', '.join(gated)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

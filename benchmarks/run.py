@@ -7,14 +7,25 @@ Prints ``name,value,derived`` CSV rows:
   * Fig 13b  -> bench_async_opt    (async optimization throughput parity)
   * Fig 14   -> bench_multiagent   (PPO+DQN composition vs Amdahl ideal)
   * Fig 15   -> bench_streaming    (vs streaming-system state-serialization)
+  * Data plane -> bench_transport  (shm vs pickle process transports,
+                                    sample->learn latency, bytes/step)
   * Roofline -> roofline           (dry-run sweep summary)
 
-Run: ``PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]``
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only name] [--suites a,b]
+[--fast] [--json out.json] [--gate BENCH_PR3.json]``
+
+``--json`` additionally writes a machine-readable result file (metrics +
+the gated-metric specs exported by the suites that ran); ``--gate``
+compares that result against a committed baseline via
+``benchmarks.regression`` and exits non-zero on a >10% regression of any
+gated metric — the CI bench stage (``scripts/tier1.sh --bench``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -22,41 +33,119 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, help="run a single suite")
+    ap.add_argument("--suites", default=None, help="comma-separated suite subset")
     ap.add_argument("--fast", action="store_true", help="fewer iterations")
+    ap.add_argument("--json", default=None, help="write metrics JSON to this path")
+    ap.add_argument("--gate", default=None, help="baseline JSON to gate against")
+    ap.add_argument("--tolerance", type=float, default=None, help="gate tolerance")
     args = ap.parse_args()
 
-    from benchmarks import (
-        bench_async_opt,
-        bench_loc,
-        bench_multiagent,
-        bench_sampling,
-        bench_streaming,
-        roofline,
-    )
+    # Suites import lazily: the transport suite forks numpy-only workers
+    # and must be runnable without JAX ever having been imported into the
+    # driver (fork-with-threads hygiene).
+    def _lazy(module: str, **kwargs):
+        def _run():
+            import importlib
+
+            return importlib.import_module(f"benchmarks.{module}").run(**kwargs)
+
+        return _run
 
     suites = {
-        "loc": lambda: bench_loc.run(),
-        "sampling": lambda: bench_sampling.run(iters=20 if args.fast else 50),
-        "async_opt": lambda: bench_async_opt.run(iters=15 if args.fast else 40),
-        "multiagent": lambda: bench_multiagent.run(iters=8 if args.fast else 20),
-        "streaming": lambda: bench_streaming.run(iters=3 if args.fast else 5),
-        "roofline": lambda: roofline.run(),
+        # transport runs first: it forks worker processes and must do so
+        # before any JAX-importing suite makes the driver multithreaded.
+        "transport": _lazy(
+            "bench_transport",
+            iters=100 if args.fast else 200,
+            trials=3 if args.fast else 4,
+        ),
+        "loc": _lazy("bench_loc"),
+        "sampling": _lazy("bench_sampling", iters=20 if args.fast else 50),
+        "async_opt": _lazy("bench_async_opt", iters=15 if args.fast else 40),
+        "multiagent": _lazy("bench_multiagent", iters=8 if args.fast else 20),
+        "streaming": _lazy("bench_streaming", iters=3 if args.fast else 5),
+        "roofline": _lazy("roofline"),
     }
+
+    def _gated_specs(selected_suites):
+        # Generic: any suite module may export GATED = {metric: spec};
+        # imported only for suites that ran (they are in sys.modules by now,
+        # so this re-import is free and stays fork-hygienic).
+        import importlib
+
+        module_by_suite = {
+            "loc": "bench_loc",
+            "sampling": "bench_sampling",
+            "async_opt": "bench_async_opt",
+            "multiagent": "bench_multiagent",
+            "streaming": "bench_streaming",
+            "transport": "bench_transport",
+            "roofline": "roofline",
+        }
+        out = {}
+        for suite in sorted(selected_suites):
+            mod = importlib.import_module(f"benchmarks.{module_by_suite[suite]}")
+            out.update(getattr(mod, "GATED", {}))
+        return out
+
+    selected = set(suites)
+    if args.only:
+        selected = {args.only}
+    elif args.suites:
+        selected = {s.strip() for s in args.suites.split(",") if s.strip()}
+    unknown = selected - set(suites)
+    if unknown:
+        print(f"unknown suites: {sorted(unknown)}", file=sys.stderr)
+        sys.exit(2)
+
     print("name,value,derived")
+    metrics = {}
     failures = 0
     for name, fn in suites.items():
-        if args.only and name != args.only:
+        if name not in selected:
             continue
         t0 = time.time()
         try:
             for row in fn():
                 print(",".join(str(x) for x in row), flush=True)
+                metrics[str(row[0])] = row[1]
             print(f"_{name}_wall_s,{time.time() - t0:.1f},", flush=True)
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"{name}_FAILED,0,", flush=True)
+
+    if args.json:
+        gated = _gated_specs(selected)
+        doc = {
+            "meta": {
+                "issue": "PR3 data plane",
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "suites": sorted(selected),
+            },
+            "metrics": metrics,
+            "gated": gated,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", flush=True)
+
+    if args.gate:
+        from benchmarks import regression
+
+        argv = ["--baseline", args.gate, "--current", args.json]
+        if args.tolerance is not None:
+            argv += ["--tolerance", str(args.tolerance)]
+        if args.json is None:
+            print("--gate requires --json", file=sys.stderr)
+            sys.exit(2)
+        rc = regression.main(argv)
+        if rc:
+            sys.exit(rc)
+
     sys.exit(1 if failures else 0)
 
 

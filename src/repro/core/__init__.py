@@ -39,7 +39,7 @@ from repro.core.iterators import (
     from_iterators,
 )
 from repro.core.learner_thread import LearnerThread
-from repro.core.metrics import MetricsContext, TimerStat, get_metrics
+from repro.core.metrics import LatencyStat, MetricsContext, TimerStat, get_metrics
 from repro.core.operators import (
     ApplyGradients,
     AverageGradients,
@@ -69,6 +69,15 @@ from repro.core.plans import (
     multi_agent_ppo_dqn_plan,
     ppo_plan,
     sac_plan,
+)
+from repro.core.transport import (
+    CreditPool,
+    OverflowPolicy,
+    PickleTransport,
+    SharedMemoryTransport,
+    Transport,
+    list_segments,
+    resolve_transport,
 )
 from repro.core.workers import WorkerSet
 

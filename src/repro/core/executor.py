@@ -15,6 +15,11 @@ worker groups):
     over a pipe.  ``apply()`` still works with arbitrary closures: the
     closure runs driver-side against a proxy whose method calls round-trip
     to the child, so only method arguments/results must be picklable.
+    *Result payloads* cross a pluggable data plane (``core.transport``):
+    by default large ``SampleBatch`` columns move through shared-memory
+    ring segments (header-only pipe messages, refcounted reclaim) instead
+    of being pickled — pass ``ProcessBackend(transport="pickle")`` for the
+    pipe baseline.
   * ``SupervisorSpec`` — ``max_restarts`` with exponential backoff, plus a
     ``FailurePolicy`` (restart / drop_shard / raise) that the gather
     operators in ``core.iterators`` and ``WorkerSet`` honor: a dead rollout
@@ -27,12 +32,17 @@ backend-agnostic.
 
 from __future__ import annotations
 
+import itertools
 import logging
 import multiprocessing
+import os
 import pickle
+import weakref
 from abc import ABC, abstractmethod
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
+
+from repro.core.transport import Transport, resolve_transport
 
 __all__ = [
     "ActorError",
@@ -47,6 +57,8 @@ __all__ = [
 ]
 
 _logger = logging.getLogger(__name__)
+
+_cell_seq = itertools.count()
 
 
 class ActorError(RuntimeError):
@@ -163,9 +175,14 @@ class ThreadCell(Cell):
         pass
 
 
-def _serve(conn: Any, payload: bytes) -> None:
+def _serve(conn: Any, payload: bytes, transport_payload: bytes) -> None:
     """Child-process loop: build the target from its pickled factory, then
-    execute (method, args, kwargs) requests until shutdown/EOF."""
+    execute (method, args, kwargs, released_segments) requests until
+    shutdown/EOF.  Results cross back through the cell's transport: the
+    shared-memory transport replaces large numpy payloads with header-only
+    refs; the pipe carries everything else verbatim."""
+    spec, prefix = pickle.loads(transport_payload)
+    encoder = spec.server_endpoint(prefix)
     try:
         target = pickle.loads(payload)()
     except BaseException as exc:  # construction failure: report and exit
@@ -173,16 +190,20 @@ def _serve(conn: Any, payload: bytes) -> None:
             conn.send((False, ActorError(f"target construction failed: {exc!r}")))
         except Exception:
             pass
+        encoder.close()
         return
     while True:
         try:
             msg = conn.recv()
         except (EOFError, OSError):
+            encoder.close()
             return
         if msg is None:
+            encoder.close()
             conn.close()
             return
-        method, args, kwargs = msg
+        method, args, kwargs, released = msg
+        encoder.reclaim(released)
         try:
             result = getattr(target, method)(*args, **kwargs)
         except BaseException as exc:
@@ -192,8 +213,16 @@ def _serve(conn: Any, payload: bytes) -> None:
                 conn.send((False, ActorError(f"{type(exc).__name__}: {exc}")))
             continue
         try:
-            conn.send((True, result))
+            wire = encoder.encode(result)
         except Exception as exc:
+            # An encode failure is a per-message problem (allocation race,
+            # OOM): report it like any call failure, keep serving.
+            conn.send((False, ActorError(f"transport encode failed for {method}(): {exc!r}")))
+            continue
+        try:
+            conn.send((True, wire))
+        except Exception as exc:
+            encoder.rollback(wire)  # consumer will never release these refs
             conn.send((False, ActorError(f"unpicklable result from {method}(): {exc}")))
 
 
@@ -246,9 +275,14 @@ class ProcessCell(Cell):
         factory: Optional[Callable[[], Any]] = None,
         target: Any = None,
         start_method: Optional[str] = None,
+        transport: Any = None,
     ):
         payload = factory if factory is not None else _ReturnTarget(target)
         self._payload = pickle.dumps(payload)
+        self._transport: Transport = resolve_transport(transport)
+        self._prefix_base = f"rfl{os.getpid()}x{next(_cell_seq)}"
+        self._generation = 0
+        self._decoder: Any = None
         if start_method is None:
             # Default to fork where available: ~10ms per worker vs ~1s for
             # forkserver/spawn (measured; the chaos suites restart workers
@@ -262,13 +296,36 @@ class ProcessCell(Cell):
         self._proc: Any = None
         self._conn: Any = None
         self._proxy = _Proxy(self)
+        # Last-resort segment sweep: a cell abandoned without stop()/kill()
+        # (test aborted mid-stream, driver crash path) still reclaims its
+        # shared-memory names at GC/interpreter exit.  Normal shutdown paths
+        # make this a no-op.
+        self._finalizer = weakref.finalize(
+            self, ProcessCell._sweep_prefix, self._prefix_base
+        )
         self._spawn()
+
+    @staticmethod
+    def _sweep_prefix(prefix_base: str) -> None:
+        from repro.core.transport import _unlink_by_name, list_segments
+
+        for name in list_segments(prefix_base):
+            _unlink_by_name(name)
 
     def _spawn(self) -> None:
         parent, child = self._ctx.Pipe()
         self._conn = parent
+        # A fresh name generation per spawn: segments of a killed child are
+        # swept by the driver, and the replacement child can never collide
+        # with a name the sweep missed.
+        self._generation += 1
+        prefix = f"{self._prefix_base}g{self._generation}"
+        self._decoder = self._transport.client_endpoint(prefix)
         self._proc = self._ctx.Process(
-            target=_serve, args=(child, self._payload), daemon=True, name="actor-cell"
+            target=_serve,
+            args=(child, self._payload, pickle.dumps((self._transport, prefix))),
+            daemon=True,
+            name="actor-cell",
         )
         self._proc.start()
         child.close()
@@ -278,12 +335,12 @@ class ProcessCell(Cell):
         if not self.alive:
             raise self._death_error(method)
         try:
-            self._conn.send((method, args, kwargs))
+            self._conn.send((method, args, kwargs, self._decoder.drain_releases()))
             ok, payload = self._conn.recv()
         except (EOFError, OSError, BrokenPipeError):
             raise self._death_error(method) from None
         if ok:
-            return payload
+            return self._decoder.decode(payload)
         raise payload
 
     def _death_error(self, method: str) -> ActorDiedError:
@@ -343,6 +400,10 @@ class ProcessCell(Cell):
             self._conn.close()
         except Exception:
             pass
+        # Sweep this generation's shared-memory segments: the child is gone
+        # (or never cleaned up after terminate), so reclaim is ours now.
+        if self._decoder is not None:
+            self._decoder.close(unlink=True)
 
 
 # --------------------------------------------------------------------------
@@ -363,6 +424,12 @@ class ExecutionBackend(ABC):
 class ThreadBackend(ExecutionBackend):
     name = "thread"
 
+    def __init__(self, transport: Any = None):
+        # Thread cells share the driver's address space: every payload is
+        # already zero-copy.  The kwarg exists so backend-matrix code can
+        # parametrize (backend, transport) uniformly.
+        self.transport = transport
+
     def make_cell(
         self, factory: Optional[Callable[[], Any]] = None, target: Any = None
     ) -> Cell:
@@ -372,13 +439,19 @@ class ThreadBackend(ExecutionBackend):
 class ProcessBackend(ExecutionBackend):
     name = "process"
 
-    def __init__(self, start_method: Optional[str] = None):
+    def __init__(self, start_method: Optional[str] = None, transport: Any = None):
         self.start_method = start_method
+        self.transport = resolve_transport(transport)
 
     def make_cell(
         self, factory: Optional[Callable[[], Any]] = None, target: Any = None
     ) -> Cell:
-        return ProcessCell(factory=factory, target=target, start_method=self.start_method)
+        return ProcessCell(
+            factory=factory,
+            target=target,
+            start_method=self.start_method,
+            transport=self.transport,
+        )
 
 
 BACKENDS = {"thread": ThreadBackend, "process": ProcessBackend}

@@ -24,6 +24,13 @@ or propagates the error (default).  Failures and dropped shards are counted
 into the shared metrics context.  Pool-backed parallel iterators are also
 *elastic*: actors added to / removed from the source ``ActorPool`` mid-stream
 are picked up by the gather loops (``Algorithm.add_workers()``).
+
+Backpressure (data plane): ``gather_async`` is credit-bounded — the total
+dispatched-but-unconsumed window is capped (``credits``; default
+``num_async * shards``), starved shards are backfilled FIFO as the consumer
+frees credits, and stalls/bytes/occupancy are recorded into the shared
+metrics context (``core.metrics``; see ``core.transport`` for the
+inter-process data plane itself).
 """
 
 from __future__ import annotations
@@ -32,6 +39,7 @@ import copy
 import logging
 import queue
 import threading
+import time
 import types
 from typing import (
     Any,
@@ -50,10 +58,16 @@ from typing import (
 from repro.core.actor import ActorPool, VirtualActor, wait
 from repro.core.executor import FailurePolicy
 from repro.core.metrics import (
+    BYTES_MOVED_PREFIX,
+    CREDIT_STALL_TIME,
+    INFLIGHT_PREFIX,
+    NUM_BYTES_MOVED,
+    NUM_CREDIT_STALLS,
     NUM_SHARDS_DROPPED,
     NUM_WORKER_FAILURES,
     MetricsContext,
     get_metrics,
+    payload_nbytes,
     set_metrics_for_thread,
 )
 
@@ -642,13 +656,14 @@ class ParallelIterator(Generic[T]):
         return ParallelIterator(_freeze(self) + _freeze(other), name=f"{self.name}.union")
 
     # ------------------------------------------------------------ gathering
-    def gather_sync(self) -> "LocalIterator[T]":
+    def gather_sync(self, metrics_key: Optional[str] = None) -> "LocalIterator[T]":
         """Deterministic sequencing with *barrier semantics* (paper Fig 7).
 
         One item is pulled from every shard; upstream actors are fully halted
         between fetches, so messages sent to source actors between item
         fetches are ordered w.r.t. the dataflow (black arrows).  Failed
-        shards are skipped/dropped per their actor's FailurePolicy.
+        shards are skipped/dropped per their actor's FailurePolicy.  Bytes
+        yielded are recorded under ``bytes_moved/<metrics_key>``.
         """
 
         def _gen() -> Iterator[Any]:
@@ -690,12 +705,23 @@ class ParallelIterator(Generic[T]):
                 for item, actor in results:
                     if isinstance(item, (NextValueNotReady, _ShardVerdict)):
                         continue
-                    get_metrics().current_actor = actor
+                    metrics = get_metrics()
+                    metrics.current_actor = actor
+                    nbytes = payload_nbytes(item)
+                    if nbytes:
+                        metrics.counters[NUM_BYTES_MOVED] += nbytes
+                        metrics.counters[BYTES_MOVED_PREFIX + key] += nbytes
                     yield item
 
+        key = metrics_key or f"{self.name}.gather_sync"
         return LocalIterator(_gen, name=f"{self.name}.gather_sync")
 
-    def gather_async(self, num_async: int = 1) -> "LocalIterator[T]":
+    def gather_async(
+        self,
+        num_async: int = 1,
+        credits: Optional[int] = None,
+        metrics_key: Optional[str] = None,
+    ) -> "LocalIterator[T]":
         """Asynchronous sequencing (paper Fig 7, pink arrow).
 
         Keeps up to ``num_async`` items in flight *per shard*; yields items in
@@ -703,9 +729,22 @@ class ParallelIterator(Generic[T]):
         equivalent to RLlib Flow's async gather with configurable pipeline
         parallelism.  A failed shard is skipped or dropped per its actor's
         FailurePolicy; newly added pool actors join the pipeline mid-stream.
+
+        Backpressure (data plane, ISSUE 3): ``credits`` caps the *total*
+        number of dispatched-but-not-yet-consumed items across all shards
+        (default: ``num_async * num_shards``, i.e. the per-shard window).  A
+        shard that would exceed the window is *starved* instead of
+        dispatched; the stall is recorded (``num_credit_stalls`` /
+        ``credit_stall_time_s``) and the shard is backfilled as soon as the
+        consumer frees a credit — so a slow consumer can never accumulate an
+        unbounded completed-item backlog.  ``inflight/<metrics_key>`` gauges
+        the window occupancy; bytes yielded are recorded under
+        ``bytes_moved/<metrics_key>``.
         """
         if num_async < 1:
             raise ValueError("num_async must be >= 1")
+        if credits is not None and credits < 1:
+            raise ValueError("credits must be >= 1 (or None for num_async * shards)")
 
         def _gen() -> Iterator[Any]:
             result_q: "queue.Queue[tuple]" = queue.Queue()
@@ -714,23 +753,65 @@ class ParallelIterator(Generic[T]):
             dropped: Dict[int, str] = {}
             exhausted: set = set()
             removed: set = set()
+            # The credit window: one credit per dispatched-but-unconsumed
+            # item, resized as shard membership changes.  Starved shards
+            # wait here (aid -> stall start) until a credit frees.
+            from repro.core.transport import CreditPool
 
-            def _dispatch(s: _Shard) -> None:
+            credit_pool = CreditPool(credits if credits is not None else 1)
+            starved: Dict[int, float] = {}
+
+            def _capacity() -> int:
+                if credits is not None:
+                    return credits
+                live = len(
+                    [
+                        aid
+                        for aid in shard_by_id
+                        if aid not in dropped and aid not in removed and aid not in exhausted
+                    ]
+                )
+                return num_async * max(1, live)
+
+            def _dispatch(s: _Shard, have_credit: bool = False) -> None:
                 aid = s.actor.actor_id
+                if not have_credit and not credit_pool.try_acquire():
+                    if aid not in starved:
+                        starved[aid] = time.perf_counter()
+                        get_metrics().counters[NUM_CREDIT_STALLS] += 1
+                    return
                 try:
                     fut = s.dispatch(self._stages_for(s.actor))
                 except RuntimeError:
                     # Actor stopped between membership sync and dispatch
                     # (graceful remove_workers race): treat as removed.
+                    credit_pool.release()
                     removed.add(aid)
                     return
                 inflight[aid] = inflight.get(aid, 0) + 1
                 fut.add_done_callback(lambda f, aid=aid: result_q.put((aid, f)))
 
+            def _backfill_starved() -> None:
+                # A credit was just freed: resume starved shards FIFO,
+                # charging their stall time to the shared metrics context.
+                while starved and credit_pool.try_acquire():
+                    aid, t0 = next(iter(starved.items()))
+                    del starved[aid]
+                    metrics = get_metrics()
+                    metrics.counters[CREDIT_STALL_TIME] = (
+                        metrics.counters.get(CREDIT_STALL_TIME, 0)
+                        + (time.perf_counter() - t0)
+                    )
+                    if aid in shard_by_id and aid not in dropped and aid not in removed:
+                        _dispatch(shard_by_id[aid], have_credit=True)
+                    else:
+                        credit_pool.release()
+
             def _admit() -> None:
                 # Pick up pool membership changes (elastic add/remove) and
                 # rejoin shards whose dead actor was revived by recover().
                 self._sync_shards()
+                credit_pool.resize(_capacity())
                 for s in _rejoin_revived(dropped, self._shards):
                     for _ in range(num_async - inflight.get(s.actor.actor_id, 0)):
                         _dispatch(s)
@@ -740,11 +821,14 @@ class ParallelIterator(Generic[T]):
                     current.add(aid)
                     if aid not in shard_by_id:
                         shard_by_id[aid] = s
+                        credit_pool.resize(_capacity())
                         for _ in range(num_async):
                             _dispatch(s)
                 for aid in shard_by_id:
                     if aid not in current:
                         removed.add(aid)  # stop backfilling; drain in-flight
+                        starved.pop(aid, None)
+                credit_pool.resize(_capacity())
 
             _admit()
             while True:
@@ -755,16 +839,21 @@ class ParallelIterator(Generic[T]):
                         if dropped and not (exhausted or removed):
                             raise RuntimeError(f"{self.name}: all shards failed")
                         return
+                    if starved:
+                        _backfill_starved()  # window freed below a live shard
                 try:
                     aid, fut = result_q.get(timeout=0.1)
                 except queue.Empty:
                     continue  # elastic wake-up: re-check membership
                 inflight[aid] -= 1
+                credit_pool.release()  # every popped result frees its credit
                 gone = aid in dropped or aid in removed
                 try:
                     item = fut.result()
                 except StopIteration:
                     exhausted.add(aid)
+                    starved.pop(aid, None)
+                    _backfill_starved()
                     continue
                 except Exception as exc:
                     verdict = _absorb_shard_failure(
@@ -772,17 +861,40 @@ class ParallelIterator(Generic[T]):
                     )
                     if verdict is _SKIPPED and not gone:
                         _dispatch(shard_by_id[aid])  # keep the pipeline full
+                    else:
+                        starved.pop(aid, None)
+                        _backfill_starved()
                     continue
                 if not gone:
-                    _dispatch(shard_by_id[aid])
+                    if starved:
+                        # Credits are contended: queue this shard behind the
+                        # ones already stalled (FIFO fairness) rather than
+                        # letting the fastest producer monopolize the window.
+                        if aid not in starved:
+                            starved[aid] = time.perf_counter()
+                            get_metrics().counters[NUM_CREDIT_STALLS] += 1
+                    else:
+                        _dispatch(shard_by_id[aid])
                 if isinstance(item, NextValueNotReady):
+                    _backfill_starved()
                     continue
-                get_metrics().current_actor = shard_by_id[aid].actor
+                metrics = get_metrics()
+                metrics.current_actor = shard_by_id[aid].actor
+                nbytes = payload_nbytes(item)
+                if nbytes:
+                    metrics.counters[NUM_BYTES_MOVED] += nbytes
+                    metrics.counters[BYTES_MOVED_PREFIX + key] += nbytes
+                metrics.gauges[INFLIGHT_PREFIX + key] = sum(inflight.values())
                 yield item
+                # The consumer took the item: its credit is free again.
+                _backfill_starved()
 
+        key = metrics_key or f"{self.name}.gather_async"
         return LocalIterator(_gen, name=f"{self.name}.gather_async")
 
-    def batch_across_shards(self) -> "LocalIterator[List[T]]":
+    def batch_across_shards(
+        self, metrics_key: Optional[str] = None
+    ) -> "LocalIterator[List[T]]":
         """One synchronized list of per-shard items per pull (sync barrier)."""
 
         def _gen() -> Iterator[Any]:
@@ -824,8 +936,14 @@ class ParallelIterator(Generic[T]):
                     if not isinstance(x, (NextValueNotReady, _ShardVerdict))
                 ]
                 if items:
+                    metrics = get_metrics()
+                    nbytes = payload_nbytes(items)
+                    if nbytes:
+                        metrics.counters[NUM_BYTES_MOVED] += nbytes
+                        metrics.counters[BYTES_MOVED_PREFIX + key] += nbytes
                     yield items
 
+        key = metrics_key or f"{self.name}.batch_across_shards"
         return LocalIterator(_gen, name=f"{self.name}.batch_across_shards")
 
     def __repr__(self) -> str:  # pragma: no cover

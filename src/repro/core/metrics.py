@@ -14,7 +14,14 @@ import time
 from collections import defaultdict
 from typing import Any, Dict, Optional
 
-__all__ = ["TimerStat", "MetricsContext", "get_metrics", "set_metrics_for_thread"]
+__all__ = [
+    "TimerStat",
+    "LatencyStat",
+    "MetricsContext",
+    "get_metrics",
+    "set_metrics_for_thread",
+    "payload_nbytes",
+]
 
 # Canonical counter names used by the built-in operators (mirrors RLlib Flow).
 STEPS_SAMPLED_COUNTER = "num_steps_sampled"
@@ -28,11 +35,54 @@ NUM_SAMPLES_DROPPED = "num_samples_dropped"
 NUM_WORKER_FAILURES = "num_worker_failures"
 NUM_SHARDS_DROPPED = "num_shards_dropped"
 
+# Data-plane accounting (ISSUE 3): recorded by the gather operators, the
+# queue operators (Enqueue/Dequeue), and the learner thread.  Per-operator
+# breakdowns use the ``<name>/<operator-key>`` convention (the flow compiler
+# keys them by node id so ``to_dot`` can label edges).
+NUM_BYTES_MOVED = "num_bytes_moved"
+NUM_CREDIT_STALLS = "num_credit_stalls"
+CREDIT_STALL_TIME = "credit_stall_time_s"
+BYTES_MOVED_PREFIX = "bytes_moved/"
+QUEUE_OCCUPANCY_PREFIX = "queue_occupancy/"
+INFLIGHT_PREFIX = "inflight/"
+
+# Latency streams (LatencyStat reservoirs; p50/p99 surfaced by save()).
+SAMPLE_TO_LEARN_LATENCY = "sample_to_learn_s"
+LEARNER_QUEUE_WAIT = "learner_queue_wait_s"
+
 SAMPLE_TIMER = "sample"
 GRAD_WAIT_TIMER = "grad_wait"
 APPLY_GRADS_TIMER = "apply_grad"
 LEARN_ON_BATCH_TIMER = "learn"
 UPDATE_PRIORITIES_TIMER = "update_priorities"
+
+
+def payload_nbytes(item: Any, _depth: int = 0) -> int:
+    """Best-effort byte size of a dataflow item (SampleBatch-aware).
+
+    Counts numpy-backed payloads (``size_bytes()`` / ``nbytes``) through one
+    level of tuple/list/dict nesting — enough for every wire shape the
+    operators produce ((batch, actor), (grads, info), [batch, ...]).
+    """
+    if item is None or _depth > 2:
+        return 0
+    size_fn = getattr(item, "size_bytes", None)
+    if callable(size_fn):
+        try:
+            return int(size_fn())
+        except Exception:
+            return 0
+    nbytes = getattr(item, "nbytes", None)
+    if isinstance(nbytes, int):
+        return nbytes
+    if isinstance(item, (tuple, list)):
+        return sum(payload_nbytes(x, _depth + 1) for x in item)
+    if isinstance(item, dict):
+        return sum(payload_nbytes(x, _depth + 1) for x in item.values())
+    batches = getattr(item, "policy_batches", None)  # MultiAgentBatch
+    if isinstance(batches, dict):
+        return sum(payload_nbytes(x, _depth + 1) for x in batches.values())
+    return 0
 
 
 class TimerStat:
@@ -69,6 +119,53 @@ class TimerStat:
         return self.units / self.total if self.total else 0.0
 
 
+class LatencyStat:
+    """Sliding-window latency reservoir with percentile summaries.
+
+    A fixed ring of the last ``window`` observations: pushes are O(1) and
+    lock-free (single-writer per stream in practice; racy reads only smear
+    the percentile by one sample), ``summary()`` computes p50/p99 on a copy.
+    """
+
+    def __init__(self, window: int = 512):
+        self._window = window
+        self._ring = [0.0] * window
+        self.count = 0
+        self.total = 0.0
+
+    def push(self, dt: float) -> None:
+        self._ring[self.count % self._window] = dt
+        self.count += 1
+        self.total += dt
+
+    def _values(self) -> list:
+        n = min(self.count, self._window)
+        return list(self._ring[:n])
+
+    @staticmethod
+    def _pct(sorted_vals: list, p: float) -> float:
+        if not sorted_vals:
+            return 0.0
+        idx = min(len(sorted_vals) - 1, max(0, int(round((p / 100.0) * (len(sorted_vals) - 1)))))
+        return sorted_vals[idx]
+
+    def percentile(self, p: float) -> float:
+        return self._pct(sorted(self._values()), p)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        vals = sorted(self._values())
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "p50": self._pct(vals, 50.0),
+            "p99": self._pct(vals, 99.0),
+        }
+
+
 class MetricsContext:
     """Counters/timers/info shared by all operators of one dataflow.
 
@@ -81,6 +178,8 @@ class MetricsContext:
     def __init__(self) -> None:
         self.counters: Dict[str, int] = defaultdict(int)
         self.timers: Dict[str, TimerStat] = defaultdict(TimerStat)
+        self.latencies: Dict[str, LatencyStat] = defaultdict(LatencyStat)
+        self.gauges: Dict[str, float] = {}
         self.info: Dict[str, Any] = {}
         self.current_actor: Any = None
         self._lock = threading.Lock()
@@ -110,6 +209,10 @@ class MetricsContext:
             "timers": {
                 k: {"mean": v.mean, "count": v.count, "throughput": v.mean_throughput}
                 for k, v in self._racefree_copy(self.timers).items()
+            },
+            "gauges": self._racefree_copy(self.gauges),
+            "latencies": {
+                k: v.summary() for k, v in self._racefree_copy(self.latencies).items()
             },
         }
 

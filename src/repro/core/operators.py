@@ -57,6 +57,8 @@ def ParallelRollouts(
     workers: WorkerSet,
     mode: str = "bulk_sync",
     num_async: int = 1,
+    credits: Optional[int] = None,
+    metrics_key: Optional[str] = None,
 ) -> Any:
     """Stream of experience batches from the rollout workers (paper Fig 5).
 
@@ -64,8 +66,15 @@ def ParallelRollouts(
     mode='bulk_sync' -> Iter[SampleBatch]      (synchronously concatenated
                         across workers per round — PPO/A2C style)
     mode='async'     -> Iter[SampleBatch]      (completion order — Ape-X/
-                        IMPALA style, pipeline depth ``num_async``)
+                        IMPALA style, pipeline depth ``num_async``; the
+                        total in-flight window is capped at ``credits``
+                        when given — credit-based backpressure)
     """
+    if credits is not None and mode != "async":
+        raise ValueError(
+            f"credits= is an async-gather window; rollout mode {mode!r} has no "
+            "in-flight pipeline to bound (use mode='async')"
+        )
     par = ParallelIterator.from_actors(
         workers.remote_workers(), lambda w: w.sample(), name="ParallelRollouts"
     )
@@ -85,27 +94,35 @@ def ParallelRollouts(
             get_metrics().counters[STEPS_SAMPLED_COUNTER] += out.count
             return out
 
-        return par.batch_across_shards().for_each(_concat)
+        return par.batch_across_shards(metrics_key=metrics_key).for_each(_concat)
     if mode == "async":
-        return par.gather_async(num_async=num_async).for_each(_count)
+        return par.gather_async(
+            num_async=num_async, credits=credits, metrics_key=metrics_key
+        ).for_each(_count)
     raise ValueError(f"unknown rollout mode {mode!r}")
 
 
 def Replay(
     actors: ActorPool,
     num_async: int = 4,
+    credits: Optional[int] = None,
+    metrics_key: Optional[str] = None,
 ) -> LocalIterator[SampleBatch]:
     """Stream of replayed batches from replay-buffer actors (Ape-X §5.2).
 
     Pulls with ``num_async``-deep pipelining; buffers that are not yet warm
-    return None, which is skipped (NextValueNotReady semantics).
+    return None, which is skipped (NextValueNotReady semantics).  ``credits``
+    caps the total in-flight window across replay actors (backpressure
+    against a consumer that falls behind, e.g. a saturated learner feed).
     """
     par = ParallelIterator.from_actors(actors, lambda r: r.replay(), name="Replay")
 
     def _skip_cold(item: Any) -> Any:
         return NextValueNotReady() if item is None else item
 
-    return par.gather_async(num_async=num_async).for_each(_skip_cold)
+    return par.gather_async(
+        num_async=num_async, credits=credits, metrics_key=metrics_key
+    ).for_each(_skip_cold)
 
 
 # --------------------------------------------------------------------------

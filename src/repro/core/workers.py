@@ -58,6 +58,7 @@ class WorkerSet:
         num_workers: int,
         *,
         backend: Any = None,
+        transport: Any = None,
         max_restarts: int = 0,
         backoff_base: float = 0.05,
         backoff_cap: float = 2.0,
@@ -69,7 +70,24 @@ class WorkerSet:
         ``ExecutionBackend``); supervision kwargs configure restart budget,
         backoff, and the failure policy gather operators honor.  For the
         process backend ``worker_factory`` must be picklable (module-level).
+
+        ``transport`` selects the process data plane ("shm" | "pickle" | a
+        ``Transport`` instance; see ``core.transport``) when ``backend`` is
+        given as a string; thread backends ignore it (already zero-copy).
         """
+        if transport is not None:
+            if not isinstance(backend, str):
+                # backend=None would silently build ThreadBackend and drop
+                # the transport — reject both that and instance backends.
+                raise ValueError(
+                    'transport= requires a backend name (e.g. backend="process"); '
+                    "for a backend instance, configure its transport directly"
+                )
+            from repro.core.executor import BACKENDS
+
+            if backend not in BACKENDS:
+                raise ValueError(f"unknown backend {backend!r}; known: {sorted(BACKENDS)}")
+            backend = BACKENDS[backend](transport=transport)
         local = worker_factory(0)
         actor_kwargs = dict(
             backend=backend,

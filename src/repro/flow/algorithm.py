@@ -125,7 +125,11 @@ class Algorithm:
         """Deferred runtime resources by name (e.g. learner threads)."""
         return self._compiled.runtime.resources
 
-    def to_dot(self) -> str:
+    def to_dot(self, with_metrics: bool = False) -> str:
+        """DOT rendering of the plan; ``with_metrics=True`` labels data-plane
+        edges with live bytes-moved counters and queue occupancy."""
+        if with_metrics:
+            return self._compiled.spec.to_dot(metrics=self._it.metrics)
         return self._compiled.to_dot()
 
     # ------------------------------------------------- fault tolerance

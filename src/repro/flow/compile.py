@@ -146,11 +146,16 @@ class FlowRuntime:
     def started(self) -> bool:
         return self._started
 
-    def ensure_started(self) -> None:
+    def ensure_started(self, metrics: Any = None) -> None:
         with self._lock:
             if self._started or self._stopped:
                 return
             for r in self.resources.values():
+                # Hand resources the flow's shared metrics context before
+                # they run: the learner thread records sample->learn /
+                # queue-wait latencies and queue occupancy into it.
+                if metrics is not None and hasattr(r, "metrics"):
+                    r.metrics = metrics
                 r.start()
             self._started = True
 
@@ -225,7 +230,7 @@ class CompiledFlow:
         runtime = self.runtime
 
         def _base():
-            runtime.ensure_started()
+            runtime.ensure_started(metrics=inner.metrics)
             yield from iter(inner)
 
         return LocalIterator(_base, metrics=inner.metrics, name=self.spec.name)
@@ -275,10 +280,21 @@ class CompiledFlow:
         k, p = node.kind, node.params
         if k == "rollouts":
             self._lower_annotations(node, p["workers"].remote_workers())
-            return ParallelRollouts(p["workers"], mode=p["mode"], num_async=p["num_async"])
+            return ParallelRollouts(
+                p["workers"],
+                mode=p["mode"],
+                num_async=p["num_async"],
+                credits=node.annotations.get("credits", p.get("credits")),
+                metrics_key=node.id,
+            )
         if k == "replay":
             self._lower_annotations(node, p["actors"])
-            return Replay(p["actors"], num_async=p["num_async"])
+            return Replay(
+                p["actors"],
+                num_async=p["num_async"],
+                credits=node.annotations.get("credits", p.get("credits")),
+                metrics_key=node.id,
+            )
         if k == "par_gradients":
             self._lower_annotations(node, p["workers"].remote_workers())
             return par_compute_gradients(p["workers"])
@@ -289,7 +305,7 @@ class CompiledFlow:
             return from_items(p["items"], repeat=p["repeat"])
         if k == "dequeue":
             res = self.runtime.resource(p["resource"])
-            return Dequeue(res.outqueue, check=res.is_alive)
+            return Dequeue(res.outqueue, check=res.is_alive, metrics_key=node.id)
 
         up = self._lower_ref(node.inputs[0]) if node.inputs else None
         if k == "for_each":
@@ -307,17 +323,33 @@ class CompiledFlow:
         if k == "zip_source_actor":
             return up.zip_with_source_actor()
         if k == "gather_async":
-            return up.gather_async(num_async=p["num_async"])
+            # Backpressure lowering: an explicit credits= param or a
+            # credits annotation bounds the in-flight window (ISSUE 3).
+            credits = node.annotations.get("credits", p.get("credits"))
+            return up.gather_async(
+                num_async=p["num_async"], credits=credits, metrics_key=node.id
+            )
         if k == "gather_sync":
-            return up.gather_sync()
+            return up.gather_sync(metrics_key=node.id)
         if k == "batch_across_shards":
-            return up.batch_across_shards()
+            return up.batch_across_shards(metrics_key=node.id)
         if k == "enqueue":
             res = self.runtime.resource(p["resource"])
-            # check=is_alive: a blocking feed must not wedge its driver
-            # thread once the learner is gone (teardown/crash) — it raises
-            # and the Concurrently driver unwinds instead.
-            return up.for_each(Enqueue(res.inqueue, block=p["block"], check=res.is_alive))
+            # Overflow-policy lowering: annotation > explicit policy param >
+            # legacy block flag.  check=is_alive: a blocking feed must not
+            # wedge its driver thread once the learner is gone (teardown/
+            # crash) — it raises and the Concurrently driver unwinds instead.
+            policy = node.annotations.get("overflow_policy", p.get("policy"))
+            if policy is None:
+                policy = "block" if p["block"] else "drop_newest"
+            return up.for_each(
+                Enqueue(
+                    res.inqueue,
+                    policy=policy,
+                    check=res.is_alive,
+                    metrics_key=node.id,
+                )
+            )
         if k == "concurrently":
             ops = [self._lower_ref(r) for r in node.inputs]
             return Concurrently(

@@ -145,15 +145,21 @@ def build_apex(
     num_async_rollouts: int = 2,
     num_async_replay: int = 4,
     block_on_enqueue: bool = True,
+    enqueue_policy: str = None,
+    replay_credits: int = None,
 ) -> FlowSpec:
     """Listing A3: three concurrent sub-flows around a learner thread.
 
     The learner thread is a *deferred resource*: declared here, constructed
     at compile time, started on the first pull, joined on ``stop()``.
-    ``block_on_enqueue=False`` reproduces the paper's lossy Ape-X feed: when
-    the learner falls behind, batches are dropped and counted
-    (``num_samples_dropped`` in train() results) instead of backpressuring
-    the replay sub-flow.
+
+    Backpressure knobs (data plane, ISSUE 3): ``enqueue_policy`` sets the
+    learner-feed overflow policy directly ("block" | "drop_newest" |
+    "drop_oldest"); ``block_on_enqueue=False`` remains as shorthand for the
+    paper's lossy feed ("drop_newest": when the learner falls behind,
+    batches are dropped and counted as ``num_samples_dropped`` in train()
+    results instead of backpressuring the replay sub-flow).
+    ``replay_credits`` caps the replay gather's total in-flight window.
     """
     spec = FlowSpec("apex")
     learner = spec.learner_thread(workers)
@@ -166,11 +172,11 @@ def build_apex(
         .for_each(UpdateWorkerWeights(workers, max_weight_sync_delay))
     )
 
-    # (2) replayed batches -> learner in-queue.
+    # (2) replayed batches -> learner in-queue (credit-bounded gather).
     replay_op = (
-        spec.replay(replay_actors, num_async=num_async_replay)
+        spec.replay(replay_actors, num_async=num_async_replay, credits=replay_credits)
         .zip_with_source_actor()
-        .enqueue(learner, block=block_on_enqueue)
+        .enqueue(learner, block=block_on_enqueue, policy=enqueue_policy)
     )
 
     # (3) learner out-queue -> priority updates + target sync + metrics.
@@ -200,16 +206,23 @@ def build_impala(
     train_batch_size: int = 512,
     num_async: int = 2,
     broadcast_interval: int = 1,
+    enqueue_policy: str = None,
+    rollout_credits: int = None,
     name: str = "impala",
 ) -> FlowSpec:
-    """Async rollouts -> learner thread -> periodic weight broadcast."""
+    """Async rollouts -> learner thread -> periodic weight broadcast.
+
+    ``enqueue_policy``/``rollout_credits`` expose the data-plane
+    backpressure knobs (see ``build_apex``); the default blocking enqueue
+    backpressures the rollout pipeline when the learner saturates.
+    """
     spec = FlowSpec(name)
     learner = spec.learner_thread(workers)
 
     enqueue_op = (
-        spec.rollouts(workers, mode="async", num_async=num_async)
+        spec.rollouts(workers, mode="async", num_async=num_async, credits=rollout_credits)
         .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")
-        .enqueue(learner, block=True)
+        .enqueue(learner, block=True, policy=enqueue_policy)
     )
 
     # The broadcast gate reads the learner thread's dirty bit, so it is a

@@ -124,12 +124,15 @@ class Stream:
         return self.spec.nodes[self.node_id]
 
     def annotate(self, **annotations: Any) -> "Stream":
-        """Attach resource/failure annotations to the producing node.
+        """Attach resource/failure/backpressure annotations to the node.
 
         Recognized by ``compile()``: ``failure_policy`` ("raise" | "restart"
         | "drop_shard") is applied to the node's source actors at lowering
-        time.  Other keys (e.g. ``resources={"num_cpus": 1}``) are carried
-        as placement metadata for schedulers/introspection.
+        time; ``overflow_policy`` ("block" | "drop_newest" | "drop_oldest")
+        overrides an enqueue node's queue policy; ``credits`` (int) caps a
+        gather_async node's in-flight window.  Other keys (e.g.
+        ``resources={"num_cpus": 1}``) are carried as placement metadata for
+        schedulers/introspection.
         """
         import dataclasses
 
@@ -172,10 +175,13 @@ class Stream:
         return Stream(self.spec, node.id)
 
     # --------------------------------------------------------- sequencing
-    def gather_async(self, num_async: int = 1) -> "Stream":
+    def gather_async(self, num_async: int = 1, credits: Optional[int] = None) -> "Stream":
+        """Async sequencing; ``credits`` caps total in-flight items across
+        shards (credit-based backpressure; default ``num_async * shards``).
+        Also settable post-hoc via ``.annotate(credits=N)``."""
         self._require_parallel("gather_async")
         node = self.spec._add(
-            "gather_async", (self.ref,), {"num_async": num_async},
+            "gather_async", (self.ref,), {"num_async": num_async, "credits": credits},
             f"GatherAsync(num_async={num_async})", False,
         )
         return Stream(self.spec, node.id)
@@ -199,11 +205,29 @@ class Stream:
         )
         return [Stream(self.spec, node.id, port=i) for i in range(n)]
 
-    def enqueue(self, resource: ResourceRef, block: bool = True) -> "Stream":
-        """Push items into a deferred resource's in-queue (learner feed)."""
+    def enqueue(
+        self,
+        resource: ResourceRef,
+        block: bool = True,
+        policy: Optional[str] = None,
+    ) -> "Stream":
+        """Push items into a deferred resource's in-queue (learner feed).
+
+        ``policy`` is the overflow policy at the queue boundary — ``block``
+        (lossless, backpressures the producing sub-flow), ``drop_newest``
+        (lossy Ape-X feed, drops counted in ``num_samples_dropped``), or
+        ``drop_oldest`` (bounded staleness).  ``block=True/False`` remains
+        as shorthand for block/drop_newest; an ``overflow_policy``
+        annotation set via ``.annotate()`` wins over both at lowering time.
+        """
         self._require_local("enqueue")
+        if policy is not None:
+            from repro.core.transport import OverflowPolicy
+
+            OverflowPolicy.validate(policy)
         node = self.spec._add(
-            "enqueue", (self.ref,), {"resource": resource.name, "block": block},
+            "enqueue", (self.ref,),
+            {"resource": resource.name, "block": block, "policy": policy},
             f"Enqueue({resource.name}.inqueue)", False,
         )
         return Stream(self.spec, node.id)
@@ -293,6 +317,7 @@ class FlowSpec:
         workers: Any,
         mode: str = "bulk_sync",
         num_async: int = 1,
+        credits: Optional[int] = None,
         failure_policy: Optional[str] = None,
         resources: Optional[Dict[str, Any]] = None,
     ) -> Stream:
@@ -300,11 +325,19 @@ class FlowSpec:
 
         ``failure_policy`` annotates the node; ``compile()`` lowers it onto
         the rollout actors so gather loops restart/drop/raise per-worker.
+        ``credits`` (async mode) caps the total in-flight sample window —
+        credit-based backpressure at the source.
         """
         if mode not in ("raw", "bulk_sync", "async"):
             raise ValueError(f"unknown rollout mode {mode!r}")
+        if credits is not None and mode != "async":
+            raise ValueError(
+                f"credits= requires mode='async' (got mode={mode!r}); other "
+                "rollout modes have no in-flight pipeline to bound"
+            )
         node = self._add(
-            "rollouts", (), {"workers": workers, "mode": mode, "num_async": num_async},
+            "rollouts", (),
+            {"workers": workers, "mode": mode, "num_async": num_async, "credits": credits},
             f"ParallelRollouts({mode})", parallel=(mode == "raw"),
             annotations=self._source_annotations(failure_policy, resources),
         )
@@ -314,12 +347,18 @@ class FlowSpec:
         self,
         actors: Any,
         num_async: int = 4,
+        credits: Optional[int] = None,
         failure_policy: Optional[str] = None,
         resources: Optional[Dict[str, Any]] = None,
     ) -> Stream:
-        """Replayed-batch stream from replay-buffer actors (Ape-X §5.2)."""
+        """Replayed-batch stream from replay-buffer actors (Ape-X §5.2).
+
+        ``credits`` caps the replay gather's total in-flight window (also
+        settable post-hoc via ``.annotate(credits=N)``)."""
         node = self._add(
-            "replay", (), {"actors": actors, "num_async": num_async}, "Replay", False,
+            "replay", (),
+            {"actors": actors, "num_async": num_async, "credits": credits},
+            "Replay", False,
             annotations=self._source_annotations(failure_policy, resources),
         )
         return Stream(self, node.id)
@@ -465,16 +504,39 @@ class FlowSpec:
         return CompiledFlow(self, fuse=fuse)
 
     # -------------------------------------------------------------- DOT
-    def to_dot(self) -> str:
+    def to_dot(self, metrics: Any = None) -> str:
         """Render the graph as Graphviz DOT (paper Figures 9–12).
 
         Stream edges are solid; edges into/out of deferred resources are
         dotted; branches merged by an async union are dashed pink (the
         paper's asynchronous-dependency arrows).
+
+        With a ``MetricsContext`` (``Algorithm.to_dot(with_metrics=True)``
+        passes the live one), data-plane edges gain labels: bytes moved out
+        of each sequencing/enqueue node (``bytes_moved/<node>`` counters,
+        keyed by node id at lowering) and current queue occupancy on
+        resource edges — the paper's Fig 13 data plane, readable off the
+        graph.
         """
 
         def esc(s: str) -> str:
             return s.replace("\\", "\\\\").replace('"', '\\"')
+
+        counters = metrics.counters if metrics is not None else {}
+        gauges = metrics.gauges if metrics is not None else {}
+
+        def _human_bytes(n: float) -> str:
+            for unit in ("B", "KB", "MB", "GB", "TB"):
+                if n < 1024 or unit == "TB":
+                    return f"{n:.0f}{unit}" if unit == "B" else f"{n:.1f}{unit}"
+                n /= 1024.0
+            return f"{n:.1f}TB"
+
+        def _edge_metric_label(src_node_id: str) -> Optional[str]:
+            moved = counters.get(f"bytes_moved/{src_node_id}")
+            if moved:
+                return _human_bytes(float(moved))
+            return None
 
         lines = [
             f'digraph "{esc(self.name)}" {{',
@@ -512,13 +574,35 @@ class FlowSpec:
                 elif async_union:
                     attrs.append("color=deeppink")
                 if node.kind == "concurrently":
-                    attrs.append(f'label="{i}"')
+                    label = str(i)
+                    moved = _edge_metric_label(src)
+                    if moved:
+                        label = f"{i}: {moved}"
+                    attrs.append(f'label="{esc(label)}"')
+                else:
+                    moved = _edge_metric_label(src)
+                    if moved:
+                        attrs.append(f'label="{esc(moved)}"')
                 a = f" [{', '.join(attrs)}]" if attrs else ""
                 lines.append(f'  "{src}" -> "{node.id}"{a};')
             if node.kind == "enqueue":
-                lines.append(f'  "{node.id}" -> "{node.params["resource"]}" [style=dotted];')
+                attrs = ["style=dotted"]
+                occ = gauges.get(f"queue_occupancy/{node.id}")
+                moved = _edge_metric_label(node.id)
+                parts = [p for p in (moved, f"q={occ:.0f}" if occ is not None else None) if p]
+                if parts:
+                    attrs.append(f'label="{esc(" ".join(parts))}"')
+                lines.append(
+                    f'  "{node.id}" -> "{node.params["resource"]}" [{", ".join(attrs)}];'
+                )
             if node.kind == "dequeue":
-                lines.append(f'  "{node.params["resource"]}" -> "{node.id}" [style=dotted];')
+                attrs = ["style=dotted"]
+                occ = gauges.get(f"queue_occupancy/{node.id}")
+                if occ is not None:
+                    attrs.append(f'label="q={occ:.0f}"')
+                lines.append(
+                    f'  "{node.params["resource"]}" -> "{node.id}" [{", ".join(attrs)}];'
+                )
         if self.output is not None:
             lines.append(f'  "__out" [shape=plaintext, label="results"];')
             lines.append(f'  "{self.output[0]}" -> "__out";')

@@ -99,6 +99,12 @@ class ReplayBuffer:
             "size": self._size,
             "added": self.num_added,
             "sampled": self.num_sampled,
+            # Data-plane accounting (ISSUE 3): resident bytes + bytes per
+            # replayed batch, for occupancy dashboards and bytes/step math.
+            "size_bytes": int(sum(v.nbytes for v in self._cols.values())),
+            "batch_bytes": int(
+                sum(v[: self.sample_batch_size].nbytes for v in self._cols.values())
+            ),
         }
 
     # ------------------------------------------------------------ durability

@@ -7,6 +7,7 @@ plumbing stay off-device; JAX arrays enter only inside jitted steps).  Also
 
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence
 
 import numpy as np
@@ -41,6 +42,11 @@ class SampleBatch(Mapping[str, np.ndarray]):
             lens = {k: v.shape[0] for k, v in self._data.items()}
             if len(set(lens.values())) > 1:
                 raise ValueError(f"ragged SampleBatch columns: {lens}")
+        # Birth stamp (CLOCK_MONOTONIC: comparable across processes on one
+        # host) — the data-plane instrumentation measures sample->learn
+        # latency from it.  Derived batches inherit/propagate it (slice:
+        # same stamp; concat: earliest constituent).
+        self.created_at: float = time.perf_counter()
 
     # Mapping interface -----------------------------------------------------
     def __getitem__(self, k: str) -> np.ndarray:
@@ -75,11 +81,15 @@ class SampleBatch(Mapping[str, np.ndarray]):
         return next(iter(self._data.values())).shape[0]
 
     def slice(self, start: int, end: int) -> "SampleBatch":
-        return SampleBatch({k: v[start:end] for k, v in self._data.items()})
+        out = SampleBatch({k: v[start:end] for k, v in self._data.items()})
+        out.created_at = self.created_at
+        return out
 
     def shuffle(self, rng: np.random.Generator) -> "SampleBatch":
         perm = rng.permutation(self.count)
-        return SampleBatch({k: v[perm] for k, v in self._data.items()})
+        out = SampleBatch({k: v[perm] for k, v in self._data.items()})
+        out.created_at = self.created_at
+        return out
 
     def minibatches(self, size: int, rng: Optional[np.random.Generator] = None):
         b = self.shuffle(rng) if rng is not None else self
@@ -104,12 +114,18 @@ class SampleBatch(Mapping[str, np.ndarray]):
         if not batches:
             return SampleBatch()
         keys = batches[0].keys()
-        return SampleBatch(
+        out = SampleBatch(
             {k: np.concatenate([b[k] for b in batches], axis=0) for k in keys}
         )
+        out.created_at = min(
+            getattr(b, "created_at", out.created_at) for b in batches
+        )
+        return out
 
     def copy(self) -> "SampleBatch":
-        return SampleBatch({k: v.copy() for k, v in self._data.items()})
+        out = SampleBatch({k: v.copy() for k, v in self._data.items()})
+        out.created_at = self.created_at
+        return out
 
     def size_bytes(self) -> int:
         return int(sum(v.nbytes for v in self._data.values()))

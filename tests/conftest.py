@@ -1,0 +1,111 @@
+"""Shared test infrastructure (ISSUE 3 deflake satellites).
+
+* ``timeout`` marker — ``@pytest.mark.timeout(seconds)`` fails a wedged test
+  fast (SIGALRM) instead of hanging CI: a transport bug that deadlocks a
+  pipe/queue surfaces as a clean failure with a traceback pointing at the
+  blocked call.  Defers to the real pytest-timeout plugin when installed.
+
+* ``deterministic_clock`` fixture — one seeded randomness + polling helper
+  for every time-dependent test (union stress, chaos hang/slow injectors).
+  The seed derives from the test id, so each test's delay schedule is stable
+  run-to-run but distinct across tests, and deadline polling goes through
+  ``wait_until`` instead of hand-rolled ``time.time()`` loops.
+
+* ``backend_matrix`` params — the executor/chaos/transport suites share one
+  backend axis: thread, process+pickle-pipe, process+shared-memory.
+"""
+
+from __future__ import annotations
+
+import random
+import signal
+import time
+import zlib
+
+import pytest
+
+try:  # the plugin owns the marker when present
+    import pytest_timeout  # noqa: F401
+
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+# --------------------------------------------------------------- timeout
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    if (
+        marker is None
+        or _HAVE_PYTEST_TIMEOUT
+        or not hasattr(signal, "SIGALRM")
+    ):
+        yield
+        return
+    seconds = float(marker.args[0]) if marker.args else 60.0
+
+    def _alarm(signum, frame):
+        pytest.fail(
+            f"test exceeded its {seconds:.0f}s timeout marker "
+            "(wedged transport/queue?)", pytrace=True
+        )
+
+    old_handler = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old_handler)
+
+
+# ----------------------------------------------------- deterministic clock
+class DeterministicClock:
+    """Seeded delays + deadline polling for time-dependent tests.
+
+    ``rng`` drives every injected delay (stable per test id); ``jitter``
+    sleeps a seeded fraction of ``max_delay``; ``wait_until`` polls a
+    predicate against a bounded deadline and reports success instead of
+    letting the test spin forever.
+    """
+
+    def __init__(self, seed: int):
+        self.seed = seed
+        self.rng = random.Random(seed)
+
+    def jitter(self, max_delay: float) -> float:
+        dt = self.rng.random() * max_delay
+        time.sleep(dt)
+        return dt
+
+    @staticmethod
+    def wait_until(predicate, timeout: float = 5.0, interval: float = 0.01) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if predicate():
+                return True
+            time.sleep(interval)
+        return bool(predicate())
+
+
+@pytest.fixture
+def deterministic_clock(request) -> DeterministicClock:
+    return DeterministicClock(seed=zlib.crc32(request.node.nodeid.encode()) & 0xFFFF)
+
+
+# ------------------------------------------------------- backend matrix
+# One axis for every suite exercising the executor runtime: the two process
+# rows differ only in the data plane, which is exactly what the transport
+# matrix tests assert equality across.
+BACKEND_MATRIX = ["thread", "process-pickle", "process-shm"]
+
+
+def make_backend(param: str):
+    """Map a matrix param to a WorkerSet.create backend argument."""
+    if param == "thread":
+        return "thread"
+    from repro.core import ProcessBackend
+
+    _, transport = param.split("-", 1)
+    return ProcessBackend(transport=transport)

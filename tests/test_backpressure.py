@@ -1,0 +1,299 @@
+"""Credit-based backpressure + data-plane instrumentation (ISSUE 3).
+
+Covers the fix satellite — ``gather_async`` and the learner feed are now
+credit-bounded instead of open-loop — and the observability contract: credit
+stalls, drops, bytes moved, queue occupancy, and sample->learn latency all
+reach ``Algorithm.train()`` results and ``to_dot()`` edge labels.
+"""
+
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import chaos
+import repro.flow as flow
+from repro.core import Concurrently, CreditPool, Dequeue, Enqueue, WorkerSet
+from repro.core.concurrency import OverflowPolicy
+from repro.core.iterators import from_iterators
+from repro.core.metrics import (
+    CREDIT_STALL_TIME,
+    NUM_BYTES_MOVED,
+    NUM_CREDIT_STALLS,
+    NUM_SAMPLES_DROPPED,
+    MetricsContext,
+    set_metrics_for_thread,
+)
+from repro.core.operators import ParallelRollouts
+from repro.flow.spec import FlowSpec
+from repro.rl.replay import ReplayBuffer
+from repro.rl.sample_batch import SampleBatch
+
+
+# --------------------------------------------------------------- CreditPool
+def test_credit_pool_bounds_and_resizes():
+    pool = CreditPool(2)
+    assert pool.try_acquire() and pool.try_acquire()
+    assert not pool.try_acquire()
+    pool.release()
+    assert pool.try_acquire()
+    pool.resize(None)  # unbounded
+    assert all(pool.try_acquire() for _ in range(64))
+    with pytest.raises(ValueError):
+        CreditPool(0)
+
+
+def test_overflow_policy_validation():
+    for p in ("block", "drop_newest", "drop_oldest"):
+        assert OverflowPolicy.validate(p) == p
+    with pytest.raises(ValueError, match="unknown overflow policy"):
+        OverflowPolicy.validate("explode")
+
+
+# ------------------------------------------------------------- gather_async
+@pytest.mark.timeout(60)
+def test_gather_async_credits_cap_inflight():
+    """With credits=1 over two shards, at most one item is dispatched at a
+    time and both shards still make progress (FIFO backfill fairness)."""
+    par = from_iterators([iter(range(0, 100)), iter(range(100, 200))])
+    it = par.gather_async(num_async=2, credits=1, metrics_key="g")
+    got = it.take(40)
+    assert len(got) == 40
+    assert {x // 100 for x in got} == {0, 1}, "a starved shard never ran"
+    # The credit window stalled dispatches and said so.
+    assert it.metrics.counters[NUM_CREDIT_STALLS] > 0
+    # Per-shard FIFO order survives credit arbitration.
+    for branch in (0, 1):
+        seq = [x for x in got if x // 100 == branch]
+        assert seq == sorted(seq)
+
+
+@pytest.mark.timeout(60)
+def test_gather_async_default_credits_match_legacy_window():
+    """Default credits (num_async * shards) must not change the stream."""
+    par = from_iterators([iter(range(10)), iter(range(10, 20))])
+    got = par.gather_async(num_async=2).take(20)
+    assert sorted(got) == list(range(20))
+
+
+@pytest.mark.timeout(60)
+def test_gather_async_credit_stall_time_accrues():
+    """A slow consumer against a tight window accrues credit_stall_time."""
+    par = from_iterators([iter(range(50)), iter(range(100, 150))])
+    it = par.gather_async(num_async=1, credits=1)
+    out = []
+    for x in iter(it):
+        time.sleep(0.002)  # slow consumer
+        out.append(x)
+        if len(out) >= 20:
+            break
+    assert it.metrics.counters.get(CREDIT_STALL_TIME, 0) > 0
+
+
+# ----------------------------------------------------------------- Enqueue
+def _ctx():
+    m = MetricsContext()
+    set_metrics_for_thread(m)
+    return m
+
+
+def test_enqueue_drop_newest_counts_drops():
+    m = _ctx()
+    q = queue.Queue(maxsize=2)
+    enq = Enqueue(q, policy="drop_newest", metrics_key="k")
+    for i in range(5):
+        assert enq(i) == i
+    assert q.qsize() == 2
+    assert enq.num_dropped == 3
+    assert m.counters[NUM_SAMPLES_DROPPED] == 3
+    assert [q.get(), q.get()] == [0, 1]
+
+
+def test_enqueue_drop_oldest_keeps_freshest():
+    m = _ctx()
+    q = queue.Queue(maxsize=2)
+    enq = Enqueue(q, policy="drop_oldest")
+    for i in range(5):
+        enq(i)
+    assert [q.get(), q.get()] == [3, 4]
+    assert enq.num_dropped == 3
+    assert m.counters[NUM_SAMPLES_DROPPED] == 3
+
+
+@pytest.mark.timeout(60)
+def test_enqueue_block_stalls_and_records():
+    m = _ctx()
+    q = queue.Queue(maxsize=1)
+    enq = Enqueue(q, policy="block", check=lambda: True)
+    enq(0)
+
+    drained = []
+
+    def _drain():
+        time.sleep(0.05)
+        drained.append(q.get())
+        drained.append(q.get())
+
+    t = threading.Thread(target=_drain)
+    t.start()
+    enq(1)  # must block until the consumer frees a slot
+    t.join()
+    assert drained == [0, 1]
+    assert m.counters[NUM_CREDIT_STALLS] >= 1
+    assert m.counters.get(CREDIT_STALL_TIME, 0) > 0
+    assert enq.num_dropped == 0
+
+
+def test_enqueue_legacy_block_flag_still_works():
+    q = queue.Queue(maxsize=4)
+    assert Enqueue(q, block=False).policy == "drop_newest"
+    assert Enqueue(q, block=True).policy == "block"
+    with pytest.raises(ValueError, match="not both"):
+        Enqueue(q, block=True, policy="drop_oldest")
+
+
+def test_enqueue_records_bytes_and_occupancy():
+    m = _ctx()
+    q = queue.Queue(maxsize=8)
+    enq = Enqueue(q, policy="drop_newest", metrics_key="feed")
+    batch = SampleBatch({"obs": np.zeros(1024, np.float64)})
+    enq(batch)
+    assert m.counters["bytes_moved/feed"] == batch.size_bytes()
+    assert m.gauges["queue_occupancy/feed"] == 1
+
+
+def test_enqueue_stamps_queue_wait():
+    _ctx()
+    q = queue.Queue(maxsize=8)
+    batch = SampleBatch({"obs": np.zeros(8, np.float64)})
+    Enqueue(q, policy="drop_newest")((batch, None))
+    assert isinstance(batch._enqueued_at, float)
+
+
+# ----------------------------------------------- flow-level integration
+def stub_ws(n=2):
+    return WorkerSet.create(chaos.make_stub_worker, n)
+
+
+def replay_pool(n=1):
+    from repro.core.actor import ActorPool
+
+    return ActorPool.from_targets(
+        [ReplayBuffer(capacity=4096, sample_batch_size=16, learning_starts=16, seed=i)
+         for i in range(n)],
+        name="replay",
+    )
+
+
+@pytest.mark.timeout(120)
+def test_apex_drop_counts_reach_train_results():
+    """Fix satellite acceptance: the lossy Ape-X feed (drop_newest) surfaces
+    ``num_samples_dropped`` in Algorithm.train() results, and the learner
+    latency stream (sample_to_learn p50/p99) is populated."""
+    ws = stub_ws(2)
+    replay = replay_pool(1)
+    algo = flow.Algorithm.from_plan(
+        "apex", ws, replay,
+        target_update_freq=10_000,
+        block_on_enqueue=False,
+    )
+    # Shrink the learner in-queue so drops actually happen.
+    algo.resources["learner"].inqueue.maxsize = 1
+    deadline = time.time() + 60
+    result = algo.train()
+    while time.time() < deadline:
+        result = algo.train()
+        if (
+            result["counters"].get(NUM_SAMPLES_DROPPED, 0) > 0
+            and result["latencies"].get("sample_to_learn_s", {}).get("count", 0) > 0
+        ):
+            break
+    assert result["counters"][NUM_SAMPLES_DROPPED] > 0
+    lat = result["latencies"]["sample_to_learn_s"]
+    assert lat["count"] > 0
+    assert 0 <= lat["p50"] <= lat["p99"]
+    assert result["counters"][NUM_BYTES_MOVED] > 0
+    algo.stop()
+
+
+@pytest.mark.timeout(120)
+def test_enqueue_policy_annotation_lowered():
+    """An ``overflow_policy`` annotation on the enqueue node wins at
+    lowering time (FlowSpec -> compile -> Enqueue policy)."""
+    ws = stub_ws(1)
+    spec = FlowSpec("annotated")
+    learner = spec.learner_thread(ws)
+    feed = (
+        spec.rollouts(ws, mode="async", num_async=1)
+        .enqueue(learner, block=True)
+        .annotate(overflow_policy="drop_oldest")
+    )
+    out = spec.dequeue(learner).for_each(flow.pure(lambda item: item[1].count), label="count")
+    spec.set_output(spec.concurrently([feed, out], mode="async", output_indexes=[1]))
+    compiled = spec.compile()
+    enq_nodes = [n for n in compiled.spec.nodes.values() if n.kind == "enqueue"]
+    assert enq_nodes and enq_nodes[0].annotations["overflow_policy"] == "drop_oldest"
+    algo = flow.Algorithm(compiled, ws)
+    assert algo.train() == 8  # StubWorker batch size
+    algo.stop()
+
+
+@pytest.mark.timeout(120)
+def test_credits_annotation_lowered_and_visible():
+    """credits= on spec.rollouts caps the async gather; train still works
+    and credit telemetry appears in results."""
+    ws = stub_ws(2)
+    spec = FlowSpec("credited")
+    out = spec.rollouts(ws, mode="async", num_async=2, credits=1).for_each(
+        flow.pure(lambda b: b.count), label="count"
+    )
+    spec.set_output(out)
+    algo = flow.Algorithm.from_plan(spec, ws)
+    results = algo.iterate(12)
+    assert all(r == 8 for r in results)
+    assert algo.compiled.iterator().metrics.counters[NUM_CREDIT_STALLS] > 0
+    algo.stop()
+
+
+@pytest.mark.timeout(120)
+def test_to_dot_edge_labels_carry_bytes():
+    """to_dot(with_metrics=True) labels data-plane edges with bytes moved."""
+    ws = stub_ws(2)
+    spec = FlowSpec("dotted")
+    out = spec.rollouts(ws, mode="async", num_async=1).for_each(
+        flow.pure(lambda b: b.count), label="count"
+    )
+    spec.set_output(out.report(ws))
+    algo = flow.Algorithm.from_plan(spec, ws)
+    bare = algo.to_dot()
+    assert "KB" not in bare and "MB" not in bare
+    algo.iterate(6)
+    dot = algo.to_dot(with_metrics=True)
+    assert any(unit in dot for unit in ("KB", "MB", "B\"")), dot
+    algo.stop()
+
+
+@pytest.mark.timeout(120)
+def test_train_results_include_gauges_and_latencies_sections():
+    ws = stub_ws(2)
+    algo = flow.Algorithm.from_plan("a3c", ws)
+    result = algo.train()
+    assert "gauges" in result and "latencies" in result
+    algo.stop()
+
+
+@pytest.mark.timeout(120)
+def test_learner_out_queue_drop_oldest_policy():
+    """The learner out-queue honors drop_oldest: metrics stream stays fresh
+    instead of stale-first."""
+    from repro.core.learner_thread import LearnerThread
+
+    lt = LearnerThread(chaos.StubWorker(0), out_queue_size=2, out_policy="drop_oldest")
+    for i in range(5):
+        lt._put_out((None, None, i))
+    assert lt.outqueue.qsize() == 2
+    assert lt.outqueue.get()[2] == 3
+    assert lt.outqueue.get()[2] == 4
+    assert lt.num_out_dropped == 3

@@ -12,6 +12,7 @@ import pytest
 
 import chaos
 import repro.flow as flow
+from conftest import BACKEND_MATRIX, make_backend
 from repro.core import WorkerSet
 from repro.core.metrics import (
     NUM_SHARDS_DROPPED,
@@ -22,14 +23,18 @@ from repro.core.metrics import (
 from repro.core.operators import ParallelRollouts, TrainOneStep
 from repro.flow.spec import FlowSpec
 
-pytestmark = pytest.mark.chaos
+# Every chaos test fails fast on a wedge (ISSUE 3 deflake): an injected
+# hang that escapes its release path must kill the test, not CI.
+pytestmark = [pytest.mark.chaos, pytest.mark.timeout(180)]
 
-BACKENDS = ["thread", "process"]
+# The full chaos suite runs under thread, process+pickle, AND process+shm —
+# fault tolerance must be transport-independent (ISSUE 3 acceptance).
+BACKENDS = BACKEND_MATRIX
 
 
 @pytest.fixture(params=BACKENDS)
 def backend(request):
-    return request.param
+    return make_backend(request.param)
 
 
 def build_stub_plan(ws, failure_policy="drop_shard"):

@@ -12,6 +12,7 @@ import pytest
 
 import chaos
 import repro.core as c
+from conftest import BACKEND_MATRIX, make_backend
 from repro.core import (
     ActorDiedError,
     FailurePolicy,
@@ -30,12 +31,14 @@ from repro.core.metrics import (
 )
 from repro.core.operators import ParallelRollouts, par_compute_gradients
 
-BACKENDS = ["thread", "process"]
+# thread / process+pickle / process+shm: the protocol suite must be
+# transport-independent (ISSUE 3).
+BACKENDS = BACKEND_MATRIX
 
 
 @pytest.fixture(params=BACKENDS)
 def backend(request):
-    return request.param
+    return make_backend(request.param)
 
 
 def make_ws(backend, n=2, **supervision):
@@ -84,14 +87,16 @@ def test_rollout_matrix_identical_across_backends(mode):
         finally:
             ws.stop()
 
-    thread_out, process_out = run("thread"), run("process")
+    outs = [run(make_backend(p)) for p in BACKENDS]
+    thread_out = outs[0]
     if mode != "async":
-        assert thread_out == process_out
+        for other in outs[1:]:
+            assert thread_out == other
     else:
         # Async completion order is scheduling-dependent; the invariant
-        # (identical under both backends) is per-shard FIFO over the same
-        # worker set with nothing lost or duplicated.
-        for got in (thread_out, process_out):
+        # (identical under every backend/transport) is per-shard FIFO over
+        # the same worker set with nothing lost or duplicated.
+        for got in outs:
             assert len(got) == 6 and {w for w, _ in got} <= {1, 2}
             for w in (1, 2):
                 seq = [k for wi, k in got if wi == w]

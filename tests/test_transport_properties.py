@@ -1,0 +1,162 @@
+"""Property tests: SampleBatch algebra + SharedMemoryTransport round trips.
+
+ISSUE 3 satellite.  Three invariant families, all hypothesis-driven:
+
+  * concat/slice/split round trips on ``SampleBatch`` (values, dtypes,
+    shapes, and the episode-split partition reassemble exactly);
+  * encode→decode through ``ShmWriter``/``ShmReader`` (with a pickled
+    control-message hop, as on the real pipe) preserves every column
+    bit-for-bit for arbitrary dtype/shape mixes, regardless of whether the
+    payload rode shared memory or fell back to the pipe;
+  * refcount reclaim can never corrupt a batch a reader still holds, no
+    matter how encode/release operations interleave.
+"""
+
+import gc
+import pickle
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transport import ShmReader, ShmWriter, list_segments
+from repro.rl.sample_batch import SampleBatch
+
+DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_]
+
+
+@st.composite
+def batches(draw, min_rows=1, max_rows=64):
+    n = draw(st.integers(min_value=min_rows, max_value=max_rows))
+    n_cols = draw(st.integers(min_value=1, max_value=4))
+    data = {}
+    for i in range(n_cols):
+        dtype = draw(st.sampled_from(DTYPES))
+        extra = draw(st.sampled_from([(), (3,), (2, 2)]))
+        shape = (n,) + extra
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        if dtype == np.bool_:
+            col = rng.integers(0, 2, size=shape).astype(bool)
+        elif np.issubdtype(dtype, np.floating):
+            col = rng.standard_normal(shape).astype(dtype)
+        else:
+            col = rng.integers(-100, 100, size=shape).astype(dtype)
+        data[f"c{i}"] = col
+    return SampleBatch(data)
+
+
+def assert_batches_equal(a: SampleBatch, b: SampleBatch) -> None:
+    assert set(a.keys()) == set(b.keys())
+    for k in a:
+        assert a[k].dtype == b[k].dtype, k
+        assert a[k].shape == b[k].shape, k
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ----------------------------------------------------- SampleBatch algebra
+@given(batches(), st.data())
+@settings(max_examples=50, deadline=None)
+def test_slice_concat_roundtrip(batch, data):
+    cut = data.draw(st.integers(min_value=0, max_value=batch.count))
+    left, right = batch.slice(0, cut), batch.slice(cut, batch.count)
+    assert left.count + right.count == batch.count
+    back = SampleBatch.concat_samples([left, right])
+    assert_batches_equal(batch, back)
+    assert back.created_at == batch.created_at
+
+
+@given(st.lists(batches(max_rows=16), min_size=1, max_size=5))
+@settings(max_examples=50, deadline=None)
+def test_concat_then_reslice_recovers_parts(parts):
+    keys = set(parts[0].keys())
+    parts = [b for b in parts if set(b.keys()) == keys]
+    merged = SampleBatch.concat_samples(parts)
+    assert merged.count == sum(b.count for b in parts)
+    start = 0
+    for b in parts:
+        assert_batches_equal(merged.slice(start, start + b.count), b)
+        start += b.count
+
+
+@given(st.lists(st.integers(min_value=0, max_value=3), min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_split_by_episode_partitions(eps_ids):
+    eps = np.asarray(sorted(eps_ids))
+    batch = SampleBatch({"eps_id": eps, "obs": np.arange(len(eps), dtype=np.float32)})
+    episodes = batch.split_by_episode()
+    # Partition: disjoint, ordered, complete, one eps_id per piece.
+    assert sum(e.count for e in episodes) == batch.count
+    for e in episodes:
+        assert len(set(e["eps_id"].tolist())) == 1
+    back = SampleBatch.concat_samples(episodes)
+    assert_batches_equal(batch, back)
+
+
+# --------------------------------------------------- transport round trips
+@given(batches(), st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_encode_decode_preserves_everything(batch, as_tuple):
+    writer = ShmWriter("hyp1", threshold=1)  # force the shm path when eligible
+    reader = ShmReader("hyp1")
+    try:
+        payload = (batch, {"n": batch.count}) if as_tuple else batch
+        wire = pickle.loads(pickle.dumps(writer.encode(payload)))
+        out = reader.decode(wire)
+        out_batch = out[0] if as_tuple else out
+        assert_batches_equal(batch, out_batch)
+        if as_tuple:
+            assert out[1] == {"n": batch.count}
+    finally:
+        del out, out_batch, wire
+        gc.collect()
+        reader.close()
+        writer.close()
+        assert list_segments("hyp1") == []
+
+
+@given(st.lists(batches(max_rows=16), min_size=1, max_size=4), st.data())
+@settings(max_examples=30, deadline=None)
+def test_reclaim_never_corrupts_held_batches(parts, data):
+    """Interleave encodes, holds, releases: every batch the reader still
+    holds must read back exactly, whatever the ring reused underneath."""
+    writer = ShmWriter("hyp2", threshold=1, max_segments=3)
+    reader = ShmReader("hyp2")
+    held = {}
+    try:
+        for i, b in enumerate(parts):
+            out = reader.decode(pickle.loads(pickle.dumps(writer.encode(b))))
+            held[i] = (b, out)
+            if data.draw(st.booleans(), label=f"release_{i}"):
+                del held[i]
+                gc.collect()
+            writer.reclaim(reader.drain_releases())
+        for original, decoded in held.values():
+            assert_batches_equal(original, decoded)
+    finally:
+        held.clear()
+        gc.collect()
+        reader.close()
+        writer.close()
+        assert list_segments("hyp2") == []
+
+
+@given(batches())
+@settings(max_examples=30, deadline=None)
+def test_decoded_views_are_readonly(batch):
+    writer = ShmWriter("hyp3", threshold=1)
+    reader = ShmReader("hyp3")
+    try:
+        out = reader.decode(pickle.loads(pickle.dumps(writer.encode(batch))))
+        if writer.stats["shm_batches"]:
+            for k in out:
+                assert not out[k].flags.writeable
+                with pytest.raises((ValueError, RuntimeError)):
+                    out[k][...] = 0
+    finally:
+        del out
+        gc.collect()
+        reader.close()
+        writer.close()

@@ -1,12 +1,16 @@
 """Stress tests: union(deterministic=False) / Concurrently under contention.
 
 ISSUE 2 satellites: (a) no lost or duplicated items with 8+ producer
-branches and randomized (seeded) delays; (b) async-union driver threads are
-joined on iterator teardown instead of leaking across tests."""
+branches and randomized delays; (b) async-union driver threads are joined on
+iterator teardown instead of leaking across tests.
 
-import random
+ISSUE 3 deflake: every injected delay draws from the shared
+``deterministic_clock`` fixture (seeded per test id), deadline polling goes
+through ``clock.wait_until``, and each stress test carries a ``timeout``
+marker so a wedged union fails fast instead of hanging CI.
+"""
+
 import threading
-import time
 
 import pytest
 
@@ -17,20 +21,23 @@ def union_driver_threads():
     return [t for t in threading.enumerate() if t.name.startswith("union-drive")]
 
 
-def delayed_branch(branch_id, n_items, seed, max_delay=0.002):
-    """A branch emitting (branch_id, seq) with seeded random per-item delays."""
-    rnd = random.Random(seed * 7919 + branch_id)
+def delayed_branch(clock, branch_id, n_items, max_delay=0.002):
+    """A branch emitting (branch_id, seq) with seeded per-item delays."""
+    rng = clock.rng.__class__(clock.seed * 7919 + branch_id)
 
     def _delay(item):
-        time.sleep(rnd.random() * max_delay)
+        import time
+
+        time.sleep(rng.random() * max_delay)
         return item
 
     return c.from_items([(branch_id, i) for i in range(n_items)]).for_each(_delay)
 
 
+@pytest.mark.timeout(120)
 @pytest.mark.parametrize("n_branches,n_items", [(8, 40), (12, 25)])
-def test_union_async_no_lost_or_duplicated_items(n_branches, n_items):
-    branches = [delayed_branch(b, n_items, seed=1) for b in range(n_branches)]
+def test_union_async_no_lost_or_duplicated_items(deterministic_clock, n_branches, n_items):
+    branches = [delayed_branch(deterministic_clock, b, n_items) for b in range(n_branches)]
     merged = branches[0].union(*branches[1:], deterministic=False)
     out = merged.take(n_branches * n_items)
 
@@ -45,9 +52,10 @@ def test_union_async_no_lost_or_duplicated_items(n_branches, n_items):
     merged.close()
 
 
-def test_concurrently_async_under_contention():
+@pytest.mark.timeout(120)
+def test_concurrently_async_under_contention(deterministic_clock):
     n_branches, n_items = 9, 30
-    ops = [delayed_branch(b, n_items, seed=2) for b in range(n_branches)]
+    ops = [delayed_branch(deterministic_clock, b, n_items) for b in range(n_branches)]
     merged = c.Concurrently(ops, mode="async")
     out = merged.take(n_branches * n_items)
     assert set(out) == {(b, i) for b in range(n_branches) for i in range(n_items)}
@@ -55,9 +63,13 @@ def test_concurrently_async_under_contention():
     merged.close()
 
 
-def test_concurrently_round_robin_under_contention():
+@pytest.mark.timeout(120)
+def test_concurrently_round_robin_under_contention(deterministic_clock):
     n_branches, n_items = 8, 20
-    ops = [delayed_branch(b, n_items, seed=3, max_delay=0.001) for b in range(n_branches)]
+    ops = [
+        delayed_branch(deterministic_clock, b, n_items, max_delay=0.001)
+        for b in range(n_branches)
+    ]
     merged = c.Concurrently(ops, mode="round_robin")
     out = merged.take(n_branches * n_items)
     assert set(out) == {(b, i) for b in range(n_branches) for i in range(n_items)}
@@ -66,7 +78,8 @@ def test_concurrently_round_robin_under_contention():
     merged.close()
 
 
-def test_union_async_driver_threads_joined_on_close():
+@pytest.mark.timeout(60)
+def test_union_async_driver_threads_joined_on_close(deterministic_clock):
     """Satellite: Concurrently/union async driver threads must not leak."""
     baseline = len(union_driver_threads())
     merged = c.Concurrently(
@@ -76,36 +89,36 @@ def test_union_async_driver_threads_joined_on_close():
     merged.take(30)  # partial consumption: drivers still live/blocked
     assert len(union_driver_threads()) > baseline
     merged.close()
-    deadline = time.time() + 5
-    while len(union_driver_threads()) > baseline and time.time() < deadline:
-        time.sleep(0.01)
-    assert len(union_driver_threads()) == baseline, "driver threads leaked"
+    assert deterministic_clock.wait_until(
+        lambda: len(union_driver_threads()) <= baseline, timeout=5.0
+    ), "driver threads leaked"
 
 
-def test_union_async_driver_threads_joined_on_exhaustion():
+@pytest.mark.timeout(60)
+def test_union_async_driver_threads_joined_on_exhaustion(deterministic_clock):
     baseline = len(union_driver_threads())
     merged = c.from_items([1, 2]).union(c.from_items([3, 4]), deterministic=False)
     assert sorted(merged.take(10)) == [1, 2, 3, 4]  # stream drains
-    deadline = time.time() + 5
-    while len(union_driver_threads()) > baseline and time.time() < deadline:
-        time.sleep(0.01)
-    assert len(union_driver_threads()) == baseline
+    assert deterministic_clock.wait_until(
+        lambda: len(union_driver_threads()) <= baseline, timeout=5.0
+    )
     merged.close()
 
 
-def test_nested_union_close_propagates():
+@pytest.mark.timeout(60)
+def test_nested_union_close_propagates(deterministic_clock):
     baseline = len(union_driver_threads())
     inner = c.from_items(range(1000)).union(c.from_items(range(1000)))
     outer = inner.union(c.from_items(range(1000)))
     outer.take(10)
     outer.close()
-    deadline = time.time() + 5
-    while len(union_driver_threads()) > baseline and time.time() < deadline:
-        time.sleep(0.01)
-    assert len(union_driver_threads()) == baseline, "nested drivers leaked"
+    assert deterministic_clock.wait_until(
+        lambda: len(union_driver_threads()) <= baseline, timeout=5.0
+    ), "nested drivers leaked"
 
 
-def test_algorithm_stop_joins_flow_threads():
+@pytest.mark.timeout(120)
+def test_algorithm_stop_joins_flow_threads(deterministic_clock):
     """Flow-level teardown: Algorithm.stop() closes the compiled stream and
     joins its Concurrently drivers (plus learner threads, already covered)."""
     import chaos
@@ -123,7 +136,6 @@ def test_algorithm_stop_joins_flow_threads():
     algo.iterate(5)
     assert len(union_driver_threads()) > baseline
     algo.stop()
-    deadline = time.time() + 5
-    while len(union_driver_threads()) > baseline and time.time() < deadline:
-        time.sleep(0.01)
-    assert len(union_driver_threads()) == baseline, "flow teardown leaked drivers"
+    assert deterministic_clock.wait_until(
+        lambda: len(union_driver_threads()) <= baseline, timeout=5.0
+    ), "flow teardown leaked drivers"
