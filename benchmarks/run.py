@@ -65,6 +65,9 @@ def main() -> None:
         "async_opt": _lazy("bench_async_opt", iters=15 if args.fast else 40),
         "multiagent": _lazy("bench_multiagent", iters=8 if args.fast else 20),
         "streaming": _lazy("bench_streaming", iters=3 if args.fast else 5),
+        # learner forks a 4-simulated-device child (XLA_FLAGS must precede
+        # JAX init), so like transport it is driver-import-safe.
+        "learner": _lazy("bench_learner", iters=5 if args.fast else 20),
         "roofline": _lazy("roofline"),
     }
 
@@ -81,6 +84,7 @@ def main() -> None:
             "multiagent": "bench_multiagent",
             "streaming": "bench_streaming",
             "transport": "bench_transport",
+            "learner": "bench_learner",
             "roofline": "roofline",
         }
         out = {}

@@ -3,7 +3,8 @@ environment — the composition 'not possible by end users before'.  The
 duplicated rollout stream and both training branches are visible in the
 graph: run with --dot to print the live Figure 11/12 diagram.
 
-Run: PYTHONPATH=src python examples/multi_agent_ppo_dqn.py [--dot]
+Run: PYTHONPATH=src python examples/multi_agent_ppo_dqn.py [--dot] [--iters N]
+(CI runs it with --iters 3 as a smoke test so the example can't rot.)
 """
 
 import argparse
@@ -23,6 +24,7 @@ from repro.rl import (
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dot", action="store_true", help="print the DOT graph and exit")
+    ap.add_argument("--iters", type=int, default=40)
     args = ap.parse_args()
 
     mapping = {0: "ppo_policy", 1: "ppo_policy", 2: "dqn_policy", 3: "dqn_policy"}
@@ -49,7 +51,7 @@ def main():
         if args.dot:
             print(algo.to_dot())
             return
-        for i in range(40):
+        for i in range(args.iters):
             result = algo.train()
             c = result["counters"]
             print(

@@ -6,8 +6,11 @@ flow graph, run through the unified ``Algorithm`` facade.
     algo  = Algorithm.from_plan(spec, workers)
     algo.train()                       # side effects start here
 
-Run: PYTHONPATH=src python examples/quickstart.py
+Run: PYTHONPATH=src python examples/quickstart.py [--iters N]
+(CI runs it with --iters 3 as a smoke test so the quickstart can't rot.)
 """
+
+import argparse
 
 import repro.flow as flow
 from repro.core.workers import WorkerSet
@@ -25,6 +28,10 @@ def create_rollout_workers(n=2):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args()
+
     workers = create_rollout_workers()
     spec = flow.build_a3c(workers)
 
@@ -32,7 +39,7 @@ def main():
     print(spec.to_dot())
 
     with flow.Algorithm.from_plan(spec, workers) as algo:
-        for i in range(20):
+        for i in range(args.iters):
             result = algo.train()
             c = result["counters"]
             ep = result["episodes"]

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link must resolve (CI gate).
+
+Scans the repo's markdown surface (README.md, ROADMAP.md, docs/**) for
+inline links/images ``[text](target)`` and reference definitions
+``[id]: target`` and fails when a *relative* target does not exist on disk
+(anchors are stripped; external schemes and pure-anchor links are skipped).
+Code spans and fenced code blocks are ignored so documented syntax like
+``take(n)`` never false-positives.
+
+    python scripts/check_docs_links.py [root]
+
+Exit 0 = all links resolve; 1 = broken links (listed on stderr).
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+INLINE_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REF_DEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+FENCE = re.compile(r"```.*?```", re.DOTALL)
+CODE_SPAN = re.compile(r"`[^`]*`")
+SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def markdown_files(root: str) -> list:
+    files = [os.path.join(root, "README.md"), os.path.join(root, "ROADMAP.md")]
+    files += glob.glob(os.path.join(root, "docs", "**", "*.md"), recursive=True)
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_file(path: str, root: str) -> list:
+    with open(path) as f:
+        text = f.read()
+    text = FENCE.sub("", text)
+    text = CODE_SPAN.sub("", text)
+    targets = INLINE_LINK.findall(text) + REF_DEF.findall(text)
+    broken = []
+    for target in targets:
+        if SCHEME.match(target) or target.startswith("#"):
+            continue  # external URL / mailto / in-page anchor
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            broken.append((target, resolved))
+    return broken
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."
+    )
+    root = os.path.abspath(root)
+    files = markdown_files(root)
+    if not files:
+        print(f"no markdown files found under {root}", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in files:
+        for target, resolved in check_file(path, root):
+            failures += 1
+            print(
+                f"{os.path.relpath(path, root)}: broken link {target!r} "
+                f"(resolved to {os.path.relpath(resolved, root)})",
+                file=sys.stderr,
+            )
+    checked = len(files)
+    if failures:
+        print(f"docs link check: FAIL ({failures} broken across {checked} files)",
+              file=sys.stderr)
+        return 1
+    print(f"docs link check: PASS ({checked} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Render the paper's dataflow diagrams (Figs 9-12) from the live plans.
+
+Every one of the 11 plan builders is built against a small real worker
+group, lowered through ``Algorithm.from_plan`` (fuse disabled so each
+operator keeps its own node, matching the paper's drawings), and exported
+with ``Algorithm.to_dot()``:
+
+    PYTHONPATH=src python scripts/render_figures.py            # all plans
+    PYTHONPATH=src python scripts/render_figures.py --plan apex
+    PYTHONPATH=src python scripts/render_figures.py --svg      # needs `dot`
+
+DOT files land in ``docs/figures/<plan>.dot`` (committed, so the docs can
+link them without requiring graphviz); ``--svg`` additionally renders
+``.svg`` next to each when the graphviz ``dot`` binary is on PATH.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.actor import ActorPool
+from repro.core.workers import WorkerSet
+from repro.flow import Algorithm
+from repro.flow.plans import PLAN_BUILDERS, REPLAY_PLANS
+from repro.rl import ActorCriticPolicy, CartPole, ReplayBuffer, RolloutWorker
+
+
+def make_workers(n: int = 2) -> WorkerSet:
+    def factory(i: int) -> RolloutWorker:
+        return RolloutWorker(
+            CartPole(), ActorCriticPolicy(4, 2), algo="pg",
+            num_envs=2, rollout_len=8, seed=0, worker_index=i,
+        )
+
+    return WorkerSet.create(factory, n)
+
+
+def make_replay() -> ActorPool:
+    return ActorPool.from_targets(
+        [ReplayBuffer(capacity=1024, sample_batch_size=32, learning_starts=64)]
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join("docs", "figures"))
+    ap.add_argument("--plan", default=None, help="render a single plan")
+    ap.add_argument("--svg", action="store_true", help="also render SVG via `dot`")
+    args = ap.parse_args()
+
+    plans = [args.plan] if args.plan else sorted(PLAN_BUILDERS)
+    unknown = set(plans) - set(PLAN_BUILDERS)
+    if unknown:
+        print(f"unknown plans: {sorted(unknown)}", file=sys.stderr)
+        return 2
+
+    os.makedirs(args.out, exist_ok=True)
+    dot_bin = shutil.which("dot") if args.svg else None
+    if args.svg and not dot_bin:
+        print("--svg requested but graphviz `dot` not on PATH", file=sys.stderr)
+        return 2
+
+    workers = make_workers()
+    try:
+        for name in plans:
+            replay_arg = make_replay() if name in REPLAY_PLANS else None
+            algo = Algorithm.from_plan(
+                name, workers, replay_arg, fuse=False, own_workers=False
+            )
+            try:
+                dot = algo.to_dot()
+            finally:
+                algo.stop()
+                if replay_arg is not None:
+                    replay_arg.stop()
+            path = os.path.join(args.out, f"{name}.dot")
+            with open(path, "w") as f:
+                f.write(dot + "\n")
+            print(f"wrote {path}")
+            if dot_bin:
+                svg = path[:-4] + ".svg"
+                subprocess.run([dot_bin, "-Tsvg", path, "-o", svg], check=True)
+                print(f"wrote {svg}")
+    finally:
+        workers.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,10 @@
 # Tier-1 verification: the fast test suite (excludes tests marked `slow`).
 #   scripts/tier1.sh            -> fast suite (includes chaos tests)
 #   scripts/tier1.sh --chaos    -> chaos stage only (fault-injection suite)
-#   scripts/tier1.sh --bench    -> benchmark regression gate (data-plane
-#                                  suites, compared to BENCH_PR3.json; fails
-#                                  on >10% regression of any gated metric)
+#   scripts/tier1.sh --bench    -> benchmark regression gate (transport +
+#                                  sharded-learner suites, compared to
+#                                  BENCH_PR3.json; fails on >10% regression
+#                                  of any gated metric)
 #   scripts/tier1.sh -m ""      -> full suite, slow tests included
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,7 +16,7 @@ if [[ "${1:-}" == "--chaos" ]]; then
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift
-  exec python -m benchmarks.run --fast --suites transport \
+  exec python -m benchmarks.run --fast --suites transport,learner \
     --json BENCH_PR3.current.json --gate BENCH_PR3.json "$@"
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

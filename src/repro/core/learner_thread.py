@@ -46,9 +46,34 @@ class LearnerThread(threading.Thread):
         in_queue_size: int = 16,
         out_queue_size: int = 64,
         out_policy: str = OverflowPolicy.DROP_NEWEST,
+        num_learners: int = 0,
+        microbatch: int = 0,
     ):
         super().__init__(name="learner", daemon=True)
         self.local_worker = local_worker
+        # Sharded SPMD lowering (ISSUE 4): with num_learners/microbatch set,
+        # updates run through a data-parallel learner group on a device
+        # mesh instead of the worker's single-device learn_on_batch.
+        # Declared in flow graphs via spec.learner_thread(workers,
+        # num_learners=..., microbatch=...) (FlowRuntime passes params
+        # through) and the worker stays the canonical weight owner.
+        self.learner_group: Any = None
+        if num_learners > 1 or microbatch > 1:
+            if hasattr(local_worker, "_loss_for"):
+                from repro.rl.learner_group import ShardedLearnerGroup
+
+                self.learner_group = ShardedLearnerGroup(
+                    local_worker, num_learners=num_learners, microbatch=microbatch
+                )
+            else:
+                import logging
+
+                logging.getLogger(__name__).warning(
+                    "LearnerThread(num_learners=%d, microbatch=%d): worker %s "
+                    "has no pure loss (_loss_for); falling back to its plain "
+                    "single-device learn_on_batch",
+                    num_learners, microbatch, type(local_worker).__name__,
+                )
         self.inqueue: "queue.Queue[Any]" = queue.Queue(maxsize=in_queue_size)
         self.outqueue: "queue.Queue[Tuple[Any, Any, int]]" = queue.Queue(maxsize=out_queue_size)
         self.out_policy = OverflowPolicy.validate(out_policy)
@@ -74,8 +99,13 @@ class LearnerThread(threading.Thread):
             else:
                 batch, source_actor = item, None
             self._record_latency(batch, t_pickup)
+            learn = (
+                self.learner_group.learn_on_batch
+                if self.learner_group is not None
+                else self.local_worker.learn_on_batch
+            )
             with self.learn_timer:
-                info = self.local_worker.learn_on_batch(batch)
+                info = learn(batch)
             self.weights_updated = True
             self.num_steps += 1
             self._put_out((source_actor, batch, info))

@@ -160,7 +160,8 @@ def par_compute_gradients(workers: WorkerSet) -> ParallelIterator:
 
 class ApplyGradients:
     """Apply (grads, info) on the local worker; push weights to the source
-    actor (A3C) or all actors (synchronous algorithms)."""
+    actor (A3C) or all actors (synchronous algorithms).  Paper Table 1:
+    ApplyGradients (Fig 9a's central apply step)."""
 
     share_across_shards = True
     flow_pure = True  # never emits NextValueNotReady (see repro.flow.spec.pure)
@@ -188,7 +189,8 @@ class ApplyGradients:
 
 
 class AverageGradients:
-    """List[(grads, info)] -> (averaged grads, merged info) (sync A2C)."""
+    """List[(grads, info)] -> (averaged grads, merged info).  Paper Table 1:
+    AverageGradients (the barrier-reduce of synchronous A2C)."""
 
     flow_pure = True
 
@@ -204,7 +206,19 @@ class AverageGradients:
 
 class TrainOneStep:
     """Take a (possibly multi-agent) batch, run one learner update on the
-    local worker, then broadcast new weights (paper Fig 10b/11b)."""
+    local worker, then broadcast new weights (paper Fig 10b/11b:
+    TrainOneStep).
+
+    ``num_learners``/``microbatch`` lower the update onto a data-parallel
+    SPMD learner group (``repro.rl.learner_group.ShardedLearnerGroup``):
+    batch columns are sharded across a device mesh at the transport
+    boundary and gradients accumulate over ``microbatch`` slices.  Flow
+    graphs set these declaratively — ``stream.learners(4).microbatch(2)``
+    on the TrainOneStep node — and ``compile()`` lowers the annotations
+    onto this operator.  The sharded path needs the local worker's pure
+    loss (``_loss_for``); multi-agent or per-policy routing falls back to
+    the plain ``learn_on_batch`` with a one-time warning.
+    """
 
     share_across_shards = True
     flow_pure = True
@@ -215,12 +229,30 @@ class TrainOneStep:
         policies: Optional[Sequence[str]] = None,
         num_sgd_iter: int = 1,
         sgd_minibatch_size: int = 0,
+        num_learners: int = 0,
+        microbatch: int = 0,
     ):
         self.workers = workers
         self.policies = list(policies) if policies else None
         self.num_sgd_iter = num_sgd_iter
         self.sgd_minibatch_size = sgd_minibatch_size
+        self.num_learners = num_learners
+        self.microbatch = microbatch
+        self._group: Any = None
+        self._warned_fallback = False
         self._rng = np.random.default_rng(0)
+
+    def _sharded(self) -> bool:
+        return self.num_learners > 1 or self.microbatch > 1
+
+    def _learner_group(self, lw: Any) -> Any:
+        if self._group is None or self._group.worker is not lw:
+            from repro.rl.learner_group import ShardedLearnerGroup
+
+            self._group = ShardedLearnerGroup(
+                lw, num_learners=self.num_learners, microbatch=self.microbatch
+            )
+        return self._group
 
     def __call__(self, batch: Any) -> Any:
         metrics = get_metrics()
@@ -239,15 +271,35 @@ class TrainOneStep:
         self.workers.sync_weights()
         return batch, info
 
+    def _warn_fallback(self, lw: Any, why: str) -> None:
+        if self._warned_fallback:
+            return
+        self._warned_fallback = True
+        import logging
+
+        logging.getLogger(__name__).warning(
+            "TrainOneStep(num_learners=%d, microbatch=%d): %s (worker %s); "
+            "falling back to the plain single-device learn_on_batch",
+            self.num_learners, self.microbatch, why, type(lw).__name__,
+        )
+
     def _learn(self, lw: Any, batch: Any) -> Dict[str, Any]:
         if isinstance(batch, MultiAgentBatch):
+            if self._sharded():
+                self._warn_fallback(lw, "multi-agent batches route per policy")
             out = {}
             for pid, b in batch.policy_batches.items():
                 if self.policies is None or pid in self.policies:
                     out[pid] = lw.learn_on_batch(b, policy_id=pid)
             return out
         if self.policies:
+            if self._sharded():
+                self._warn_fallback(lw, "per-policy routing is not sharded")
             return lw.learn_on_batch(batch, policy_id=self.policies[0])
+        if self._sharded():
+            if hasattr(lw, "_loss_for"):
+                return self._learner_group(lw).learn_on_batch(batch)
+            self._warn_fallback(lw, "worker has no pure loss (_loss_for)")
         return lw.learn_on_batch(batch)
 
 
@@ -255,7 +307,8 @@ class TrainOneStep:
 # Batch shaping
 # --------------------------------------------------------------------------
 class ConcatBatches:
-    """Buffer incoming batches until ``min_batch_size`` steps accumulated."""
+    """Buffer incoming batches until ``min_batch_size`` steps accumulated.
+    Paper Table 1: ConcatBatches (PPO's train-batch assembly, Fig 10)."""
 
     def __init__(self, min_batch_size: int):
         self.min_batch_size = min_batch_size
@@ -288,7 +341,8 @@ class SelectExperiences:
 
 
 class StandardizeFields:
-    """Z-score the given columns (PPO advantages)."""
+    """Z-score the given columns.  Paper Table 1: StandardizeFields (PPO's
+    advantage normalization stage)."""
 
     flow_pure = True
 
@@ -314,7 +368,8 @@ class StandardizeFields:
 # Replay interaction
 # --------------------------------------------------------------------------
 class StoreToReplayBuffer:
-    """Send each batch to a random replay actor (Ape-X store sub-flow)."""
+    """Send each batch to a random replay actor.  Paper Table 1:
+    StoreToReplayBuffer (the Ape-X/DQN store sub-flow, §5.2)."""
 
     share_across_shards = True
     flow_pure = True
@@ -331,6 +386,7 @@ class StoreToReplayBuffer:
 
 class UpdateReplayPriorities:
     """Push new TD-error priorities back to the producing replay actor.
+    Paper §5.2: Ape-X's UpdatePriorities message-passing operator.
 
     Consumes ((batch, info), replay_actor) tuples produced by
     ``Replay(...).zip_with_source_actor()`` + TrainOneStep.
@@ -351,7 +407,8 @@ class UpdateReplayPriorities:
 # Actor message-passing operators
 # --------------------------------------------------------------------------
 class UpdateTargetNetwork:
-    """Periodically sync the target network (DQN family)."""
+    """Periodically sync the target network (DQN family).  Paper Table 1:
+    UpdateTargetNetwork (actor message-passing operator, §4)."""
 
     share_across_shards = True
     flow_pure = True
@@ -400,7 +457,8 @@ class UpdateWorkerWeights:
 # Metrics
 # --------------------------------------------------------------------------
 class ReportMetrics:
-    """item -> training-result dict, merging the shared metrics context."""
+    """item -> training-result dict, merging the shared metrics context.
+    The per-item half of the paper's StandardMetricsReporting (Listing A2)."""
 
     share_across_shards = True
     flow_pure = True
@@ -467,7 +525,8 @@ def StandardMetricsReporting(
     workers: WorkerSet,
     report_interval: int = 1,
 ) -> LocalIterator[Dict[str, Any]]:
-    """Wrap a train op into the standard result stream (every Nth item)."""
+    """Wrap a train op into the standard result stream (every Nth item).
+    Paper Table 1 / Listing A2: StandardMetricsReporting."""
     it = train_op
     if report_interval > 1:
         counter = {"n": 0}

@@ -32,6 +32,7 @@ __all__ = [
     "axis_rules_context",
     "get_axis_rules",
     "logical_spec",
+    "make_data_mesh",
     "shard",
 ]
 
@@ -114,6 +115,30 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     # so long caches fit regardless of kv-head divisibility.
     "window": "model",
 }
+
+def make_data_mesh(num_devices: int = 0) -> Mesh:
+    """A 1-D ``('data',)`` mesh over the first ``num_devices`` devices.
+
+    The mesh shape pure data parallelism wants (sharded learner groups,
+    eval fan-out): one axis, batch dim sharded over it, everything else
+    replicated.  ``num_devices <= 0`` takes every visible device; asking
+    for more than are visible raises rather than silently shrinking —
+    callers that want clamp-with-warning semantics (``ShardedLearnerGroup``)
+    decide that policy themselves.  Simulate an N-device CPU mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = num_devices if num_devices > 0 else len(devices)
+    if n > len(devices):
+        raise ValueError(
+            f"make_data_mesh({num_devices}): only {len(devices)} devices "
+            "visible (XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "simulates more on CPU)"
+        )
+    return Mesh(np.asarray(devices[:n]), ("data",))
+
 
 _ctx = threading.local()
 

@@ -276,6 +276,35 @@ class CompiledFlow:
             self._annotated_policies[id(a)] = policy
             a.failure_policy = policy
 
+    def _lower_learner_annotations(self, node: Node, fns: Sequence[Callable]) -> None:
+        """Lower ``learners(n)``/``microbatch(k)`` onto the node's train stages.
+
+        The graph carries the SPMD execution mapping declaratively (the
+        paper's dataflow/numerics split); at lowering time any instantiated
+        stage exposing the learner-group knobs — ``TrainOneStep`` — gets
+        them set so its update runs on a sharded learner group.  Stage
+        fusion merges annotations node-wise, so the knobs survive
+        ``fuse_for_each``.
+        """
+        n = node.annotations.get("num_learners")
+        k = node.annotations.get("microbatch")
+        if n is None and k is None:
+            return
+        hit = False
+        for fn in fns:
+            if hasattr(fn, "num_learners") and hasattr(fn, "microbatch"):
+                if n is not None:
+                    fn.num_learners = int(n)
+                if k is not None:
+                    fn.microbatch = int(k)
+                hit = True
+        if not hit:
+            logger.warning(
+                "flow %s: node %s carries learners/microbatch annotations but "
+                "none of its stages accept them (expected a TrainOneStep-like "
+                "operator)", self.spec.name, node.id,
+            )
+
     def _lower_node(self, node: Node) -> Any:
         k, p = node.kind, node.params
         if k == "rollouts":
@@ -310,6 +339,14 @@ class CompiledFlow:
         up = self._lower_ref(node.inputs[0]) if node.inputs else None
         if k == "for_each":
             if isinstance(up, ParallelIterator):
+                if "num_learners" in node.annotations or "microbatch" in node.annotations:
+                    logger.warning(
+                        "flow %s: node %s carries learners/microbatch "
+                        "annotations on a *parallel* for_each; the learner "
+                        "group lowers only onto local train stages — "
+                        "sequence the stream first (gather_sync/...) or the "
+                        "annotations are ignored", self.spec.name, node.id,
+                    )
                 # Parallel stages keep ParallelIterator's own per-shard
                 # cloning; apply each stage separately, uninstantiated.
                 for stage in p["stages"]:
@@ -317,6 +354,7 @@ class CompiledFlow:
                     up = up.for_each(fn)
                 return up
             fns = [self._instantiate(s) for s in p["stages"]]
+            self._lower_learner_annotations(node, fns)
             return up.for_each(compose_stages(fns))
         if k == "filter":
             return up.filter(p["predicate"])

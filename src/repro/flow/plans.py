@@ -76,8 +76,15 @@ def build_ppo(
     train_batch_size: int = 4000,
     num_sgd_iter: int = 8,
     sgd_minibatch_size: int = 128,
+    num_learners: int = 0,
+    microbatch: int = 0,
 ) -> FlowSpec:
-    """Synchronous sample -> concat -> standardize -> multi-epoch SGD."""
+    """Synchronous sample -> concat -> standardize -> multi-epoch SGD.
+
+    ``num_learners``/``microbatch`` annotate the TrainOneStep node
+    (``stream.learners(n).microbatch(k)``); ``compile()`` lowers the
+    annotations onto a sharded SPMD learner group (ISSUE 4).
+    """
     spec = FlowSpec("ppo")
     train_op = (
         spec.rollouts(workers, mode="bulk_sync")
@@ -91,6 +98,10 @@ def build_ppo(
             )
         )
     )
+    if num_learners:
+        train_op = train_op.learners(num_learners)
+    if microbatch:
+        train_op = train_op.microbatch(microbatch)
     spec.set_output(train_op.report(workers))
     return spec
 
@@ -208,6 +219,8 @@ def build_impala(
     broadcast_interval: int = 1,
     enqueue_policy: str = None,
     rollout_credits: int = None,
+    num_learners: int = 0,
+    microbatch: int = 0,
     name: str = "impala",
 ) -> FlowSpec:
     """Async rollouts -> learner thread -> periodic weight broadcast.
@@ -215,9 +228,14 @@ def build_impala(
     ``enqueue_policy``/``rollout_credits`` expose the data-plane
     backpressure knobs (see ``build_apex``); the default blocking enqueue
     backpressures the rollout pipeline when the learner saturates.
+    ``num_learners``/``microbatch`` shard the learner thread's update onto
+    an SPMD learner group (ISSUE 4) — the async dataflow is unchanged;
+    only the learner fragment's execution mapping moves.
     """
     spec = FlowSpec(name)
-    learner = spec.learner_thread(workers)
+    learner = spec.learner_thread(
+        workers, num_learners=num_learners, microbatch=microbatch
+    )
 
     enqueue_op = (
         spec.rollouts(workers, mode="async", num_async=num_async, credits=rollout_credits)

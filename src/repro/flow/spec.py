@@ -130,7 +130,9 @@ class Stream:
         | "drop_shard") is applied to the node's source actors at lowering
         time; ``overflow_policy`` ("block" | "drop_newest" | "drop_oldest")
         overrides an enqueue node's queue policy; ``credits`` (int) caps a
-        gather_async node's in-flight window.  Other keys (e.g.
+        gather_async node's in-flight window; ``num_learners``/``microbatch``
+        (ints, see ``learners()``/``microbatch()``) lower a train stage onto
+        a sharded SPMD learner group.  Other keys (e.g.
         ``resources={"num_cpus": 1}``) are carried as placement metadata for
         schedulers/introspection.
         """
@@ -141,6 +143,30 @@ class Stream:
             node, annotations={**node.annotations, **annotations}
         )
         return self
+
+    def learners(self, n: int) -> "Stream":
+        """Lower this node's train stage onto ``n`` data-parallel learner
+        devices (SPMD learner group).
+
+        Sugar for ``annotate(num_learners=n)``: at lowering time
+        ``compile()`` configures any TrainOneStep-like stage of the node to
+        run its update on an ``n``-device mesh, with batch columns sharded
+        at the transport boundary.  Typically chained directly on the
+        TrainOneStep ``for_each`` node::
+
+            rollouts.for_each(ConcatBatches(4096))
+                    .for_each(TrainOneStep(workers)).learners(4).microbatch(2)
+        """
+        if n < 1:
+            raise ValueError(f"learners() needs n >= 1 (got {n})")
+        return self.annotate(num_learners=int(n))
+
+    def microbatch(self, k: int) -> "Stream":
+        """Accumulate gradients over ``k`` microbatch slices per update
+        (sugar for ``annotate(microbatch=k)``; see ``learners()``)."""
+        if k < 1:
+            raise ValueError(f"microbatch() needs k >= 1 (got {k})")
+        return self.annotate(microbatch=int(k))
 
     # ----------------------------------------------------- transformations
     def for_each(self, fn: Callable, label: Optional[str] = None) -> "Stream":

@@ -1,0 +1,182 @@
+"""Pallas TPU kernels for fused advantage estimation (GAE / V-trace).
+
+The reverse-time recurrences in ``repro.rl.advantages`` are sequential in T
+but embarrassingly parallel in the batch dimension.  The ``lax.scan``
+references materialize the ``next_values``/``deltas`` intermediates in HBM
+and dispatch one tiny elementwise op per time step; these kernels instead
+grid over batch blocks and keep the whole [T, block_b] column panel resident
+in VMEM: the delta computation, the reverse recurrence, and the value-target
+epilogue fuse into a single pass, so HBM traffic is exactly the four input
+streams plus the two outputs.
+
+Layout: all inputs are time-major [T, B] (the same layout the scan
+references take), ``last_value`` is [B].  The wrappers flatten arbitrary
+trailing dims into B, pad B up to the lane-aligned block size (padded rows
+are independent garbage, sliced off on return), and leave T unpadded — T is
+the sublane dim and the boundary row (bootstrap ``last_value``) is handled
+in-kernel, never by padding.
+
+On CPU (this container) the kernels run under ``interpret=True`` and are
+parity-tested against the scan references to 1e-5
+(``tests/test_kernel_advantages.py``); the dispatch layer
+(``repro.kernels.ops.fused_gae`` / ``fused_vtrace``) selects the scan
+reference on CPU and the Pallas kernel on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gae_pallas", "vtrace_pallas"]
+
+_BLOCK_B = 128  # lane dimension of one batch panel
+
+
+def _reverse_scan(deltas: jax.Array, decay: jax.Array, T: int) -> jax.Array:
+    """acc_t = delta_t + decay_t * acc_{t+1}, returned as the full [T, Bb]
+    array.  Runs as a ``fori_loop`` over VMEM-resident panels (the rwkv6
+    kernel idiom: dynamic row slices against register/VMEM arrays)."""
+
+    def step(i, carry_out):
+        carry, out = carry_out
+        t = T - 1 - i
+        d_t = jax.lax.dynamic_slice_in_dim(deltas, t, 1, 0)[0]
+        k_t = jax.lax.dynamic_slice_in_dim(decay, t, 1, 0)[0]
+        acc = d_t + k_t * carry
+        out = jax.lax.dynamic_update_slice(out, acc[None], (t, 0))
+        return acc, out
+
+    carry0 = jnp.zeros(deltas.shape[1:], deltas.dtype)
+    _, out = jax.lax.fori_loop(0, T, step, (carry0, jnp.zeros_like(deltas)))
+    return out
+
+
+def _gae_kernel(r_ref, v_ref, d_ref, last_ref, adv_ref, ret_ref, *, gamma, lam, T):
+    r = r_ref[...].astype(jnp.float32)  # [T, Bb]
+    v = v_ref[...].astype(jnp.float32)
+    nd = 1.0 - d_ref[...].astype(jnp.float32)
+    last = last_ref[...].astype(jnp.float32)  # [1, Bb]
+
+    nv = jnp.concatenate([v[1:], last], axis=0)  # bootstrap boundary in-kernel
+    deltas = r + gamma * nd * nv - v
+    adv = _reverse_scan(deltas, gamma * lam * nd, T)
+    adv_ref[...] = adv.astype(adv_ref.dtype)
+    ret_ref[...] = (adv + v).astype(ret_ref.dtype)
+
+
+def _vtrace_kernel(
+    blp_ref, tlp_ref, r_ref, v_ref, d_ref, last_ref, vs_ref, pg_ref,
+    *, gamma, rho_clip, c_clip, T,
+):
+    blp = blp_ref[...].astype(jnp.float32)
+    tlp = tlp_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    last = last_ref[...].astype(jnp.float32)  # [1, Bb]
+
+    rhos = jnp.exp(tlp - blp)
+    clipped_rhos = jnp.minimum(rho_clip, rhos)
+    cs = jnp.minimum(c_clip, rhos)
+    discounts = gamma * (1.0 - d)
+    nv = jnp.concatenate([v[1:], last], axis=0)
+    deltas = clipped_rhos * (r + discounts * nv - v)
+    vs = _reverse_scan(deltas, discounts * cs, T) + v
+    next_vs = jnp.concatenate([vs[1:], last], axis=0)
+    pg_adv = clipped_rhos * (r + discounts * next_vs - v)
+    vs_ref[...] = vs.astype(vs_ref.dtype)
+    pg_ref[...] = pg_adv.astype(pg_ref.dtype)
+
+
+def _flatten_tm(x: jax.Array) -> jax.Array:
+    """[T, ...] -> [T, B] (B = product of trailing dims; B=1 when none)."""
+    T = x.shape[0]
+    return x.reshape(T, -1) if x.ndim != 1 else x.reshape(T, 1)
+
+
+def _pad_b(x: jax.Array, block: int) -> jax.Array:
+    B = x.shape[1]
+    pad = (-B) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
+def _panel_call(kernel, inputs, T, B, dtype, num_outputs, interpret, block_b):
+    """Shared pallas_call plumbing: grid over lane-aligned batch panels."""
+    block_b = min(block_b, max(B, 1))
+    padded = [_pad_b(x, block_b) for x in inputs]
+    Bp = padded[0].shape[1]
+    nb = Bp // block_b
+    spec_tb = pl.BlockSpec((T, block_b), lambda b: (0, b))
+    spec_last = pl.BlockSpec((1, block_b), lambda b: (0, b))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[spec_tb] * (len(inputs) - 1) + [spec_last],
+        out_specs=[spec_tb] * num_outputs,
+        out_shape=[jax.ShapeDtypeStruct((T, Bp), dtype)] * num_outputs,
+        interpret=interpret,
+    )(*padded)
+    return [o[:, :B] for o in outs]
+
+
+def gae_pallas(
+    rewards: jax.Array,
+    values: jax.Array,
+    dones: jax.Array,
+    last_value: jax.Array,
+    gamma: float = 0.99,
+    lam: float = 0.95,
+    block_b: int = _BLOCK_B,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused GAE; same contract as ``repro.rl.advantages.gae``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T = rewards.shape[0]
+    shape, dtype = rewards.shape, rewards.dtype
+    r, v, d = map(_flatten_tm, (rewards, values, dones.astype(rewards.dtype)))
+    last = last_value.reshape(1, -1).astype(dtype)
+    B = r.shape[1]
+    kernel = functools.partial(_gae_kernel, gamma=gamma, lam=lam, T=T)
+    adv, ret = _panel_call(kernel, [r, v, d, last], T, B, dtype, 2, interpret, block_b)
+    return adv.reshape(shape), ret.reshape(shape)
+
+
+def vtrace_pallas(
+    behaviour_logp: jax.Array,
+    target_logp: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    dones: jax.Array,
+    last_value: jax.Array,
+    gamma: float = 0.99,
+    rho_clip: float = 1.0,
+    c_clip: float = 1.0,
+    block_b: int = _BLOCK_B,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused V-trace; same contract as ``repro.rl.advantages.vtrace``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T = rewards.shape[0]
+    shape, dtype = rewards.shape, rewards.dtype
+    blp, tlp, r, v, d = map(
+        _flatten_tm,
+        (behaviour_logp, target_logp, rewards, values, dones.astype(rewards.dtype)),
+    )
+    last = last_value.reshape(1, -1).astype(dtype)
+    B = r.shape[1]
+    kernel = functools.partial(
+        _vtrace_kernel, gamma=gamma, rho_clip=rho_clip, c_clip=c_clip, T=T
+    )
+    vs, pg = _panel_call(
+        kernel, [blp, tlp, r, v, d, last], T, B, dtype, 2, interpret, block_b
+    )
+    return vs.reshape(shape), pg.reshape(shape)

@@ -20,7 +20,15 @@ from repro.kernels import ref as _ref
 
 FORCE_MODE: Optional[str] = None  # None -> auto by backend
 
-__all__ = ["flash_attention", "decode_attention", "rwkv6", "moe_gmm", "use_pallas"]
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "rwkv6",
+    "moe_gmm",
+    "fused_gae",
+    "fused_vtrace",
+    "use_pallas",
+]
 
 
 def use_pallas() -> bool:
@@ -81,3 +89,52 @@ def moe_gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
 
         return moe_gmm_pallas(x, w, group_sizes)
     return _ref.moe_gmm_ref(x, w, group_sizes)
+
+
+# The advantage-estimation oracles live with the RL numerics
+# (``repro.rl.advantages``); imported lazily so ``repro.rl`` package init
+# (which imports workers that import this module) never re-enters a
+# partially-initialized ``repro.kernels.ops``.
+def fused_gae(
+    rewards: jax.Array,
+    values: jax.Array,
+    dones: jax.Array,
+    last_value: jax.Array,
+    gamma: float = 0.99,
+    lam: float = 0.95,
+):
+    """GAE over time-major [T, ...]: Pallas-fused on TPU, lax.scan on CPU."""
+    if use_pallas():
+        from repro.kernels.advantages import gae_pallas
+
+        return gae_pallas(rewards, values, dones, last_value, gamma=gamma, lam=lam)
+    from repro.rl.advantages import gae
+
+    return gae(rewards, values, dones, last_value, gamma=gamma, lam=lam)
+
+
+def fused_vtrace(
+    behaviour_logp: jax.Array,
+    target_logp: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    dones: jax.Array,
+    last_value: jax.Array,
+    gamma: float = 0.99,
+    rho_clip: float = 1.0,
+    c_clip: float = 1.0,
+):
+    """V-trace over time-major [T, ...]: Pallas-fused on TPU, lax.scan on CPU."""
+    if use_pallas():
+        from repro.kernels.advantages import vtrace_pallas
+
+        return vtrace_pallas(
+            behaviour_logp, target_logp, rewards, values, dones, last_value,
+            gamma=gamma, rho_clip=rho_clip, c_clip=c_clip,
+        )
+    from repro.rl.advantages import vtrace
+
+    return vtrace(
+        behaviour_logp, target_logp, rewards, values, dones, last_value,
+        gamma=gamma, rho_clip=rho_clip, c_clip=c_clip,
+    )

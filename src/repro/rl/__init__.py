@@ -6,6 +6,7 @@ from repro.rl.policy import (
     DummyPolicy,
     SACPolicy,
 )
+from repro.rl.learner_group import ShardedLearnerGroup
 from repro.rl.model_based import ModelBasedWorker
 from repro.rl.replay import ReplayBuffer
 from repro.rl.rollout_worker import MultiAgentRolloutWorker, RolloutWorker

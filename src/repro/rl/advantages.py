@@ -1,7 +1,12 @@
 """Advantage estimators: discounted returns, GAE, V-trace (IMPALA).
 
 All are pure ``lax.scan``-based functions over time-major arrays so they can
-live inside jitted rollout/learn steps.
+live inside jitted rollout/learn steps.  These are also the *oracles* for
+the Pallas-fused advantage kernels (``repro.kernels.advantages``): callers
+that want the TPU-fused path go through ``repro.kernels.ops.fused_gae`` /
+``fused_vtrace``, which dispatch to the kernels on TPU and to these exact
+functions on CPU (parity asserted to 1e-5 by
+``tests/test_kernel_advantages.py``).
 """
 
 from __future__ import annotations

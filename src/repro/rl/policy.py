@@ -137,8 +137,14 @@ class ActorCriticPolicy:
 
         Batch rows are [B*T] with contiguous length-T traces (batch-major);
         reshape to [T, N] time-major for the scan.
+
+        The v-trace targets go through ``repro.kernels.ops.fused_vtrace``:
+        the Pallas-fused kernel on TPU, the identical lax.scan math on CPU.
+        The targets are stop-gradient anyway, so the kernel *inputs* are
+        stopped too — no tangent may enter ``pallas_call`` (it has no
+        transpose rule; differentiating through it fails at linearize).
         """
-        from repro.rl.advantages import vtrace
+        from repro.kernels.ops import fused_vtrace as vtrace
 
         T = self.rollout_len
         assert T > 0, "vtrace loss needs rollout_len"
@@ -147,16 +153,16 @@ class ActorCriticPolicy:
         def tm(x):  # [N*T, ...] -> [T, N, ...]
             return x.reshape((-1, T) + x.shape[1:]).swapaxes(0, 1)
 
+        sg = jax.lax.stop_gradient
         vs, pg_adv = vtrace(
             behaviour_logp=tm(batch["logp"]),
-            target_logp=tm(logp),
+            target_logp=sg(tm(logp)),
             rewards=tm(batch["rewards"]),
-            values=tm(values),
+            values=sg(tm(values)),
             dones=tm(batch["dones"]),
-            last_value=tm(values)[-1],
+            last_value=sg(tm(values)[-1]),
             gamma=self.gamma,
         )
-        vs, pg_adv = map(jax.lax.stop_gradient, (vs, pg_adv))
         pg = -jnp.mean(tm(logp) * pg_adv)
         vf = jnp.mean(jnp.square(tm(values) - vs))
         ent = jnp.mean(entropy)

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ops import fused_gae as gae
 from repro.optim import Optimizer, adam
-from repro.rl.advantages import gae
 from repro.rl.env import Env
 from repro.rl.policy import ActorCriticPolicy, DQNPolicy, SACPolicy
 from repro.rl.sample_batch import MultiAgentBatch, SampleBatch
@@ -188,12 +188,18 @@ class RolloutWorker:
                 info["td_error"] = np.asarray(v)
             else:
                 info[name] = float(v)
+        self._post_update()
+        return info
+
+    def _post_update(self) -> None:
+        """Per-update side effects beyond the optimizer step (single hook so
+        sharded learner groups replay the exact same behaviour): SAC tracks
+        its target network by polyak averaging."""
         if self.algo == "sac" and self.target_polyak > 0:
             tau = self.target_polyak
             self.target_params = jax.tree_util.tree_map(
                 lambda t, p: (1 - tau) * t + tau * p, self.target_params, self.params
             )
-        return info
 
     def compute_gradients(self, batch: SampleBatch) -> Tuple[PyTree, Dict[str, Any]]:
         self._key, k = jax.random.split(self._key)

@@ -122,6 +122,24 @@ class SampleBatch(Mapping[str, np.ndarray]):
         )
         return out
 
+    def shard(self, num_shards: int) -> List["SampleBatch"]:
+        """Contiguous equal-row split for data-parallel learner groups.
+
+        The transport-boundary half of learner sharding: each shard is a
+        zero-copy view batch (numpy slicing) destined for one learner
+        device/process.  Rows must tile ``num_shards`` evenly — trimming or
+        padding is a *policy* decision left to the caller
+        (``ShardedLearnerGroup`` trims and counts).
+        """
+        if num_shards <= 0:
+            raise ValueError(f"num_shards must be positive (got {num_shards})")
+        if self.count % num_shards:
+            raise ValueError(
+                f"cannot shard {self.count} rows into {num_shards} equal parts"
+            )
+        rows = self.count // num_shards
+        return [self.slice(i * rows, (i + 1) * rows) for i in range(num_shards)]
+
     def copy(self) -> "SampleBatch":
         out = SampleBatch({k: v.copy() for k, v in self._data.items()})
         out.created_at = self.created_at

@@ -1,0 +1,67 @@
+"""Subprocess child for the 4-device sharded-learner parity test.
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (set by
+the parent — the flag must be in place before JAX first initializes, which
+is why this is a subprocess and not a fixture).  Trains one step of the
+same PPO batch through three execution mappings of the *same* learn step —
+single device, 4-device data-parallel, 4-device + microbatch accumulation —
+and reports losses and max parameter deltas as JSON on stdout.
+"""
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker, ShardedLearnerGroup
+
+
+def make_worker():
+    return RolloutWorker(
+        CartPole(), ActorCriticPolicy(4, 2, loss_kind="ppo"), algo="ppo",
+        num_envs=4, rollout_len=32, seed=7, worker_index=0,
+    )
+
+
+def max_param_diff(a, b):
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return max(
+        float(jnp.max(jnp.abs(x - y))) for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def main():
+    assert jax.device_count() >= 4, f"need 4 simulated devices, got {jax.device_count()}"
+
+    # One canonical batch (identical across paths: same seed, same rollout).
+    batch = make_worker().sample()
+    assert batch.count % 8 == 0
+
+    w_single = make_worker()
+    info_single = w_single.learn_on_batch(batch)
+
+    w_sharded = make_worker()
+    group = ShardedLearnerGroup(w_sharded, num_learners=4)
+    info_sharded = group.learn_on_batch(batch)
+
+    w_micro = make_worker()
+    group_mb = ShardedLearnerGroup(w_micro, num_learners=4, microbatch=2)
+    info_micro = group_mb.learn_on_batch(batch)
+
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "num_learners": group.num_learners,
+        "loss_single": info_single["loss"],
+        "loss_sharded": info_sharded["loss"],
+        "loss_micro": info_micro["loss"],
+        "param_diff_sharded": max_param_diff(w_single.params, w_sharded.params),
+        "param_diff_micro": max_param_diff(w_single.params, w_micro.params),
+        "batch_shard_count": len(batch.shard(4)),
+    }))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

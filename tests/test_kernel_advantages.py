@@ -1,0 +1,119 @@
+"""Pallas advantage-kernel validation (interpret mode) vs the lax.scan
+oracles in ``repro.rl.advantages`` — the ISSUE 4 1e-5 parity gate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.advantages import gae_pallas, vtrace_pallas
+from repro.kernels import ops
+from repro.rl.advantages import gae, vtrace
+
+TOL = 1e-5
+
+
+def _episode_data(key, T, B):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    rewards = jax.random.normal(ks[0], (T, B), jnp.float32)
+    values = jax.random.normal(ks[1], (T, B), jnp.float32)
+    dones = (jax.random.uniform(ks[2], (T, B)) < 0.1).astype(jnp.float32)
+    last_value = jax.random.normal(ks[3], (B,), jnp.float32)
+    logp_b = -jnp.abs(jax.random.normal(ks[4], (T, B), jnp.float32))
+    return rewards, values, dones, last_value, logp_b
+
+
+# T sweeps include non-multiples of 8 (unpadded sublane dim) and B sweeps
+# cross the 128-lane panel boundary (pad + slice path).
+SHAPES = [(16, 4), (33, 8), (64, 1), (7, 130), (40, 256)]
+
+
+@pytest.mark.parametrize("T,B", SHAPES)
+def test_gae_kernel_parity(T, B):
+    r, v, d, last, _ = _episode_data(T * 1000 + B, T, B)
+    adv_k, ret_k = gae_pallas(r, v, d, last, gamma=0.97, lam=0.9, block_b=128,
+                              interpret=True)
+    adv_r, ret_r = gae(r, v, d, last, gamma=0.97, lam=0.9)
+    np.testing.assert_allclose(np.asarray(adv_k), np.asarray(adv_r), atol=TOL, rtol=TOL)
+    np.testing.assert_allclose(np.asarray(ret_k), np.asarray(ret_r), atol=TOL, rtol=TOL)
+
+
+@pytest.mark.parametrize("T,B", SHAPES)
+def test_vtrace_kernel_parity(T, B):
+    r, v, d, last, blp = _episode_data(T * 2000 + B, T, B)
+    tlp = blp + 0.1 * jax.random.normal(jax.random.PRNGKey(T + B), (T, B))
+    vs_k, pg_k = vtrace_pallas(blp, tlp, r, v, d, last, gamma=0.95,
+                               block_b=128, interpret=True)
+    vs_r, pg_r = vtrace(blp, tlp, r, v, d, last, gamma=0.95)
+    np.testing.assert_allclose(np.asarray(vs_k), np.asarray(vs_r), atol=TOL, rtol=TOL)
+    np.testing.assert_allclose(np.asarray(pg_k), np.asarray(pg_r), atol=TOL, rtol=TOL)
+
+
+def test_gae_kernel_small_block():
+    # Multiple grid panels: B=96 with block_b=32 -> 3 programs.
+    r, v, d, last, _ = _episode_data(7, 24, 96)
+    adv_k, ret_k = gae_pallas(r, v, d, last, block_b=32, interpret=True)
+    adv_r, ret_r = gae(r, v, d, last)
+    np.testing.assert_allclose(np.asarray(adv_k), np.asarray(adv_r), atol=TOL, rtol=TOL)
+    np.testing.assert_allclose(np.asarray(ret_k), np.asarray(ret_r), atol=TOL, rtol=TOL)
+
+
+def test_gae_kernel_all_done_boundaries():
+    # dones=1 everywhere: advantages reduce to per-step deltas.
+    T, B = 12, 16
+    r, v, _, last, _ = _episode_data(11, T, B)
+    d = jnp.ones((T, B), jnp.float32)
+    adv_k, _ = gae_pallas(r, v, d, last, interpret=True)
+    np.testing.assert_allclose(np.asarray(adv_k), np.asarray(r - v), atol=TOL, rtol=TOL)
+
+
+def test_ops_dispatch_matches_reference_on_cpu():
+    # On CPU the dispatch layer must return the scan reference bit-for-bit.
+    r, v, d, last, blp = _episode_data(3, 16, 8)
+    tlp = blp * 0.5
+    assert not ops.use_pallas()
+    a1, t1 = ops.fused_gae(r, v, d, last)
+    a2, t2 = gae(r, v, d, last)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    vs1, pg1 = ops.fused_vtrace(blp, tlp, r, v, d, last)
+    vs2, pg2 = vtrace(blp, tlp, r, v, d, last)
+    np.testing.assert_array_equal(np.asarray(vs1), np.asarray(vs2))
+    np.testing.assert_array_equal(np.asarray(pg1), np.asarray(pg2))
+
+
+def test_vtrace_loss_differentiable_under_forced_pallas():
+    """The learn path differentiates _vtrace_loss; pallas_call has no
+    transpose rule, so the loss must keep every tangent out of the kernel
+    (stop-gradient inputs).  Regression: with FORCE_MODE='pallas' this used
+    to fail at jax linearize inside value_and_grad."""
+    from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
+
+    def mk():
+        return RolloutWorker(
+            CartPole(), ActorCriticPolicy(4, 2, loss_kind="vtrace", rollout_len=8),
+            algo="vtrace", num_envs=2, rollout_len=8, seed=1, worker_index=0,
+        )
+
+    batch = mk().sample()
+    loss_ref = mk().learn_on_batch(batch)["loss"]
+    prev = ops.FORCE_MODE
+    ops.FORCE_MODE = "pallas"  # interpret-mode kernel on CPU
+    try:
+        loss_pallas = mk().learn_on_batch(batch)["loss"]
+    finally:
+        ops.FORCE_MODE = prev
+    assert abs(loss_ref - loss_pallas) < 1e-4
+
+
+def test_forced_pallas_dispatch_runs_kernel():
+    r, v, d, last, _ = _episode_data(5, 10, 6)
+    prev = ops.FORCE_MODE
+    ops.FORCE_MODE = "pallas"
+    try:
+        adv_k, ret_k = ops.fused_gae(r, v, d, last)
+    finally:
+        ops.FORCE_MODE = prev
+    adv_r, ret_r = gae(r, v, d, last)
+    np.testing.assert_allclose(np.asarray(adv_k), np.asarray(adv_r), atol=TOL, rtol=TOL)
+    np.testing.assert_allclose(np.asarray(ret_k), np.asarray(ret_r), atol=TOL, rtol=TOL)
