@@ -1,0 +1,132 @@
+"""Vectorized rollout engine throughput: batched vs per-env inference.
+
+ISSUE 5 acceptance bench.  Same stub env, same policy, same key chains —
+the only variable is how actions are dispatched:
+
+  * **per-env loop** (``PerEnvRolloutWorker``): one policy call per env per
+    step, the structure the paper's rollout fragment implies and the
+    pre-vectorization baseline;
+  * **vectorized** (``VectorizedRolloutWorker``): one batched
+    ``compute_actions`` dispatch for all N lanes, whole rollout compiled to
+    a single ``lax.scan`` program;
+  * **server** (decoupled inference): batched dispatch through an
+    ``InferenceActor`` over the executor runtime (recorded, not gated —
+    its win is multi-shard serving, not single-worker latency).
+
+Gated: ``rollout_vector_speedup_v8`` (vector=8 batched inference must be
+>= 2x the per-env loop — a *ratio within one run*, so it transfers across
+machines) and ``rollout_determinism_ok`` (vectorized and per-env streams
+bit-identical on the stub env + pure-RNG policy, the same invariant
+``tests/test_rollout_determinism.py`` pins across backends).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+GATED: Dict[str, Dict[str, float]] = {
+    # Acceptance floor 2.0 (the ISSUE's ">= 2x steps/s for vector=8");
+    # `value` is a conservative CI-class capability level — local runs
+    # measure >100x (batched dispatch amortizes T*N python/dispatch round
+    # trips into one scan), so a drop below ~18 means the vectorized path
+    # stopped actually batching.
+    "rollout_vector_speedup_v8": {"min": 2.0, "value": 20.0},
+    "rollout_determinism_ok": {"min": 1.0, "value": 1.0},
+}
+
+_ENV_STEPS = 64  # rollout_len per sample
+
+
+def _make(cls, policy, num_envs: int, **kw):
+    from repro.rl.env import StubEnv
+
+    return cls(
+        StubEnv(max_steps=24), policy, algo=kw.pop("algo", "ppo"),
+        num_envs=num_envs, rollout_len=_ENV_STEPS, seed=7, worker_index=1, **kw,
+    )
+
+
+def _steps_per_s(worker, iters: int, trials: int) -> float:
+    worker.sample()  # warmup: trace + compile
+    best = 0.0
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        n = 0
+        for _ in range(iters):
+            n += worker.sample().count
+        best = max(best, n / (time.perf_counter() - t0))
+    return best
+
+
+def run(iters: int = 10, trials: int = 3) -> List[Tuple[str, float, str]]:
+    import numpy as np
+
+    from repro.core.actor import VirtualActor
+    from repro.rl.env import StubEnv
+    from repro.rl.inference import CreditGate, InferenceActor, InferenceClient
+    from repro.rl.policy import ActorCriticPolicy, DummyPolicy
+    from repro.rl.rollout_worker import PerEnvRolloutWorker, VectorizedRolloutWorker
+
+    def ac():
+        return ActorCriticPolicy(4, 2, loss_kind="ppo")
+
+    rows: List[Tuple[str, float, str]] = []
+
+    # Per-env loop baseline at B=8 (fewer iters: it is the slow side).
+    per_iters = max(2, iters // 3)
+    per8 = _steps_per_s(_make(PerEnvRolloutWorker, ac(), 8), per_iters, trials)
+    rows.append(("rollout_per_env_steps_per_s_v8", round(per8, 1), f"B=8 T={_ENV_STEPS}"))
+
+    vec8 = _steps_per_s(_make(VectorizedRolloutWorker, ac(), 8), iters, trials)
+    rows.append(("rollout_vector_steps_per_s_v8", round(vec8, 1), f"B=8 T={_ENV_STEPS}"))
+    rows.append(
+        (
+            "rollout_vector_speedup_v8",
+            round(vec8 / per8, 2),
+            f"gated>={GATED['rollout_vector_speedup_v8']['min']}",
+        )
+    )
+
+    # High-env-count scaling (recorded): the scenario class this opens.
+    vec32 = _steps_per_s(_make(VectorizedRolloutWorker, ac(), 32), iters, trials)
+    rows.append(("rollout_vector_steps_per_s_v32", round(vec32, 1), f"B=32 T={_ENV_STEPS}"))
+    rows.append(("rollout_vector_scaleup_v32_over_v8", round(vec32 / vec8, 2), "lanes 4x"))
+
+    # Decoupled inference (recorded): batched dispatch over the actor RPC.
+    actor = VirtualActor(
+        factory=lambda: InferenceActor(ac, algo="ppo", seed=7),
+        name="bench-inference", max_restarts=1, backoff_base=0.0,
+    )
+    try:
+        client = InferenceClient(actor, credits=CreditGate(4))
+        w_srv = _make(
+            VectorizedRolloutWorker, ac(), 8,
+            inference="server", inference_client=client,
+        )
+        client.sync_weights(w_srv.get_weights())
+        srv8 = _steps_per_s(w_srv, per_iters, trials)
+        rows.append(
+            ("rollout_server_steps_per_s_v8", round(srv8, 1), "decoupled InferenceActor")
+        )
+    finally:
+        actor.stop()
+
+    # Determinism gate: pure-RNG policy => bit-identical engines.
+    wv = _make(VectorizedRolloutWorker, DummyPolicy(4, 2), 8, algo="pg")
+    wp = _make(PerEnvRolloutWorker, DummyPolicy(4, 2), 8, algo="pg")
+    ok = 1.0
+    for _ in range(2):
+        bv, bp = wv.sample(), wp.sample()
+        if set(bv.keys()) != set(bp.keys()) or any(
+            not np.array_equal(bv[k], bp[k]) for k in bv
+        ):
+            ok = 0.0
+            break
+    rows.append(("rollout_determinism_ok", ok, "vector==per-env bitwise"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -68,6 +68,11 @@ def main() -> None:
         # learner forks a 4-simulated-device child (XLA_FLAGS must precede
         # JAX init), so like transport it is driver-import-safe.
         "learner": _lazy("bench_learner", iters=5 if args.fast else 20),
+        "rollout": _lazy(
+            "bench_rollout",
+            iters=5 if args.fast else 10,
+            trials=2 if args.fast else 3,
+        ),
         "roofline": _lazy("roofline"),
     }
 
@@ -85,6 +90,7 @@ def main() -> None:
             "streaming": "bench_streaming",
             "transport": "bench_transport",
             "learner": "bench_learner",
+            "rollout": "bench_rollout",
             "roofline": "roofline",
         }
         out = {}
@@ -124,7 +130,7 @@ def main() -> None:
         gated = _gated_specs(selected)
         doc = {
             "meta": {
-                "issue": "PR3 data plane",
+                "issue": "bench baselines (PR3 data plane, PR5 rollout engine)",
                 "python": platform.python_version(),
                 "machine": platform.machine(),
                 "suites": sorted(selected),

@@ -28,8 +28,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core.actor import ActorPool
 from repro.core.workers import WorkerSet
 from repro.flow import Algorithm
-from repro.flow.plans import PLAN_BUILDERS, REPLAY_PLANS
+from repro.flow.plans import PLAN_BUILDERS, REPLAY_PLANS, build_ppo
 from repro.rl import ActorCriticPolicy, CartPole, ReplayBuffer, RolloutWorker
+
+# Annotated variants rendered alongside the 11 canonical plans.  These are
+# built (FlowSpec only, never compiled — compiling inference='server' would
+# spin up a live InferenceActor) to show execution-mapping annotations on
+# the graph: the vectorized rollout engine with decoupled inference.
+EXTRA_FIGURES = {
+    "ppo_vector": lambda workers: build_ppo(
+        workers, vector=8, inference="server"
+    ),
+}
 
 
 def make_workers(n: int = 2) -> WorkerSet:
@@ -55,8 +65,9 @@ def main() -> int:
     ap.add_argument("--svg", action="store_true", help="also render SVG via `dot`")
     args = ap.parse_args()
 
-    plans = [args.plan] if args.plan else sorted(PLAN_BUILDERS)
-    unknown = set(plans) - set(PLAN_BUILDERS)
+    all_plans = sorted(PLAN_BUILDERS) + sorted(EXTRA_FIGURES)
+    plans = [args.plan] if args.plan else all_plans
+    unknown = set(plans) - set(all_plans)
     if unknown:
         print(f"unknown plans: {sorted(unknown)}", file=sys.stderr)
         return 2
@@ -70,16 +81,20 @@ def main() -> int:
     workers = make_workers()
     try:
         for name in plans:
-            replay_arg = make_replay() if name in REPLAY_PLANS else None
-            algo = Algorithm.from_plan(
-                name, workers, replay_arg, fuse=False, own_workers=False
-            )
-            try:
-                dot = algo.to_dot()
-            finally:
-                algo.stop()
-                if replay_arg is not None:
-                    replay_arg.stop()
+            if name in EXTRA_FIGURES:
+                dot = EXTRA_FIGURES[name](workers).to_dot()
+                replay_arg = None
+            else:
+                replay_arg = make_replay() if name in REPLAY_PLANS else None
+                algo = Algorithm.from_plan(
+                    name, workers, replay_arg, fuse=False, own_workers=False
+                )
+                try:
+                    dot = algo.to_dot()
+                finally:
+                    algo.stop()
+                    if replay_arg is not None:
+                        replay_arg.stop()
             path = os.path.join(args.out, f"{name}.dot")
             with open(path, "w") as f:
                 f.write(dot + "\n")

@@ -2,10 +2,13 @@
 # Tier-1 verification: the fast test suite (excludes tests marked `slow`).
 #   scripts/tier1.sh            -> fast suite (includes chaos tests)
 #   scripts/tier1.sh --chaos    -> chaos stage only (fault-injection suite)
-#   scripts/tier1.sh --bench    -> benchmark regression gate (transport +
-#                                  sharded-learner suites, compared to
-#                                  BENCH_PR3.json; fails on >10% regression
-#                                  of any gated metric)
+#   scripts/tier1.sh --bench    -> benchmark regression gates:
+#                                  (1) transport + sharded-learner suites
+#                                      vs BENCH_PR3.json
+#                                  (2) vectorized-rollout suite vs
+#                                      BENCH_PR5.json
+#                                  each fails on >10% regression of any
+#                                  gated metric
 #   scripts/tier1.sh -m ""      -> full suite, slow tests included
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,7 +19,9 @@ if [[ "${1:-}" == "--chaos" ]]; then
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift
-  exec python -m benchmarks.run --fast --suites transport,learner \
+  python -m benchmarks.run --fast --suites transport,learner \
     --json BENCH_PR3.current.json --gate BENCH_PR3.json "$@"
+  exec python -m benchmarks.run --fast --suites rollout \
+    --json BENCH_PR5.current.json --gate BENCH_PR5.json "$@"
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

@@ -58,7 +58,11 @@ _logger = logging.getLogger(__name__)
 def _log_if_failed(actor_name: str, method: str):
     def _cb(fut: Future) -> None:
         exc = fut.exception()
-        if exc is not None and not isinstance(exc, StopIteration):
+        # StopIteration = stream exhaustion; AttributeError = protocol probe
+        # against an optional method (configure_vectorization, get_state,
+        # episode_stats on legacy workers).  Both are expected control flow,
+        # not worker faults — same exemption the supervision path applies.
+        if exc is not None and not isinstance(exc, (StopIteration, AttributeError)):
             _logger.error("actor %s.%s failed: %r", actor_name, method, exc)
 
     return _cb
@@ -162,7 +166,14 @@ class VirtualActor:
     def restart(self, timeout: float = 10.0) -> None:
         """Force-rebuild the target from its factory and mark the actor
         alive again (resets the supervisor's restart budget).  Runs on the
-        mailbox thread so it serializes with in-flight calls."""
+        mailbox thread so it serializes with in-flight calls.
+
+        Concurrent restarts *coalesce*: a queued restart that finds the
+        actor already healed (another caller's restart won the race) is a
+        no-op.  Without this, two clients of a shared actor — e.g. rollout
+        shards recovering one InferenceActor — would rebuild it twice, the
+        second rebuild silently discarding whatever state (re-synced
+        weights) the first recovery installed between the two."""
         if not self._alive:
             raise RuntimeError(f"actor {self.name} is stopped")
         if self._factory is None:
@@ -224,6 +235,9 @@ class VirtualActor:
                 fut.set_result(result)
 
     def _manual_restart(self, fut: Future) -> None:
+        if not self._dead and self._cell.alive:
+            fut.set_result(None)  # coalesced: already healed by another caller
+            return
         try:
             self._cell.restart()
         except BaseException as exc:

@@ -33,6 +33,7 @@ from repro.rl.sample_batch import MultiAgentBatch, SampleBatch
 
 __all__ = [
     "ParallelRollouts",
+    "configure_vectorized_rollouts",
     "ComputeGradients",
     "ApplyGradients",
     "AverageGradients",
@@ -53,12 +54,76 @@ __all__ = [
 # --------------------------------------------------------------------------
 # Creation
 # --------------------------------------------------------------------------
+def configure_vectorized_rollouts(
+    workers: WorkerSet,
+    vector: Optional[int] = None,
+    inference: Optional[str] = None,
+    inference_clients: Optional[Sequence[Any]] = None,
+) -> List[Dict[str, Any]]:
+    """Broadcast vectorization config onto the rollout workers.
+
+    The graph carries ``vector=``/``inference=`` declaratively (FlowSpec
+    annotations on the rollouts node); this is the lowering step — workers
+    exposing ``configure_vectorization`` (``VectorizedRolloutWorker``)
+    rebuild their ``VectorEnv`` to ``vector`` lanes and adopt the inference
+    mode; anything else (plain ``RolloutWorker``, stubs) is skipped with a
+    one-time warning, mirroring the learner-annotation fallback.
+
+    ``inference_clients``: one ``InferenceClient`` per shard (round-robin if
+    fewer).  Clients hold live actor handles and do not pickle, so for
+    process-backed workers the client is withheld and the worker keeps
+    local inference — vectorization still applies.
+    """
+    if vector is None and inference is None:
+        return []
+    import logging
+
+    clients = list(inference_clients or [])
+    acks: List[Dict[str, Any]] = []
+    skipped: List[str] = []
+    fell_back: List[str] = []
+    for idx, actor in enumerate(workers.remote_workers()):
+        client = clients[idx % len(clients)] if clients else None
+        if client is not None and actor.backend_name != "thread":
+            # Actor handles don't cross the process RPC boundary.
+            client = None
+            fell_back.append(actor.name)
+        try:
+            acks.append(
+                actor.sync(
+                    "configure_vectorization",
+                    vector=vector,
+                    inference=inference if client is not None or inference != "server" else "local",
+                    client=client,
+                )
+            )
+        except AttributeError:
+            skipped.append(actor.name)
+    log = logging.getLogger(__name__)
+    if skipped:
+        log.warning(
+            "vector=%s/inference=%s requested but workers %s do not support "
+            "configure_vectorization (expected VectorizedRolloutWorker); they "
+            "keep their existing rollout path", vector, inference, skipped,
+        )
+    if fell_back:
+        log.warning(
+            "inference='server' needs thread-backend rollout workers (actor "
+            "handles do not pickle); workers %s fall back to local inference",
+            fell_back,
+        )
+    return acks
+
+
 def ParallelRollouts(
     workers: WorkerSet,
     mode: str = "bulk_sync",
     num_async: int = 1,
     credits: Optional[int] = None,
     metrics_key: Optional[str] = None,
+    vector: Optional[int] = None,
+    inference: Optional[str] = None,
+    inference_clients: Optional[Sequence[Any]] = None,
 ) -> Any:
     """Stream of experience batches from the rollout workers (paper Fig 5).
 
@@ -69,12 +134,19 @@ def ParallelRollouts(
                         IMPALA style, pipeline depth ``num_async``; the
                         total in-flight window is capped at ``credits``
                         when given — credit-based backpressure)
+
+    ``vector=``/``inference=`` configure the vectorized rollout engine on
+    the workers before the stream starts (see
+    ``configure_vectorized_rollouts``): ``vector=N`` resizes each worker's
+    ``VectorEnv`` to N lanes; ``inference='server'`` routes acting through
+    the given ``inference_clients`` (decoupled batched inference).
     """
     if credits is not None and mode != "async":
         raise ValueError(
             f"credits= is an async-gather window; rollout mode {mode!r} has no "
             "in-flight pipeline to bound (use mode='async')"
         )
+    configure_vectorized_rollouts(workers, vector, inference, inference_clients)
     par = ParallelIterator.from_actors(
         workers.remote_workers(), lambda w: w.sample(), name="ParallelRollouts"
     )
@@ -143,8 +215,17 @@ class ComputeGradients:
         )
 
 
-def par_compute_gradients(workers: WorkerSet) -> ParallelIterator:
-    """ParIter[(grads, info)] — sample + grad computed on each worker."""
+def par_compute_gradients(
+    workers: WorkerSet,
+    vector: Optional[int] = None,
+    inference: Optional[str] = None,
+    inference_clients: Optional[Sequence[Any]] = None,
+) -> ParallelIterator:
+    """ParIter[(grads, info)] — sample + grad computed on each worker.
+
+    ``vector=``/``inference=`` configure the vectorized rollout engine on
+    the workers first (A2C/A3C share the knob with ``ParallelRollouts``)."""
+    configure_vectorized_rollouts(workers, vector, inference, inference_clients)
 
     def _sample_and_grad(w: Any) -> Tuple[Any, Dict[str, Any]]:
         batch = w.sample()

@@ -50,6 +50,9 @@ class WorkerSet:
         self._factory = worker_factory
         self._actor_kwargs = dict(actor_kwargs or {})
         self._next_index = len(remote_workers) + 1
+        # Extra consumers of weight broadcasts beyond the rollout actors —
+        # e.g. decoupled InferenceActors serving this set's policy.
+        self._weight_sinks: List[Callable[[Any], None]] = []
 
     @classmethod
     def create(
@@ -153,6 +156,27 @@ class WorkerSet:
                 if policy == FailurePolicy.RAISE and getattr(actor, "alive", True):
                     raise
                 logger.warning("sync_weights: worker %s failed: %r", actor.name, exc)
+        for sink in self._weight_sinks:
+            try:
+                sink(weights)
+            except Exception as exc:
+                # Sinks heal themselves (InferenceClient.recover); a dead
+                # server must not poison a rollout-worker broadcast.
+                logger.warning("sync_weights: weight sink failed: %r", exc)
+
+    def add_weight_sink(self, sink: Callable[[Any], None]) -> None:
+        """Register an extra weight-broadcast consumer (e.g. the decoupled
+        inference server's ``InferenceClient.sync_weights``)."""
+        self._weight_sinks.append(sink)
+
+    def remove_weight_sink(self, sink: Callable[[Any], None]) -> None:
+        """Unregister a weight sink (no-op if absent).  Flows that register
+        a sink for a resource they own must remove it on stop — a shared
+        WorkerSet outlives any one compiled flow."""
+        try:
+            self._weight_sinks.remove(sink)
+        except ValueError:
+            pass
 
     # ------------------------------------------------------------- elastic
     def add_workers(self, num_workers: int) -> List[VirtualActor]:

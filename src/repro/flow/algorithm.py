@@ -180,6 +180,23 @@ class Algorithm:
                 state["replay"] = [a.sync("get_state") for a in self._replay]
             except AttributeError:
                 pass  # replay target predates get_state(): counters-only state
+        # Rollout-side state (mid-rollout resume): env auto-reset state and
+        # per-lane RNG keys for the local worker and every remote worker
+        # exposing the get_state protocol (VectorizedRolloutWorker et al).
+        lw = self._workers.local_worker()
+        if hasattr(lw, "get_state"):
+            state["local_worker"] = lw.get_state()
+        if hasattr(self._workers, "remote_workers"):
+            remote_states: Dict[str, Any] = {}
+            for actor in self._workers.remote_workers():
+                if not getattr(actor, "alive", True):
+                    continue
+                try:
+                    remote_states[actor.name] = actor.sync("get_state")
+                except AttributeError:
+                    pass  # worker predates get_state(): weights-only worker
+            if remote_states:
+                state["remote_workers"] = remote_states
         save_pytree(path, weights)
         with open(path + ".state.pkl", "wb") as f:
             pickle.dump(state, f)
@@ -214,6 +231,20 @@ class Algorithm:
                 )
             for actor, rstate in zip(self._replay, replay_states):
                 actor.sync("set_state", rstate)
+        if "local_worker" in state and hasattr(lw, "set_state"):
+            lw.set_state(state["local_worker"])
+        remote_states = state.get("remote_workers")
+        if remote_states and hasattr(self._workers, "remote_workers"):
+            # Matched by actor name (rollout-<index>), so restore works into
+            # a fresh WorkerSet of the same topology; extra/missing workers
+            # are left as-is (weights were already broadcast above).
+            for actor in self._workers.remote_workers():
+                rstate = remote_states.get(actor.name)
+                if rstate is not None:
+                    try:
+                        actor.sync("set_state", rstate)
+                    except AttributeError:
+                        pass
 
     # ------------------------------------------------------------ shutdown
     def stop(self) -> None:

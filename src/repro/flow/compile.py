@@ -191,6 +191,8 @@ class CompiledFlow:
         self.runtime = FlowRuntime(self.spec)
         self._cache: Dict[str, Any] = {}
         self._annotated_policies: Dict[int, str] = {}
+        self._inference_actors: List[Any] = []
+        self._weight_sink_regs: List[Any] = []  # (workers, sink) to undo on stop
         inner = self._lower_ref(self.spec.output)
         self._out = self._deferred_start_wrapper(inner)
 
@@ -210,6 +212,20 @@ class CompiledFlow:
         iterators so stream teardown (joining Concurrently/union driver
         threads) happens now rather than at GC time (idempotent)."""
         self.runtime.stop()
+        # Unhook this flow's weight sinks BEFORE stopping the actors they
+        # feed: a shared WorkerSet outlives the flow, and a sink bound to a
+        # stopped InferenceActor would fail on every later broadcast.
+        for workers, sink in self._weight_sink_regs:
+            try:
+                workers.remove_weight_sink(sink)
+            except Exception:  # pragma: no cover - teardown is best-effort
+                pass
+        self._weight_sink_regs = []
+        for a in self._inference_actors:
+            try:
+                a.stop()
+            except Exception:  # pragma: no cover - teardown is best-effort
+                pass
         try:
             self._out.close()
         except Exception:  # pragma: no cover - teardown is best-effort
@@ -305,6 +321,56 @@ class CompiledFlow:
                 "operator)", self.spec.name, node.id,
             )
 
+    def _lower_inference(self, node: Node, workers: Any) -> Optional[List[Any]]:
+        """Build the decoupled-inference serving side for a source node.
+
+        ``inference='server'`` lowers to one ``InferenceActor`` (a
+        ``VirtualActor`` with a restart budget, so the chaos/FailurePolicy
+        path can heal it) shared by the node's rollout shards, plus one
+        credit-gated ``InferenceClient`` per shard.  The actor serves the
+        local worker's policy and is registered as a weight sink on the
+        WorkerSet, so every ``sync_weights`` broadcast also refreshes the
+        server.  Owned by this CompiledFlow: ``stop()`` stops it.
+        """
+        if node.annotations.get("inference") != "server":
+            return None
+        from repro.core.actor import VirtualActor
+        from repro.rl.inference import CreditGate, InferenceActor, InferenceClient
+
+        lw = workers.local_worker()
+        policy = getattr(lw, "policy", None)
+        if policy is None:
+            logger.warning(
+                "flow %s: node %s requests inference='server' but the local "
+                "worker has no .policy to serve; falling back to local "
+                "inference", self.spec.name, node.id,
+            )
+            return None
+        num_shards = max(1, len(workers.remote_workers()))
+        credits = node.annotations.get("inference_credits") or 2 * num_shards
+        actor = VirtualActor(
+            factory=lambda: InferenceActor(
+                lambda: policy,
+                algo=getattr(lw, "algo", "pg"),
+                epsilon=getattr(lw, "epsilon", 0.0),
+            ),
+            name=f"inference-{node.id}",
+            max_restarts=1,
+            backoff_base=0.0,
+        )
+        gate = CreditGate(int(credits))
+        provider = lw.get_weights
+        clients = [
+            InferenceClient(actor, credits=gate, weights_provider=provider)
+            for _ in range(num_shards)
+        ]
+        clients[0].sync_weights()  # serve canonical weights from the start
+        if hasattr(workers, "add_weight_sink"):
+            workers.add_weight_sink(clients[0].sync_weights)
+            self._weight_sink_regs.append((workers, clients[0].sync_weights))
+        self._inference_actors.append(actor)
+        return clients
+
     def _lower_node(self, node: Node) -> Any:
         k, p = node.kind, node.params
         if k == "rollouts":
@@ -315,6 +381,9 @@ class CompiledFlow:
                 num_async=p["num_async"],
                 credits=node.annotations.get("credits", p.get("credits")),
                 metrics_key=node.id,
+                vector=node.annotations.get("vector"),
+                inference=node.annotations.get("inference"),
+                inference_clients=self._lower_inference(node, p["workers"]),
             )
         if k == "replay":
             self._lower_annotations(node, p["actors"])
@@ -326,7 +395,12 @@ class CompiledFlow:
             )
         if k == "par_gradients":
             self._lower_annotations(node, p["workers"].remote_workers())
-            return par_compute_gradients(p["workers"])
+            return par_compute_gradients(
+                p["workers"],
+                vector=node.annotations.get("vector"),
+                inference=node.annotations.get("inference"),
+                inference_clients=self._lower_inference(node, p["workers"]),
+            )
         if k == "par_source":
             self._lower_annotations(node, p["pool"])
             return ParallelIterator.from_actors(p["pool"], p["pull_fn"], name=node.label)

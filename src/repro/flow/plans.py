@@ -59,10 +59,21 @@ def build_a3c(workers: WorkerSet, num_async: int = 1) -> FlowSpec:
 
 
 # --------------------------------------------------------------------- A2C
-def build_a2c(workers: WorkerSet) -> FlowSpec:
-    """Synchronous A3C: barrier-gather gradients, average, apply, broadcast."""
+def build_a2c(
+    workers: WorkerSet,
+    vector: int = 0,
+    inference: str = None,
+) -> FlowSpec:
+    """Synchronous A3C: barrier-gather gradients, average, apply, broadcast.
+
+    ``vector=N`` runs each gradient worker's sampling through the
+    vectorized rollout engine (N lanes, one batched dispatch per step);
+    ``inference='server'`` decouples acting onto a shared InferenceActor.
+    """
     spec = FlowSpec("a2c")
-    grads = spec.par_gradients(workers).batch_across_shards()
+    grads = spec.par_gradients(
+        workers, vector=vector or None, inference=inference
+    ).batch_across_shards()
     apply_op = grads.for_each(AverageGradients()).for_each(
         ApplyGradients(workers, update_all=True)
     )
@@ -78,16 +89,25 @@ def build_ppo(
     sgd_minibatch_size: int = 128,
     num_learners: int = 0,
     microbatch: int = 0,
+    vector: int = 0,
+    inference: str = None,
 ) -> FlowSpec:
     """Synchronous sample -> concat -> standardize -> multi-epoch SGD.
 
     ``num_learners``/``microbatch`` annotate the TrainOneStep node
     (``stream.learners(n).microbatch(k)``); ``compile()`` lowers the
     annotations onto a sharded SPMD learner group (ISSUE 4).
+
+    ``vector``/``inference`` annotate the rollouts node with the vectorized
+    rollout engine (ISSUE 5): N synchronized env lanes per worker with one
+    batched policy dispatch per step, optionally served by a decoupled
+    InferenceActor (``inference='server'``).
     """
     spec = FlowSpec("ppo")
     train_op = (
-        spec.rollouts(workers, mode="bulk_sync")
+        spec.rollouts(
+            workers, mode="bulk_sync", vector=vector or None, inference=inference
+        )
         .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")
         .for_each(StandardizeFields(["advantages"]))
         .for_each(
@@ -221,6 +241,8 @@ def build_impala(
     rollout_credits: int = None,
     num_learners: int = 0,
     microbatch: int = 0,
+    vector: int = 0,
+    inference: str = None,
     name: str = "impala",
 ) -> FlowSpec:
     """Async rollouts -> learner thread -> periodic weight broadcast.
@@ -231,6 +253,9 @@ def build_impala(
     ``num_learners``/``microbatch`` shard the learner thread's update onto
     an SPMD learner group (ISSUE 4) — the async dataflow is unchanged;
     only the learner fragment's execution mapping moves.
+    ``vector``/``inference`` configure the vectorized rollout engine on the
+    sampling side (ISSUE 5) — the many-shard async pipeline with N env
+    lanes per shard is the high-env-count IMPALA scenario.
     """
     spec = FlowSpec(name)
     learner = spec.learner_thread(
@@ -238,7 +263,10 @@ def build_impala(
     )
 
     enqueue_op = (
-        spec.rollouts(workers, mode="async", num_async=num_async, credits=rollout_credits)
+        spec.rollouts(
+            workers, mode="async", num_async=num_async, credits=rollout_credits,
+            vector=vector or None, inference=inference,
+        )
         .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")
         .enqueue(learner, block=True, policy=enqueue_policy)
     )

@@ -132,7 +132,10 @@ class Stream:
         overrides an enqueue node's queue policy; ``credits`` (int) caps a
         gather_async node's in-flight window; ``num_learners``/``microbatch``
         (ints, see ``learners()``/``microbatch()``) lower a train stage onto
-        a sharded SPMD learner group.  Other keys (e.g.
+        a sharded SPMD learner group; ``vector``/``inference``/
+        ``inference_credits`` (rollouts/par_gradients nodes) configure the
+        vectorized rollout engine and decoupled batched inference.  Other
+        keys (e.g.
         ``resources={"num_cpus": 1}``) are carried as placement metadata for
         schedulers/introspection.
         """
@@ -338,6 +341,31 @@ class FlowSpec:
             ann["resources"] = dict(resources)
         return ann
 
+    @staticmethod
+    def _vector_annotations(
+        vector: Optional[int],
+        inference: Optional[str],
+        inference_credits: Optional[int],
+    ) -> Dict[str, Any]:
+        ann: Dict[str, Any] = {}
+        if vector is not None:
+            if int(vector) < 1:
+                raise ValueError(f"vector= needs >= 1 lanes (got {vector})")
+            ann["vector"] = int(vector)
+        if inference is not None:
+            if inference not in ("local", "server"):
+                raise ValueError(
+                    f"unknown inference mode {inference!r} (want 'local'|'server')"
+                )
+            ann["inference"] = inference
+        if inference_credits is not None:
+            if int(inference_credits) < 1:
+                raise ValueError(
+                    f"inference_credits= must be >= 1 (got {inference_credits})"
+                )
+            ann["inference_credits"] = int(inference_credits)
+        return ann
+
     def rollouts(
         self,
         workers: Any,
@@ -346,6 +374,9 @@ class FlowSpec:
         credits: Optional[int] = None,
         failure_policy: Optional[str] = None,
         resources: Optional[Dict[str, Any]] = None,
+        vector: Optional[int] = None,
+        inference: Optional[str] = None,
+        inference_credits: Optional[int] = None,
     ) -> Stream:
         """Experience stream from the rollout workers (paper Fig 5).
 
@@ -353,6 +384,16 @@ class FlowSpec:
         the rollout actors so gather loops restart/drop/raise per-worker.
         ``credits`` (async mode) caps the total in-flight sample window —
         credit-based backpressure at the source.
+
+        Vectorized rollout engine (carried as node annotations, lowered by
+        ``compile()``): ``vector=N`` resizes each worker's ``VectorEnv`` to
+        N synchronized lanes with one batched policy dispatch per step;
+        ``inference='server'`` additionally decouples acting onto a shared
+        ``InferenceActor`` (batched requests over the executor transport,
+        ``inference_credits`` bounding requests in flight across shards —
+        default ``2 × num_workers``).  Server inference requires
+        thread-backend rollout workers; others fall back to local with a
+        warning.
         """
         if mode not in ("raw", "bulk_sync", "async"):
             raise ValueError(f"unknown rollout mode {mode!r}")
@@ -361,11 +402,15 @@ class FlowSpec:
                 f"credits= requires mode='async' (got mode={mode!r}); other "
                 "rollout modes have no in-flight pipeline to bound"
             )
+        annotations = self._source_annotations(failure_policy, resources)
+        annotations.update(
+            self._vector_annotations(vector, inference, inference_credits)
+        )
         node = self._add(
             "rollouts", (),
             {"workers": workers, "mode": mode, "num_async": num_async, "credits": credits},
             f"ParallelRollouts({mode})", parallel=(mode == "raw"),
-            annotations=self._source_annotations(failure_policy, resources),
+            annotations=annotations,
         )
         return Stream(self, node.id, parallel=(mode == "raw"))
 
@@ -394,11 +439,22 @@ class FlowSpec:
         workers: Any,
         failure_policy: Optional[str] = None,
         resources: Optional[Dict[str, Any]] = None,
+        vector: Optional[int] = None,
+        inference: Optional[str] = None,
+        inference_credits: Optional[int] = None,
     ) -> Stream:
-        """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C)."""
+        """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C).
+
+        ``vector=``/``inference=`` annotate the vectorized rollout engine
+        exactly as on ``rollouts()`` (the gradient workers sample through
+        the same engine)."""
+        annotations = self._source_annotations(failure_policy, resources)
+        annotations.update(
+            self._vector_annotations(vector, inference, inference_credits)
+        )
         node = self._add(
             "par_gradients", (), {"workers": workers}, "ComputeGradients", True,
-            annotations=self._source_annotations(failure_policy, resources),
+            annotations=annotations,
         )
         return Stream(self, node.id, parallel=True)
 

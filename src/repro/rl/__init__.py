@@ -1,5 +1,18 @@
 from repro.rl.advantages import discounted_returns, gae, vtrace
-from repro.rl.env import CartPole, MultiAgentCartPole, Pendulum
+from repro.rl.env import (
+    CartPole,
+    MultiAgentCartPole,
+    Pendulum,
+    StubEnv,
+    VectorEnv,
+    VectorEnvState,
+)
+from repro.rl.inference import (
+    CreditGate,
+    InferenceActor,
+    InferenceClient,
+    InferenceUnavailable,
+)
 from repro.rl.policy import (
     ActorCriticPolicy,
     DQNPolicy,
@@ -9,7 +22,12 @@ from repro.rl.policy import (
 from repro.rl.learner_group import ShardedLearnerGroup
 from repro.rl.model_based import ModelBasedWorker
 from repro.rl.replay import ReplayBuffer
-from repro.rl.rollout_worker import MultiAgentRolloutWorker, RolloutWorker
+from repro.rl.rollout_worker import (
+    MultiAgentRolloutWorker,
+    PerEnvRolloutWorker,
+    RolloutWorker,
+    VectorizedRolloutWorker,
+)
 from repro.rl.sample_batch import MultiAgentBatch, SampleBatch, concat_batches
 from repro.rl.transformer_policy import TransformerPolicy
 

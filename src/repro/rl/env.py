@@ -20,11 +20,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CartPole", "Pendulum", "Env", "MultiAgentCartPole"]
+__all__ = [
+    "CartPole",
+    "Pendulum",
+    "StubEnv",
+    "Env",
+    "MultiAgentCartPole",
+    "VectorEnv",
+    "VectorEnvState",
+    "VectorStep",
+]
 
 
 class Env:
-    """Protocol: subclasses define obs_dim / num_actions / reset / step."""
+    """Protocol: subclasses define obs_dim / num_actions / reset / step.
+
+    ``step_raw`` is the auto-reset-free half of ``step``: it returns the
+    *true* successor state/obs plus a terminated/truncated split, and leaves
+    episode-boundary handling to the caller (``VectorEnv`` owns auto-reset
+    for the vectorized rollout engine).  ``step`` keeps the legacy
+    auto-resetting semantics and is implemented on top of ``step_raw``.
+    """
 
     obs_dim: int
     num_actions: int  # -1 for continuous
@@ -33,8 +49,24 @@ class Env:
     def reset(self, key: jax.Array) -> Tuple[Any, jax.Array]:
         raise NotImplementedError
 
-    def step(self, state: Any, action: jax.Array, key: jax.Array):
+    def step_raw(self, state: Any, action: jax.Array, key: jax.Array):
+        """(state, action, key) -> (state', obs', reward, terminated, truncated).
+
+        No auto-reset: ``state'``/``obs'`` are the true successors even on
+        episode end.  ``terminated`` is environment death (value bootstrap
+        must be zero); ``truncated`` is an artificial horizon (bootstrap from
+        the successor value is correct).
+        """
         raise NotImplementedError
+
+    def step(self, state: Any, action: jax.Array, key: jax.Array):
+        """Legacy auto-resetting step: (state', obs', reward, done)."""
+        new, obs, reward, terminated, truncated = self.step_raw(state, action, key)
+        done = terminated | truncated
+        reset_st, reset_obs = self.reset(key)
+        out = jax.tree_util.tree_map(lambda a, b: jnp.where(done, a, b), reset_st, new)
+        obs = jnp.where(done, reset_obs, obs)
+        return out, obs, reward, done
 
 
 class CartPoleState(NamedTuple):
@@ -72,7 +104,7 @@ class CartPole(Env):
     def _obs(st: CartPoleState) -> jax.Array:
         return jnp.stack([st.x, st.x_dot, st.theta, st.theta_dot])
 
-    def step(self, st: CartPoleState, action: jax.Array, key: jax.Array):
+    def step_raw(self, st: CartPoleState, action: jax.Array, key: jax.Array):
         force = jnp.where(action == 1, self.force_mag, -self.force_mag)
         costheta, sintheta = jnp.cos(st.theta), jnp.sin(st.theta)
         temp = (
@@ -89,18 +121,12 @@ class CartPole(Env):
             st.theta_dot + self.tau * thetaacc,
             st.t + 1,
         )
-        done = (
-            (jnp.abs(new.x) > self.x_threshold)
-            | (jnp.abs(new.theta) > self.theta_threshold)
-            | (new.t >= self.max_steps)
+        terminated = (jnp.abs(new.x) > self.x_threshold) | (
+            jnp.abs(new.theta) > self.theta_threshold
         )
+        truncated = (new.t >= self.max_steps) & ~terminated
         reward = jnp.ones(())
-        # Auto-reset on termination.
-        reset_st, _ = self.reset(key)
-        out = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(done, a, b), reset_st, new
-        )
-        return out, self._obs(out), reward, done
+        return new, self._obs(new), reward, terminated, truncated
 
 
 class PendulumState(NamedTuple):
@@ -134,7 +160,7 @@ class Pendulum(Env):
     def _obs(st: PendulumState) -> jax.Array:
         return jnp.stack([jnp.cos(st.theta), jnp.sin(st.theta), st.theta_dot])
 
-    def step(self, st: PendulumState, action: jax.Array, key: jax.Array):
+    def step_raw(self, st: PendulumState, action: jax.Array, key: jax.Array):
         u = jnp.clip(action.reshape(()) * self.max_torque, -self.max_torque, self.max_torque)
         th = ((st.theta + np.pi) % (2 * np.pi)) - np.pi
         cost = th**2 + 0.1 * st.theta_dot**2 + 0.001 * u**2
@@ -144,10 +170,199 @@ class Pendulum(Env):
         ) * self.dt
         new_dot = jnp.clip(new_dot, -self.max_speed, self.max_speed)
         new = PendulumState(st.theta + new_dot * self.dt, new_dot, st.t + 1)
-        done = new.t >= self.max_steps
-        reset_st, _ = self.reset(key)
-        out = jax.tree_util.tree_map(lambda a, b: jnp.where(done, a, b), reset_st, new)
-        return out, self._obs(out), -cost, done
+        truncated = new.t >= self.max_steps  # pendulum never terminates
+        return new, self._obs(new), -cost, jnp.zeros((), bool), truncated
+
+
+class StubEnvState(NamedTuple):
+    x: jax.Array  # [obs_dim]
+    t: jax.Array
+
+
+class StubEnv(Env):
+    """Deterministic stub environment for tests and rollout benchmarks.
+
+    All dynamics are *elementwise* (no reductions, no matmuls), so a vmapped
+    lane is bit-identical to the same lane stepped alone — the property the
+    vectorized-vs-per-env determinism suite relies on.  Episodes terminate
+    when ``x[0]`` drifts out of bounds and truncate at ``max_steps``; the
+    terminated/truncated split makes it the reference env for bootstrap
+    handling.
+    """
+
+    obs_dim = 4
+    num_actions = 2
+
+    def __init__(self, max_steps: int = 16, drift: float = 0.3, threshold: float = 4.0):
+        self.max_steps = max_steps
+        self.drift = drift
+        self.threshold = threshold
+
+    def reset(self, key: jax.Array) -> Tuple[StubEnvState, jax.Array]:
+        x = jax.random.uniform(key, (self.obs_dim,), minval=-0.5, maxval=0.5)
+        st = StubEnvState(x, jnp.zeros((), jnp.int32))
+        return st, st.x
+
+    def step_raw(self, st: StubEnvState, action: jax.Array, key: jax.Array):
+        direction = jnp.where(action == 1, 1.0, -1.0)
+        x = st.x * 0.95 + direction * self.drift
+        new = StubEnvState(x, st.t + 1)
+        terminated = jnp.abs(x[0]) > self.threshold
+        truncated = (new.t >= self.max_steps) & ~terminated
+        reward = 1.0 + 0.1 * jnp.tanh(x[0])
+        return new, new.x, reward, terminated, truncated
+
+
+# --------------------------------------------------------------- VectorEnv
+class VectorEnvState(NamedTuple):
+    """Everything the vectorized rollout engine carries between steps.
+
+    ``rng`` holds one PRNG key per lane (the per-lane split the determinism
+    suite pins down); ``eps_count`` counts completed episodes per lane so
+    fragment assembly can stamp globally unique episode ids; all fields are
+    a pure pytree — checkpointable via ``VectorEnv.state_to_numpy``.
+    """
+
+    env_state: Any        # batched env pytree, leading dim N
+    obs: jax.Array        # [N, obs_dim] current (post-reset) observations
+    rng: jax.Array        # [N, 2] per-lane PRNG keys
+    ep_return: jax.Array  # [N] running episode returns
+    ep_len: jax.Array     # [N] running episode lengths
+    eps_count: jax.Array  # [N] int32 completed-episode counter per lane
+
+
+class VectorStep(NamedTuple):
+    """Per-step outputs of ``VectorEnv.step`` (all leading dim N)."""
+
+    obs: jax.Array         # post-auto-reset obs (what the policy sees next)
+    next_obs: jax.Array    # TRUE successor obs (pre-reset; bootstrap source)
+    reward: jax.Array
+    terminated: jax.Array  # bool: env death (zero bootstrap)
+    truncated: jax.Array   # bool: horizon cut (bootstrap from next_obs value)
+    done: jax.Array        # terminated | truncated (auto-reset happened)
+    completed_return: jax.Array  # episode return where done, else 0
+    eps_count: jax.Array   # int32 episode index each lane was in THIS step
+
+
+class VectorEnv:
+    """N synchronized instances of a base env with auto-reset semantics.
+
+    The paper's rollout fragment (§4) assumed one env per policy call; the
+    vectorized engine steps all N lanes per call with a single batched
+    policy dispatch (SRL / HybridFlow's decoupling move).  Everything is
+    pure-JAX and vmapped, so a worker's whole T×N rollout still compiles to
+    one ``lax.scan`` program.
+
+    Per-lane RNG: ``reset(key)`` folds the lane index into the master key,
+    and every step splits each lane's key chain independently — lane ``i``
+    of a ``VectorEnv`` consumes exactly the key stream a standalone env
+    seeded with ``fold_in(key, i)`` would, which is what makes vectorized
+    rollouts bit-reproduce per-env rollouts.
+
+    Auto-reset is owned here (via ``env.step_raw``), so both the true
+    successor obs (for bootstrap) and the post-reset obs (for the next
+    action) are exposed.  Envs lacking ``step_raw`` fall back to the legacy
+    auto-resetting ``step`` with ``truncated == False`` and ``next_obs``
+    equal to the post-reset obs.
+    """
+
+    def __init__(self, env: Env, num_envs: int):
+        if num_envs < 1:
+            raise ValueError(f"VectorEnv needs num_envs >= 1 (got {num_envs})")
+        self.env = env
+        self.num_envs = num_envs
+        self.obs_dim = env.obs_dim
+        self.num_actions = env.num_actions
+        self.action_dim = getattr(env, "action_dim", 0)
+        self._has_raw = hasattr(type(env), "step_raw") and (
+            type(env).step_raw is not Env.step_raw
+        )
+
+    # ---------------------------------------------------------------- reset
+    def reset(self, key: jax.Array) -> VectorEnvState:
+        lane_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(self.num_envs)
+        )
+        next_rng, reset_keys = self._split_lanes(lane_keys)
+        env_state, obs = jax.vmap(self.env.reset)(reset_keys)
+        n = self.num_envs
+        return VectorEnvState(
+            env_state=env_state,
+            obs=obs,
+            rng=next_rng,
+            ep_return=jnp.zeros((n,), jnp.float32),
+            ep_len=jnp.zeros((n,), jnp.int32),
+            eps_count=jnp.zeros((n,), jnp.int32),
+        )
+
+    @staticmethod
+    def _split_lanes(rng: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """[N,2] lane keys -> (next chain keys, per-lane subkeys)."""
+        both = jax.vmap(lambda k: jax.random.split(k, 2))(rng)
+        return both[:, 0], both[:, 1]
+
+    # ----------------------------------------------------------------- step
+    def step(self, state: VectorEnvState, actions: jax.Array) -> Tuple[VectorEnvState, VectorStep]:
+        rng, k_step = self._split_lanes(state.rng)
+        rng, k_reset = self._split_lanes(rng)
+        if self._has_raw:
+            new_env, next_obs, reward, terminated, truncated = jax.vmap(
+                self.env.step_raw
+            )(state.env_state, actions, k_step)
+            done = terminated | truncated
+            reset_env, reset_obs = jax.vmap(self.env.reset)(k_reset)
+            env_state = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(
+                    done.reshape((-1,) + (1,) * (a.ndim - 1)) if a.ndim > 1 else done,
+                    a, b,
+                ),
+                reset_env, new_env,
+            )
+            obs = jnp.where(done[:, None], reset_obs, next_obs)
+        else:
+            env_state, obs, reward, done = jax.vmap(self.env.step)(
+                state.env_state, actions, k_step
+            )
+            next_obs = obs  # legacy envs reset internally; successor is lost
+            terminated = done
+            truncated = jnp.zeros_like(done)
+        new_ret = state.ep_return + reward
+        completed = jnp.where(done, new_ret, 0.0)
+        out = VectorStep(
+            obs=obs,
+            next_obs=next_obs,
+            reward=reward,
+            terminated=terminated,
+            truncated=truncated,
+            done=done,
+            completed_return=completed,
+            eps_count=state.eps_count,
+        )
+        new_state = VectorEnvState(
+            env_state=env_state,
+            obs=obs,
+            rng=rng,
+            ep_return=jnp.where(done, 0.0, new_ret),
+            ep_len=jnp.where(done, 0, state.ep_len + 1),
+            eps_count=state.eps_count + done.astype(jnp.int32),
+        )
+        return new_state, out
+
+    # ----------------------------------------------------------- durability
+    @staticmethod
+    def state_to_numpy(state: VectorEnvState) -> Any:
+        """Device pytree -> picklable numpy pytree (checkpoint payload)."""
+        return jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+
+    @staticmethod
+    def state_from_numpy(state: Any) -> VectorEnvState:
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        return jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(l) for l in leaves]
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"VectorEnv({type(self.env).__name__}, num_envs={self.num_envs})"
 
 
 class MultiAgentCartPole:

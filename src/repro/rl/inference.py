@@ -1,0 +1,218 @@
+"""Decoupled batched inference for the vectorized rollout engine.
+
+SRL (Mei et al., 2023) and HybridFlow (Sheng et al., 2024) both separate
+environment simulation from policy inference: env loops stay cheap and
+numerous, while action computation is batched onto dedicated inference
+workers.  Here that split rides the existing executor runtime:
+
+  * ``InferenceActor`` — a plain worker *target* owning a policy + params
+    and serving ``compute_actions(obs, keys)`` for whole lane batches in
+    one jitted dispatch.  Wrap it in a ``VirtualActor`` (thread or process
+    backend) to serve multiple rollout shards; the actor mailbox serializes
+    requests, so each call is one batched policy dispatch.
+  * ``CreditGate`` — a counting semaphore shared by every client of one
+    actor: at most ``credits`` requests in flight across all shards
+    (the PR 3 credit-based backpressure idea applied to the request path).
+    Stall counts/time are recorded for introspection.
+  * ``InferenceClient`` — the rollout-worker-side handle.  On actor failure
+    it raises ``InferenceUnavailable`` (the worker drops its in-flight
+    fragment); ``recover()`` restarts the actor through the supervision
+    path and re-syncs weights from the canonical provider before the next
+    rollout begins.
+
+Process-backed *rollout* workers cannot hold a client (actor handles do not
+pickle across the RPC boundary), so server inference is lowered only onto
+thread-backend rollout workers — ``compile()`` falls back to local
+inference elsewhere and says so.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "InferenceActor",
+    "InferenceClient",
+    "InferenceUnavailable",
+    "CreditGate",
+]
+
+
+class InferenceUnavailable(RuntimeError):
+    """The inference server failed mid-request; the caller's in-flight
+    rollout fragment must be dropped and the client recovered."""
+
+
+class CreditGate:
+    """Counting semaphore bounding in-flight inference requests.
+
+    One gate is shared by every client of an inference actor, so the bound
+    is global across rollout shards.  ``stalls``/``stall_time_s`` mirror the
+    data plane's ``num_credit_stalls`` instrumentation.
+    """
+
+    def __init__(self, credits: int):
+        if credits < 1:
+            raise ValueError(f"credits must be >= 1 (got {credits})")
+        self.credits = credits
+        self._sem = threading.Semaphore(credits)
+        self._lock = threading.Lock()
+        self.stalls = 0
+        self.stall_time_s = 0.0
+
+    def acquire(self) -> None:
+        if self._sem.acquire(blocking=False):
+            return
+        t0 = time.perf_counter()
+        self._sem.acquire()
+        with self._lock:
+            self.stalls += 1
+            self.stall_time_s += time.perf_counter() - t0
+
+    def release(self) -> None:
+        self._sem.release()
+
+
+class InferenceActor:
+    """Worker target serving batched action requests for one policy.
+
+    Built from a policy *factory* so it is rebuildable by supervision (and
+    picklable for process backends when the factory is module-level).  The
+    jitted ``compute_actions`` path is exactly the vectorized worker's:
+    per-lane keys, single dispatch for all lanes.
+    """
+
+    def __init__(
+        self,
+        policy_factory: Callable[[], Any],
+        algo: str = "pg",
+        epsilon: float = 0.1,
+        seed: int = 0,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        self.policy = policy_factory()
+        self.algo = algo
+        self.epsilon = epsilon
+        self.params = self.policy.init_params(jax.random.PRNGKey(seed))
+        self.num_requests = 0
+        self.num_lane_steps = 0
+        self._jnp = jnp
+        self._jit = jax.jit(self._dispatch)
+
+    def _dispatch(self, params: Any, obs: Any, keys: Any):
+        if self.algo == "dqn":
+            return self.policy.compute_actions(
+                params, obs, keys, self._jnp.asarray(self.epsilon)
+            )
+        return self.policy.compute_actions(params, obs, keys)
+
+    def compute_actions(
+        self, obs: np.ndarray, keys: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """[N, obs_dim] obs + [N, 2] lane keys -> (actions, logp, values)."""
+        self.num_requests += 1
+        self.num_lane_steps += int(obs.shape[0])
+        action, logp, value, _ = self._jit(self.params, obs, keys)
+        return np.asarray(action), np.asarray(logp), np.asarray(value)
+
+    def compute_values(self, obs: np.ndarray) -> np.ndarray:
+        """Value-only dispatch (GAE bootstrap queries)."""
+        return np.asarray(self.policy.value(self.params, self._jnp.asarray(obs)))
+
+    # ------------------------------------------------------------ messaging
+    def set_weights(self, weights: Any) -> None:
+        self.params = weights
+
+    def get_weights(self) -> Any:
+        return self.params
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "num_requests": self.num_requests,
+            "num_lane_steps": self.num_lane_steps,
+        }
+
+
+class InferenceClient:
+    """Rollout-shard handle to a (possibly remote) ``InferenceActor``.
+
+    ``actor`` is either a ``VirtualActor`` wrapping an ``InferenceActor``
+    (``.call``/``.sync`` duck-typed) or a bare ``InferenceActor`` (direct
+    in-process calls — useful in tests).  ``credits`` bounds requests in
+    flight across every client sharing the gate.
+
+    Failure contract: any actor-side failure surfaces as
+    ``InferenceUnavailable``.  The *worker* decides what to drop (its
+    in-flight fragment); ``recover()`` then heals the server — restart via
+    the supervision path, plus a weight re-sync from ``weights_provider``
+    (the canonical policy owner, normally the plan's local worker) so the
+    restarted actor never serves stale or freshly-reinitialized weights.
+    """
+
+    def __init__(
+        self,
+        actor: Any,
+        credits: Optional[CreditGate] = None,
+        weights_provider: Optional[Callable[[], Any]] = None,
+    ):
+        self.actor = actor
+        self.credits = credits
+        self.weights_provider = weights_provider
+        self.num_failures = 0
+        self.num_recoveries = 0
+
+    def _invoke(self, method: str, *args: Any) -> Any:
+        actor = self.actor
+        if hasattr(actor, "call"):  # VirtualActor
+            try:
+                return actor.call(method, *args).result()
+            except Exception as exc:
+                self.num_failures += 1
+                raise InferenceUnavailable(
+                    f"inference actor {getattr(actor, 'name', actor)!r} failed "
+                    f"in {method}(): {exc!r}"
+                ) from exc
+        try:  # bare target (in-process)
+            return getattr(actor, method)(*args)
+        except Exception as exc:
+            self.num_failures += 1
+            raise InferenceUnavailable(f"inference target failed: {exc!r}") from exc
+
+    def compute_actions(
+        self, obs: np.ndarray, keys: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self.credits is not None:
+            self.credits.acquire()
+        try:
+            return self._invoke("compute_actions", obs, keys)
+        finally:
+            if self.credits is not None:
+                self.credits.release()
+
+    def compute_values(self, obs: np.ndarray) -> np.ndarray:
+        return self._invoke("compute_values", obs)
+
+    def sync_weights(self, weights: Any = None) -> None:
+        if weights is None and self.weights_provider is not None:
+            weights = self.weights_provider()
+        if weights is not None:
+            self._invoke("set_weights", weights)
+
+    def recover(self) -> None:
+        """Heal the server: restart a dead VirtualActor (supervision path),
+        then push canonical weights so the fresh target is in sync."""
+        actor = self.actor
+        if hasattr(actor, "restart") and not getattr(actor, "alive", True):
+            actor.restart()
+            self.num_recoveries += 1
+        self.sync_weights()
+
+    def stop(self) -> None:
+        if hasattr(self.actor, "stop"):
+            self.actor.stop()

@@ -193,7 +193,10 @@ class ShardedLearnerGroup:
             sharding = self._batch_sharding
         out = {}
         for name, col in batch.items():
-            if name == "batch_indices":
+            # Host-only metadata never reaches the mesh: batch_indices feed
+            # replay priority updates, eps_id is int64 fragment labeling
+            # (canonicalizing it to int32 would overflow the lane strides).
+            if name in ("batch_indices", "eps_id"):
                 continue
             col = np.asarray(col)[:usable]
             if k > 1:

@@ -94,6 +94,21 @@ class ActorCriticPolicy:
         logp = jnp.take_along_axis(logp_all, action[..., None], axis=-1)[..., 0]
         return action, logp, value, logits
 
+    def value(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        """Critic value only (GAE bootstrap at truncation boundaries)."""
+        return mlp_apply(params["vf"], obs)[..., 0]
+
+    def compute_actions(self, params: PyTree, obs: jax.Array, keys: jax.Array):
+        """Batched acting with *per-lane* RNG: one dispatch for all N envs.
+
+        ``obs`` is [N, obs_dim], ``keys`` is [N, 2] (one PRNG key per env
+        lane).  Equivalent to calling ``act`` once per lane with that lane's
+        key — the per-lane split is what lets a vectorized rollout
+        bit-reproduce N independent per-env rollouts — but it costs a single
+        jitted dispatch instead of N.
+        """
+        return jax.vmap(self.act, in_axes=(None, 0, 0))(params, obs, keys)
+
     # ------------------------------------------------------------- losses
     def loss(self, params: PyTree, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
         if self.loss_kind == "ppo":
@@ -203,6 +218,17 @@ class DQNPolicy:
         value = jnp.max(q, axis=-1)
         return action, jnp.zeros_like(value), value, q
 
+    def value(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        return jnp.max(self.q_values(params, obs), axis=-1)
+
+    def compute_actions(
+        self, params: PyTree, obs: jax.Array, keys: jax.Array, epsilon: jax.Array
+    ):
+        """Per-lane-keyed batched epsilon-greedy (see ActorCriticPolicy)."""
+        return jax.vmap(self.act, in_axes=(None, 0, 0, None))(
+            params, obs, keys, epsilon
+        )
+
     def loss(
         self, params: PyTree, target_params: PyTree, batch: Dict[str, jax.Array]
     ) -> Tuple[jax.Array, Dict]:
@@ -272,6 +298,10 @@ class SACPolicy:
         value = self._q(params["q1"], obs, action)
         return action, logp, value, action
 
+    def compute_actions(self, params: PyTree, obs: jax.Array, keys: jax.Array):
+        """Per-lane-keyed batched squashed-Gaussian acting."""
+        return jax.vmap(self.act, in_axes=(None, 0, 0))(params, obs, keys)
+
     def critic_loss(self, params, target_params, batch, key):
         next_a, next_logp = self._pi(params, batch["next_obs"], key)
         tq1 = self._q(target_params["q1"], batch["next_obs"], next_a)
@@ -315,6 +345,14 @@ class DummyPolicy:
         action = jax.random.randint(key, obs.shape[:-1], 0, self.num_actions)
         zeros = jnp.zeros(obs.shape[:-1])
         return action, zeros, zeros, zeros
+
+    def value(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        return jnp.zeros(obs.shape[:-1])
+
+    def compute_actions(self, params: PyTree, obs: jax.Array, keys: jax.Array):
+        """Per-lane-keyed batched random acting (pure RNG: bit-identical to
+        per-env acting, which anchors the determinism regression suite)."""
+        return jax.vmap(self.act, in_axes=(None, 0, 0))(params, obs, keys)
 
     def loss(self, params: PyTree, batch: Dict[str, jax.Array]):
         return jnp.sum(params["theta"] ** 2), {}

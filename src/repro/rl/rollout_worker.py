@@ -13,7 +13,7 @@ from __future__ import annotations
 import functools
 import threading
 from collections import deque
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,13 +21,24 @@ import numpy as np
 
 from repro.kernels.ops import fused_gae as gae
 from repro.optim import Optimizer, adam
-from repro.rl.env import Env
+from repro.rl.env import Env, VectorEnv, VectorEnvState
 from repro.rl.policy import ActorCriticPolicy, DQNPolicy, SACPolicy
 from repro.rl.sample_batch import MultiAgentBatch, SampleBatch
 
 PyTree = Any
 
-__all__ = ["RolloutWorker", "MultiAgentRolloutWorker"]
+__all__ = [
+    "RolloutWorker",
+    "MultiAgentRolloutWorker",
+    "VectorizedRolloutWorker",
+    "PerEnvRolloutWorker",
+    "assemble_fragments",
+]
+
+# Episode-id layout: eps_id = (worker_index * MAX_LANES + lane) * EPS_STRIDE
+# + per-lane episode counter.  int64 gives ~2^43 worker-lanes' headroom.
+MAX_LANES = 4096
+EPS_STRIDE = 1 << 20
 
 
 def _to_numpy_batch(cols: Dict[str, jax.Array]) -> SampleBatch:
@@ -42,6 +53,32 @@ def _to_numpy_batch(cols: Dict[str, jax.Array]) -> SampleBatch:
         v = v.swapaxes(0, 1)  # [B, T, ...]
         out[k] = v.reshape((-1,) + v.shape[2:])
     return SampleBatch(out)
+
+
+def assemble_fragments(cols: Dict[str, Any], lane_base: np.ndarray) -> SampleBatch:
+    """[T, B, ...] rollout columns -> one batch-major SampleBatch whose rows
+    carry globally unique int64 ``eps_id`` episode-fragment labels.
+
+    The ``eps_count`` column (each step's per-lane episode index, int32) is
+    consumed and replaced by ``eps_id = lane_base[lane] * EPS_STRIDE +
+    eps_count``; ``lane_base`` must be globally unique per (worker, lane)
+    (see ``MAX_LANES``).  Row order is batch-major, so every lane's length-T
+    trace stays contiguous and, within a lane, episode fragments are
+    contiguous runs — ``SampleBatch.split_by_episode()`` recovers exactly
+    the per-episode fragments, and any slice/concat/shard that respects
+    lane boundaries preserves fragment boundaries.
+    """
+    cols = dict(cols)
+    eps_count = np.asarray(cols.pop("eps_count"))  # [T, B]
+    batch = _to_numpy_batch(cols)
+    lane_base = np.asarray(lane_base, np.int64)
+    if lane_base.shape != (eps_count.shape[1],):
+        raise ValueError(
+            f"lane_base shape {lane_base.shape} != (num_lanes,)={eps_count.shape[1:2]}"
+        )
+    eps_id = lane_base[:, None] * EPS_STRIDE + eps_count.T.astype(np.int64)  # [B, T]
+    batch["eps_id"] = eps_id.reshape(-1)
+    return batch
 
 
 class RolloutWorker:
@@ -78,15 +115,20 @@ class RolloutWorker:
         self.optimizer = optimizer or adam(3e-4)
         self.opt_state = self.optimizer.init(self.params)
 
-        env_keys = jax.random.split(ek, num_envs)
-        self.env_state, self.obs = jax.vmap(env.reset)(env_keys)
-        self._ep_returns = jnp.zeros((num_envs,), jnp.float32)
         self._completed: deque = deque(maxlen=100)
+        self._init_env_state(ek)
 
-        self._rollout_jit = jax.jit(self._rollout)
         self._learn_jit = jax.jit(self._learn)
         self._grad_jit = jax.jit(self._grads)
         self._apply_jit = jax.jit(self._apply)
+
+    def _init_env_state(self, ek: jax.Array) -> None:
+        """Build the worker's env-side state (subclass hook: the vectorized
+        engine replaces the flat vmapped state with a ``VectorEnv``)."""
+        env_keys = jax.random.split(ek, self.num_envs)
+        self.env_state, self.obs = jax.vmap(self.env.reset)(env_keys)
+        self._ep_returns = jnp.zeros((self.num_envs,), jnp.float32)
+        self._rollout_jit = jax.jit(self._rollout)
 
     # --------------------------------------------------------------- rollout
     def _act(self, params: PyTree, obs: jax.Array, key: jax.Array):
@@ -173,9 +215,15 @@ class RolloutWorker:
         params, opt_state = self.optimizer.apply(params, grads, opt_state)
         return params, opt_state, loss, aux
 
-    @staticmethod
-    def _device_batch(batch: SampleBatch) -> Dict[str, jax.Array]:
-        return {k: jnp.asarray(v) for k, v in batch.items() if k != "batch_indices"}
+    # Host-side metadata columns that never enter jitted losses (eps_id is
+    # int64, which JAX would silently truncate without x64 mode).
+    _HOST_COLUMNS = frozenset({"batch_indices", "eps_id"})
+
+    @classmethod
+    def _device_batch(cls, batch: SampleBatch) -> Dict[str, jax.Array]:
+        return {
+            k: jnp.asarray(v) for k, v in batch.items() if k not in cls._HOST_COLUMNS
+        }
 
     def learn_on_batch(self, batch: SampleBatch, policy_id: Optional[str] = None) -> Dict[str, Any]:
         self._key, k = jax.random.split(self._key)
@@ -230,6 +278,25 @@ class RolloutWorker:
             "episodes": len(self._completed),
         }
 
+    # ------------------------------------------------------------ durability
+    def get_state(self) -> Dict[str, Any]:
+        """Resumable rollout-side state (weights are checkpointed separately
+        by ``Algorithm.save``): env auto-reset state, RNG, episode stats."""
+        return {
+            "key": np.asarray(self._key),
+            "env_state": jax.tree_util.tree_map(np.asarray, self.env_state),
+            "obs": np.asarray(self.obs),
+            "ep_returns": np.asarray(self._ep_returns),
+            "completed": list(self._completed),
+        }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self._key = jnp.asarray(state["key"])
+        self.env_state = jax.tree_util.tree_map(jnp.asarray, state["env_state"])
+        self.obs = jnp.asarray(state["obs"])
+        self._ep_returns = jnp.asarray(state["ep_returns"])
+        self._completed = deque(state["completed"], maxlen=100)
+
     # --------------------------------------------------------------- MAML
     def inner_adapt(self, batch: SampleBatch) -> None:
         """One inner-loop PG step on worker-local params (first-order MAML)."""
@@ -239,6 +306,328 @@ class RolloutWorker:
         # Meta-params were just broadcast via set_weights; nothing else to do
         # because inner adaptation mutated self.params in place.
         pass
+
+
+class VectorizedRolloutWorker(RolloutWorker):
+    """Vectorized rollout engine: a ``VectorEnv`` stepped with one batched
+    policy dispatch per step (``policy.compute_actions``, per-lane RNG).
+
+    Differences from the base worker:
+
+      * the whole T×N rollout is still one jitted ``lax.scan``, but env
+        auto-reset, per-lane key chains, and episode accounting live in an
+        explicit ``VectorEnvState`` — checkpointable (``get_state``) and
+        reconfigurable at lowering time (``configure_vectorization``);
+      * batches are assembled as per-episode *fragments*: every row carries
+        a globally unique int64 ``eps_id``, plus ``terminateds``/
+        ``truncateds`` split so consumers can tell env death from horizon
+        cuts;
+      * GAE routes through ``repro.kernels.ops.fused_gae`` with truncation-
+        aware bootstrap: at a truncated step the successor value (from the
+        TRUE pre-reset next obs) is folded into the reward, so advantage
+        math is correct across artificial horizons;
+      * optional decoupled inference (``inference='server'``): actions come
+        from an ``InferenceActor`` via an ``InferenceClient`` (batched
+        request per step, credit-bounded in flight).  If the server fails
+        mid-rollout the in-flight fragment is dropped
+        (``num_fragments_dropped``), the client's recovery path restarts
+        the actor and re-syncs weights, and sampling resumes from the live
+        env state.
+    """
+
+    def __init__(
+        self,
+        env: Env,
+        policy: Any,
+        algo: str = "pg",
+        num_envs: int = 8,
+        rollout_len: int = 64,
+        inference: str = "local",
+        inference_client: Any = None,
+        max_inference_retries: int = 3,
+        **kwargs: Any,
+    ):
+        if inference not in ("local", "server"):
+            raise ValueError(f"unknown inference mode {inference!r}")
+        self.inference = inference
+        self.inference_client = inference_client
+        self.max_inference_retries = max_inference_retries
+        self.num_fragments_dropped = 0
+        super().__init__(
+            env, policy, algo=algo, num_envs=num_envs, rollout_len=rollout_len, **kwargs
+        )
+
+    # ------------------------------------------------------------ state init
+    def _rebuild_plumbing(self) -> None:
+        """(Re)derive everything that depends on ``self.num_envs``: the
+        VectorEnv, lane-id bases, and the jitted entry points.  Called at
+        init, on ``configure_vectorization(vector=...)`` resizes, and when
+        ``set_state`` adopts a checkpoint taken at a different lane count."""
+        if self.num_envs > MAX_LANES:
+            raise ValueError(f"num_envs {self.num_envs} > MAX_LANES {MAX_LANES}")
+        self.venv = VectorEnv(self.env, self.num_envs)
+        self._lane_base = (
+            self.worker_index * MAX_LANES + np.arange(self.num_envs, dtype=np.int64)
+        )
+        self._vrollout_jit = jax.jit(self._vrollout)
+        self._postprocess_jit = jax.jit(self._postprocess_cols)
+        self._vstep_jit = jax.jit(self.venv.step)
+        self._act1_jit = jax.jit(self._act)
+
+    def _init_env_state(self, ek: jax.Array) -> None:
+        self._rebuild_plumbing()
+        k_env, k_act = jax.random.split(ek)
+        self.vstate = self.venv.reset(k_env)
+        self.act_rng = jax.vmap(lambda i: jax.random.fold_in(k_act, i))(
+            jnp.arange(self.num_envs)
+        )
+
+    # -------------------------------------------------------------- lowering
+    def configure_vectorization(
+        self,
+        vector: Optional[int] = None,
+        inference: Optional[str] = None,
+        client: Any = None,
+    ) -> Dict[str, Any]:
+        """Reconfigure lanes / inference mode (FlowSpec annotation lowering).
+
+        Resizing rebuilds the ``VectorEnv`` with fresh per-lane key chains
+        derived from the worker's RNG; switching to ``'server'`` without a
+        client falls back to local inference (flagged in the ack).
+        """
+        if vector is not None and int(vector) != self.num_envs:
+            self.num_envs = int(vector)
+            self._key, ek = jax.random.split(self._key)
+            self._init_env_state(ek)
+        if inference is not None:
+            if inference not in ("local", "server"):
+                raise ValueError(f"unknown inference mode {inference!r}")
+            if client is not None:
+                self.inference_client = client
+            if inference == "server" and self.inference_client is None:
+                inference = "local"
+            self.inference = inference
+        return {"vector": self.num_envs, "inference": self.inference}
+
+    # --------------------------------------------------------------- rollout
+    def _compute_actions(self, params: PyTree, obs: jax.Array, keys: jax.Array):
+        if self.algo == "dqn":
+            return self.policy.compute_actions(
+                params, obs, keys, jnp.asarray(self.epsilon)
+            )
+        return self.policy.compute_actions(params, obs, keys)
+
+    def _vrollout(self, params: PyTree, vstate: VectorEnvState, act_rng: jax.Array):
+        def step_fn(carry, _):
+            vstate, act_rng = carry
+            act_rng, k_act = VectorEnv._split_lanes(act_rng)
+            obs = vstate.obs
+            action, logp, value, _ = self._compute_actions(params, obs, k_act)
+            vstate, out = self.venv.step(vstate, action)
+            cols = {
+                "obs": obs,
+                "actions": action,
+                "rewards": out.reward,
+                "dones": out.done.astype(jnp.float32),
+                "terminateds": out.terminated.astype(jnp.float32),
+                "truncateds": out.truncated.astype(jnp.float32),
+                "logp": logp,
+                "values": value,
+                "next_obs": out.next_obs,
+                "completed": out.completed_return,
+                "eps_count": out.eps_count,
+            }
+            return (vstate, act_rng), cols
+
+        (vstate, act_rng), cols = jax.lax.scan(
+            step_fn, (vstate, act_rng), None, length=self.rollout_len
+        )
+        return vstate, act_rng, cols
+
+    def _postprocess_cols(self, params: PyTree, cols: Dict[str, jax.Array]):
+        """Advantage columns over assembled [T, B] rollout columns.
+
+        Shared verbatim by the vectorized and per-env paths (one jitted
+        function object), so the two engines are bit-comparable downstream
+        of acting.  Truncation bootstrap: the successor value (true
+        pre-reset next obs) is folded into the reward at truncated steps,
+        then the standard ``fused_gae`` runs with ``dones`` as the
+        accumulation mask — identical math to explicit next-value GAE, but
+        expressed through the existing kernel dispatch.
+        """
+        cols = dict(cols)
+        if self.algo in ("pg", "ppo"):
+            v_next = self.policy.value(params, cols["next_obs"])
+            rewards_adj = cols["rewards"] + self.gamma * v_next * cols["truncateds"]
+            adv, ret = gae(
+                rewards_adj,
+                cols["values"],
+                cols["dones"],
+                v_next[-1],
+                self.gamma,
+                self.lam,
+            )
+            cols["advantages"] = adv
+            cols["returns"] = ret
+        return cols
+
+    def _record_completed(self, completed: np.ndarray) -> None:
+        for r in completed.T.reshape(-1)[completed.T.reshape(-1) != 0.0]:
+            self._completed.append(float(r))
+
+    def _emit(self, cols: Dict[str, Any]) -> SampleBatch:
+        """Post-scan host path shared by all inference modes."""
+        cols = dict(self._postprocess_jit(self.params, cols))
+        self._record_completed(np.asarray(cols.pop("completed")))
+        if self.algo in ("dqn", "sac"):
+            for k_ in ("logp", "values"):
+                cols.pop(k_, None)
+        return assemble_fragments(cols, self._lane_base)
+
+    def sample(self) -> SampleBatch:
+        if self.inference == "server":
+            return self._sample_server()
+        self.vstate, self.act_rng, cols = self._vrollout_jit(
+            self.params, self.vstate, self.act_rng
+        )
+        return self._emit(cols)
+
+    # ---------------------------------------------------- decoupled inference
+    def _sample_server(self) -> SampleBatch:
+        from repro.rl.inference import InferenceUnavailable
+
+        attempts = 0
+        while True:
+            try:
+                cols = self._server_rollout()
+                return self._emit(cols)
+            except InferenceUnavailable:
+                # Drop ONLY the in-flight fragment: env state has advanced
+                # to wherever acting stopped; collected step columns are
+                # discarded, completed batches are untouched.
+                self.num_fragments_dropped += 1
+                attempts += 1
+                if attempts > self.max_inference_retries:
+                    raise
+                self.inference_client.recover()
+
+    def _server_rollout(self) -> Dict[str, np.ndarray]:
+        steps: List[Dict[str, np.ndarray]] = []
+        for _ in range(self.rollout_len):
+            self.act_rng, k_act = VectorEnv._split_lanes(self.act_rng)
+            obs = np.asarray(self.vstate.obs)
+            action, logp, value = self.inference_client.compute_actions(
+                obs, np.asarray(k_act)
+            )
+            self.vstate, out = self._vstep_jit(self.vstate, jnp.asarray(action))
+            steps.append(
+                {
+                    "obs": obs,
+                    "actions": action,
+                    "rewards": np.asarray(out.reward),
+                    "dones": np.asarray(out.done, np.float32),
+                    "terminateds": np.asarray(out.terminated, np.float32),
+                    "truncateds": np.asarray(out.truncated, np.float32),
+                    "logp": logp,
+                    "values": value,
+                    "next_obs": np.asarray(out.next_obs),
+                    "completed": np.asarray(out.completed_return),
+                    "eps_count": np.asarray(out.eps_count),
+                }
+            )
+        return {k: np.stack([s[k] for s in steps]) for k in steps[0]}
+
+    # ------------------------------------------------------------ durability
+    def get_state(self) -> Dict[str, Any]:
+        return {
+            "key": np.asarray(self._key),
+            "vstate": VectorEnv.state_to_numpy(self.vstate),
+            "act_rng": np.asarray(self.act_rng),
+            "completed": list(self._completed),
+            "num_fragments_dropped": self.num_fragments_dropped,
+        }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self._key = jnp.asarray(state["key"])
+        self.vstate = VectorEnv.state_from_numpy(state["vstate"])
+        self.act_rng = jnp.asarray(state["act_rng"])
+        self._completed = deque(state["completed"], maxlen=100)
+        self.num_fragments_dropped = int(state.get("num_fragments_dropped", 0))
+        # Adopt the checkpoint's lane count: a state saved at vector=8
+        # restored into a worker configured vector=4 must not leave stale
+        # lane plumbing behind (the next sample would crash in assembly).
+        lanes = int(self.act_rng.shape[0])
+        if lanes != self.num_envs:
+            self.num_envs = lanes
+            self._rebuild_plumbing()
+
+    def episode_stats(self) -> Dict[str, float]:
+        stats = super().episode_stats()
+        stats["fragments_dropped"] = float(self.num_fragments_dropped)
+        return stats
+
+
+class PerEnvRolloutWorker(VectorizedRolloutWorker):
+    """The per-env reference loop: one policy dispatch *per env per step*.
+
+    Identical key chains, env stepping, and fragment assembly as
+    ``VectorizedRolloutWorker`` — only the inference dispatch differs (N
+    single-obs calls instead of one batched call).  For elementwise envs/
+    policies (``StubEnv`` + ``DummyPolicy``) the two engines are
+    bit-identical; the determinism regression suite pins that down, and
+    ``benchmarks/bench_rollout.py`` measures what the batching is worth.
+    """
+
+    def _rebuild_plumbing(self) -> None:
+        super()._rebuild_plumbing()
+        # Per-lane stepping uses an N=1 VectorEnv over lane slices: vmap
+        # over one lane is elementwise-identical to lane i of the N-wide
+        # step, so the env key chains match the vectorized engine exactly.
+        self._venv1 = VectorEnv(self.env, 1)
+        self._lane_step_jit = jax.jit(self._venv1.step)
+
+    @staticmethod
+    def _lane(tree: Any, i: int) -> Any:
+        return jax.tree_util.tree_map(lambda x: x[i : i + 1], tree)
+
+    def sample(self) -> SampleBatch:
+        if self.inference == "server":
+            return super().sample()
+        B, T = self.num_envs, self.rollout_len
+        lanes = [self._lane(self.vstate, i) for i in range(B)]
+        act_rng = self.act_rng
+        steps: List[Dict[str, np.ndarray]] = []
+        for _ in range(T):
+            act_rng, k_act = VectorEnv._split_lanes(act_rng)
+            per_lane: List[Dict[str, np.ndarray]] = []
+            for i in range(B):
+                obs_i = lanes[i].obs[0]
+                a, logp, value, _ = self._act1_jit(self.params, obs_i, k_act[i])
+                lanes[i], out = self._lane_step_jit(lanes[i], a[None])
+                per_lane.append(
+                    {
+                        "obs": np.asarray(obs_i),
+                        "actions": np.asarray(a),
+                        "rewards": np.asarray(out.reward[0]),
+                        "dones": np.asarray(out.done[0], np.float32),
+                        "terminateds": np.asarray(out.terminated[0], np.float32),
+                        "truncateds": np.asarray(out.truncated[0], np.float32),
+                        "logp": np.asarray(logp),
+                        "values": np.asarray(value),
+                        "next_obs": np.asarray(out.next_obs[0]),
+                        "completed": np.asarray(out.completed_return[0]),
+                        "eps_count": np.asarray(out.eps_count[0]),
+                    }
+                )
+            steps.append(
+                {k: np.stack([p[k] for p in per_lane]) for k in per_lane[0]}
+            )
+        self.act_rng = act_rng
+        self.vstate = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *lanes
+        )
+        cols = {k: np.stack([s[k] for s in steps]) for k in steps[0]}
+        return self._emit(cols)
 
 
 class MultiAgentRolloutWorker:

@@ -10,6 +10,12 @@ ISSUE 3 satellite.  Three invariant families, all hypothesis-driven:
     payload rode shared memory or fell back to the pipe;
   * refcount reclaim can never corrupt a batch a reader still holds, no
     matter how encode/release operations interleave.
+
+ISSUE 5 extends the algebra family to the vectorized rollout engine's
+fragment assembler (``repro.rl.rollout_worker.assemble_fragments``):
+shard/slice/concat round trips must preserve per-lane trace boundaries,
+``created_at`` birth stamps, and column dtypes, and ``split_by_episode``
+must recover exactly the per-episode fragments the assembler labeled.
 """
 
 import gc
@@ -22,6 +28,7 @@ pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.transport import ShmReader, ShmWriter, list_segments
+from repro.rl.rollout_worker import EPS_STRIDE, MAX_LANES, assemble_fragments
 from repro.rl.sample_batch import SampleBatch
 
 DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_]
@@ -92,6 +99,91 @@ def test_split_by_episode_partitions(eps_ids):
     for e in episodes:
         assert len(set(e["eps_id"].tolist())) == 1
     back = SampleBatch.concat_samples(episodes)
+    assert_batches_equal(batch, back)
+
+
+# ------------------------------------------------ fragment assembler (ISSUE 5)
+@st.composite
+def rollout_cols(draw):
+    """Raw [T, B] rollout columns as the vectorized engine's scan emits them:
+    a seeded done pattern and the matching per-lane episode counters."""
+    T = draw(st.integers(min_value=2, max_value=8))
+    B = draw(st.integers(min_value=1, max_value=4))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    worker = draw(st.integers(min_value=0, max_value=3))
+    rng = np.random.default_rng(seed)
+    dones = rng.random((T, B)) < 0.3
+    eps_count = np.zeros((T, B), np.int32)
+    eps_count[1:] = np.cumsum(dones[:-1], axis=0).astype(np.int32)
+    cols = {
+        "obs": rng.standard_normal((T, B, 3)).astype(np.float32),
+        "rewards": rng.standard_normal((T, B)).astype(np.float32),
+        "dones": dones.astype(np.float32),
+        "actions": rng.integers(0, 2, (T, B)).astype(np.int32),
+        "eps_count": eps_count,
+    }
+    lane_base = worker * MAX_LANES + np.arange(B, dtype=np.int64)
+    return cols, lane_base, T, B
+
+
+@given(rollout_cols())
+@settings(max_examples=50, deadline=None)
+def test_assembler_preserves_traces_and_dtypes(data):
+    cols, lane_base, T, B = data
+    batch = assemble_fragments(cols, lane_base)
+    assert batch.count == T * B
+    assert batch["eps_id"].dtype == np.int64
+    time_major_obs = cols["obs"].swapaxes(0, 1)  # [B, T, ...]
+    for lane in range(B):
+        trace = batch["eps_id"][lane * T : (lane + 1) * T]
+        # Batch-major assembly: each lane's trace is contiguous, its episode
+        # ids are monotone, and they all decode back to this lane.
+        assert np.all(np.diff(trace) >= 0)
+        assert np.all(trace // EPS_STRIDE == lane_base[lane])
+        np.testing.assert_array_equal(
+            batch["obs"][lane * T : (lane + 1) * T], time_major_obs[lane]
+        )
+    for k in ("obs", "rewards", "dones", "actions"):
+        assert batch[k].dtype == cols[k].dtype
+
+
+@given(rollout_cols())
+@settings(max_examples=50, deadline=None)
+def test_assembler_episode_split_concat_roundtrip(data):
+    cols, lane_base, _T, _B = data
+    batch = assemble_fragments(cols, lane_base)
+    frags = batch.split_by_episode()
+    assert sum(f.count for f in frags) == batch.count
+    for f in frags:
+        assert len(np.unique(f["eps_id"])) == 1  # one fragment per episode
+        assert f.created_at == batch.created_at  # slices inherit the stamp
+    back = SampleBatch.concat_samples(frags)
+    assert_batches_equal(batch, back)
+    assert back.created_at == batch.created_at
+
+
+@given(rollout_cols(), st.data())
+@settings(max_examples=50, deadline=None)
+def test_assembler_shard_respects_trace_boundaries(data, sdata):
+    cols, lane_base, T, B = data
+    batch = assemble_fragments(cols, lane_base)
+    n = sdata.draw(
+        st.sampled_from([d for d in range(1, B + 1) if B % d == 0]), label="shards"
+    )
+    shards = batch.shard(n)
+    lanes_per = B // n
+    for s_i, sh in enumerate(shards):
+        assert sh.count == lanes_per * T
+        assert sh.created_at == batch.created_at
+        for j in range(lanes_per):
+            lane = s_i * lanes_per + j
+            np.testing.assert_array_equal(
+                sh["eps_id"][j * T : (j + 1) * T],
+                batch["eps_id"][lane * T : (lane + 1) * T],
+            )
+        for k in batch:
+            assert sh[k].dtype == batch[k].dtype
+    back = SampleBatch.concat_samples(shards)
     assert_batches_equal(batch, back)
 
 
