@@ -49,7 +49,6 @@ _ROWS = 2048
 # ------------------------------------------------------------------- child
 def _child(iters: int) -> None:
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker, ShardedLearnerGroup

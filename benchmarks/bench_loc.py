@@ -9,7 +9,7 @@ operator library prorated per algorithm).
 from __future__ import annotations
 
 import inspect
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Dict, List, Tuple
 
 
 def count_lines(obj: Any) -> int:

@@ -21,8 +21,7 @@ from repro.rl.lowlevel import sync_sample_lowlevel
 
 def _throughput(it, iters: int) -> float:
     # warmup (jit)
-    batch = next(iter([next(iter(it))]))
-    count = batch.count
+    next(iter(it))
     t0 = time.perf_counter()
     n = 0
     src = iter(it)

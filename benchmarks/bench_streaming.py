@@ -17,7 +17,6 @@ import tempfile
 import time
 from typing import List, Tuple
 
-import numpy as np
 
 from benchmarks.common import pg_workers
 from repro.checkpoint import restore_pytree, save_pytree

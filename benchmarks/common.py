@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Any, Callable
 
 from repro.core.actor import ActorPool
 from repro.core.workers import WorkerSet

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""flowcheck: static analysis over FlowSpec plans (see docs/flowcheck.md).
+
+Runs the rule-based analyzer (``repro.flow.analysis``) over committed plan
+builders and reports diagnostics; the exit code gates CI:
+
+    PYTHONPATH=src python scripts/flowcheck.py --all-plans          # text
+    PYTHONPATH=src python scripts/flowcheck.py --all-plans --json   # machine
+    PYTHONPATH=src python scripts/flowcheck.py --plan apex --plan dqn
+    PYTHONPATH=src python scripts/flowcheck.py --all-plans --strict # warns too
+
+Exit codes: 0 = no error-severity diagnostics (warn/info allowed unless
+``--strict``), 1 = diagnostics at or above the failing floor, 2 = usage.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.flow.analysis import Severity, audit_plans, format_report
+from repro.flow.plans import PLAN_BUILDERS
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--all-plans", action="store_true",
+        help="audit every committed plan builder",
+    )
+    ap.add_argument(
+        "--plan", action="append", default=[], metavar="NAME",
+        help="audit one plan (repeatable); known: " + ", ".join(sorted(PLAN_BUILDERS)),
+    )
+    ap.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit one JSON document instead of text reports",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="fail on warn-severity diagnostics too (default: errors only)",
+    )
+    args = ap.parse_args()
+
+    if not args.all_plans and not args.plan:
+        ap.error("pick plans: --all-plans or --plan NAME")
+    plans = None if args.all_plans else args.plan
+    try:
+        results = audit_plans(plans)
+    except KeyError as exc:
+        print(exc.args[0], file=sys.stderr)
+        return 2
+
+    floor = Severity.WARN if args.strict else Severity.ERROR
+    failing = sum(
+        1 for diags in results.values()
+        for d in diags
+        if Severity.at_least(d.severity, floor)
+    )
+    if args.as_json:
+        doc = {
+            "plans": {
+                name: [d.to_json() for d in diags]
+                for name, diags in results.items()
+            },
+            "failing": failing,
+            "floor": floor,
+        }
+        print(json.dumps(doc, indent=2, sort_keys=True))
+    else:
+        for name, diags in results.items():
+            print(format_report(diags, name))
+        total = sum(len(d) for d in results.values())
+        print(
+            f"\nflowcheck: {len(results)} plan(s), {total} diagnostic(s), "
+            f"{failing} at severity >= {floor}"
+        )
+    return 1 if failing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,6 +2,11 @@
 # Tier-1 verification: the fast test suite (excludes tests marked `slow`).
 #   scripts/tier1.sh            -> fast suite (includes chaos tests)
 #   scripts/tier1.sh --chaos    -> chaos stage only (fault-injection suite)
+#   scripts/tier1.sh --check    -> static-analysis stage: flowcheck over all
+#                                  committed plans (errors fail), plus ruff
+#                                  and the scoped mypy gate when those tools
+#                                  are installed (CI installs them; locally
+#                                  they are skipped with a notice)
 #   scripts/tier1.sh --bench    -> benchmark regression gates:
 #                                  (1) transport + sharded-learner suites
 #                                      vs BENCH_PR3.json
@@ -16,6 +21,22 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--chaos" ]]; then
   shift
   exec python -m pytest -x -q -m "chaos and not slow" "$@"
+fi
+if [[ "${1:-}" == "--check" ]]; then
+  shift
+  python scripts/flowcheck.py --all-plans "$@"
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests scripts benchmarks
+    ruff check --select I src tests scripts benchmarks
+  else
+    echo "tier1 --check: ruff not installed, skipping lint (CI runs it)"
+  fi
+  if command -v mypy >/dev/null 2>&1; then
+    mypy --config-file pyproject.toml
+  else
+    echo "tier1 --check: mypy not installed, skipping types (CI runs it)"
+  fi
+  exit 0
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift

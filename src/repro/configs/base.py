@@ -10,7 +10,7 @@ unrolled inside — keeping HLO size independent of depth.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 __all__ = [
     "MLAConfig",

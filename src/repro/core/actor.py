@@ -63,7 +63,7 @@ def _log_if_failed(actor_name: str, method: str):
         # episode_stats on legacy workers).  Both are expected control flow,
         # not worker faults — same exemption the supervision path applies.
         if exc is not None and not isinstance(exc, (StopIteration, AttributeError)):
-            _logger.error("actor %s.%s failed: %r", actor_name, method, exc)
+            _logger.error("actor %s.%s failed: %s", actor_name, method, repr(exc))
 
     return _cb
 
@@ -271,21 +271,21 @@ class VirtualActor:
             try:
                 self._cell.restart()
             except BaseException as rexc:
-                _logger.error("actor %s restart failed: %r", self.name, rexc)
+                _logger.error("actor %s restart failed: %s", self.name, repr(rexc))
                 self._mark_dead()
                 return
             self._budget_used += 1
             self.num_restarts += 1
             _logger.warning(
-                "actor %s restarted (%d/%d, backoff %.3fs) after %r",
-                self.name, self._budget_used, sup.max_restarts, delay, exc,
+                "actor %s restarted (%d/%d, backoff %.3fs) after %s",
+                self.name, self._budget_used, sup.max_restarts, delay, repr(exc),
             )
             return
         if died or sup.max_restarts > 0:
             # Transport gone, or a supervised actor out of budget: actor dies.
             _logger.error(
-                "actor %s died after %d failures (%d restarts used): %r",
-                self.name, self.num_failures, self._budget_used, exc,
+                "actor %s died after %d failures (%d restarts used): %s",
+                self.name, self.num_failures, self._budget_used, repr(exc),
             )
             self._mark_dead()
         # Unsupervised target-level exceptions keep legacy semantics: the

@@ -55,7 +55,7 @@ from typing import (
     Union,
 )
 
-from repro.core.actor import ActorPool, VirtualActor, wait
+from repro.core.actor import ActorPool, VirtualActor
 from repro.core.executor import FailurePolicy
 from repro.core.metrics import (
     BYTES_MOVED_PREFIX,
@@ -162,9 +162,13 @@ def _absorb_shard_failure(actor: Any, exc: Exception, dropped: Dict[int, str], s
     if policy == FailurePolicy.DROP_SHARD or not alive or not restartable:
         dropped[actor.actor_id] = "dead" if not alive else "policy"
         metrics.counters[NUM_SHARDS_DROPPED] += 1
+        # repr(exc) eagerly: a live exception in a LogRecord pins its
+        # traceback frames — and any in-flight shm attachments they
+        # reference — for as long as a buffering handler (pytest's capture,
+        # a QueueHandler) retains the record.
         logger.warning(
-            "%s: dropping shard %s after failure (%r); %s",
-            stream, getattr(actor, "name", actor), exc,
+            "%s: dropping shard %s after failure (%s); %s",
+            stream, getattr(actor, "name", actor), repr(exc),
             "actor dead" if not alive
             else ("drop_shard policy" if policy == FailurePolicy.DROP_SHARD
                   else "restart policy without restart budget"),
@@ -173,8 +177,8 @@ def _absorb_shard_failure(actor: Any, exc: Exception, dropped: Dict[int, str], s
     # RESTART policy with a live (supervisor-restarted) actor: the failed
     # item is lost, the shard stays in the set.
     logger.warning(
-        "%s: worker %s failed (%r); restart policy, item skipped",
-        stream, getattr(actor, "name", actor), exc,
+        "%s: worker %s failed (%s); restart policy, item skipped",
+        stream, getattr(actor, "name", actor), repr(exc),
     )
     return _SKIPPED
 

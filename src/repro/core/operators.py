@@ -21,7 +21,6 @@ from repro.core.iterators import (
 )
 from repro.core.metrics import (
     APPLY_GRADS_TIMER,
-    GRAD_WAIT_TIMER,
     LEARN_ON_BATCH_TIMER,
     STEPS_SAMPLED_COUNTER,
     STEPS_TRAINED_COUNTER,

@@ -22,16 +22,10 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.configs.base import InputShape, ModelConfig
-from repro.distributed.sharding import AxisRules, DEFAULT_RULES, axis_rules_context
-from repro.distributed.specs import (
-    batch_specs,
-    cache_specs,
-    opt_state_specs,
-    param_specs,
-    tree_shardings,
-)
-from repro.models import Model, make_decode_step, make_prefill_step, make_train_step
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import DEFAULT_RULES, AxisRules, axis_rules_context
+from repro.distributed.specs import opt_state_specs, param_specs, tree_shardings
+from repro.models import Model, make_train_step
 from repro.optim import Optimizer
 
 PyTree = Any

@@ -67,6 +67,9 @@ __all__ = [
     "CreditPool",
     "OverflowPolicy",
     "list_segments",
+    "SANITIZER",
+    "ShmLeaseViolation",
+    "sanitize_enabled",
 ]
 
 _SHM_ALIGN = 64  # column offsets aligned for safe dtype views + cache lines
@@ -199,6 +202,127 @@ def _unlink_by_name(name: str) -> None:
         pass
     except Exception:
         pass
+
+
+# --------------------------------------------------------------------------
+# Dynamic analysis: the shm lease sanitizer (TRANSPORT_SANITIZE=1)
+# --------------------------------------------------------------------------
+def sanitize_enabled() -> bool:
+    """True when the environment opts into lease sanitizing."""
+    return os.environ.get("TRANSPORT_SANITIZE", "").lower() in ("1", "true", "on")
+
+
+class ShmLeaseViolation(AssertionError):
+    """A lease acquire/release invariant was broken (sanitizer finding)."""
+
+
+class _LeaseSanitizer:
+    """Process-wide ledger of shm segment lease acquire/release pairs.
+
+    The PR 3 reclaim protocol is refcounted: every decoded batch holds one
+    reader-side lease on its mapped segment (``_Attachment.add_lease``),
+    dropped exactly once when the last view dies (``_SegmentToken.__del__``),
+    and the writer's per-segment ring refcount decrements once per released
+    batch ref.  This sanitizer turns those invariants into a checker the
+    test suite runs under ``TRANSPORT_SANITIZE=1``:
+
+      * double-release — a lease dropped more often than acquired, or a
+        writer ring ref released below zero / for a never-created segment;
+      * leaked lease  — a lease still live at epoch end (one test), after
+        the epoch's garbage is collected;
+      * leaked segment — a ``/dev/shm`` entry under the runtime's prefix
+        surviving epoch teardown.
+
+    Scope: the ledger is per-process, so it audits every endpoint living in
+    the driver (readers for worker->driver data, plus any writer built
+    in-process by tests/benchmarks).  Writers inside forked children check
+    their own ring refcounts but report to their own copy of the ledger,
+    which no one collects — child-side violations surface indirectly, as
+    driver-side leaks of the segments involved.
+
+    Hooks are gated on ``self.enabled`` (a plain attribute read) so the
+    default path stays free; ``begin_epoch``/``end_epoch`` are driven by the
+    autouse fixture in ``tests/conftest.py``.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.enabled = False
+        self._epoch = "<no epoch>"
+        # id(attachment) -> [segment name, live lease count]; entries are
+        # dropped at zero so id reuse after GC cannot corrupt the ledger.
+        self._live: Dict[int, List[Any]] = {}
+        self._violations: List[str] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def begin_epoch(self, tag: str) -> None:
+        """Start a fresh ledger (one epoch = one test)."""
+        with self._lock:
+            self._epoch = tag
+            self._live.clear()
+            self._violations.clear()
+            self.enabled = True
+
+    def end_epoch(self, prefix: str = "rfl") -> None:
+        """Close the epoch: collect garbage, then fail on any violation.
+
+        Two ``gc.collect`` passes let release tokens queued behind reference
+        cycles die before the leak check; segments under ``prefix`` still in
+        ``/dev/shm`` after that are leaks too (a stopped runtime sweeps its
+        own prefix on close).
+        """
+        import gc
+
+        if not self.enabled:
+            return
+        gc.collect()
+        gc.collect()
+        with self._lock:
+            self.enabled = False
+            problems = list(self._violations)
+            problems += [
+                f"leaked lease: segment {seg} still has {n} live lease(s)"
+                for seg, n in self._live.values()
+                if n > 0
+            ]
+            self._live.clear()
+            self._violations.clear()
+            epoch = self._epoch
+        leftover = list_segments(prefix)
+        problems += [f"leaked /dev/shm segment: {name}" for name in leftover]
+        for name in leftover:  # clean up so one leak doesn't fail every test after
+            _unlink_by_name(name)
+        if problems:
+            raise ShmLeaseViolation(
+                f"shm lease sanitizer ({epoch}): {len(problems)} violation(s)\n"
+                + "\n".join("  " + p for p in problems)
+            )
+
+    # ---------------------------------------------------------------- hooks
+    def lease_acquired(self, att: Any, segment: str) -> None:
+        with self._lock:
+            entry = self._live.setdefault(id(att), [segment, 0])
+            entry[1] += 1
+
+    def lease_dropped(self, att: Any, segment: str) -> None:
+        with self._lock:
+            entry = self._live.get(id(att))
+            if entry is None:
+                self._violations.append(
+                    f"double-release: lease on segment {segment} dropped "
+                    "with no live lease outstanding"
+                )
+                return
+            entry[1] -= 1
+            if entry[1] <= 0:
+                del self._live[id(att)]
+
+    def violation(self, message: str) -> None:
+        with self._lock:
+            self._violations.append(message)
+
+
+SANITIZER = _LeaseSanitizer()
 
 
 # --------------------------------------------------------------------------
@@ -363,10 +487,14 @@ class _Attachment:
         self.raw = np.frombuffer(shm.buf, dtype=np.uint8)
 
     def add_lease(self) -> None:
+        if SANITIZER.enabled:
+            SANITIZER.lease_acquired(self, self.shm.name)
         with self.lock:
             self.live += 1
 
     def drop_lease(self) -> None:
+        if SANITIZER.enabled:
+            SANITIZER.lease_dropped(self, self.shm.name)
         with self.lock:
             self.live -= 1
             close_now = self.discarded and self.live <= 0
@@ -470,6 +598,10 @@ class ShmWriter:
         self._segments: Dict[str, _Segment] = {}
         self._seq = itertools.count()
         self._retired: List[str] = []  # destroyed names the reader hasn't heard
+        # All names ever destroyed: releases for these are in-flight races
+        # (legitimate), anything else reaching reclaim() is a sanitizer
+        # violation.  Bounded by segments_created, which the ring keeps small.
+        self._destroyed: set = set()
         self.stats: Dict[str, int] = {
             "messages": 0,
             "shm_batches": 0,
@@ -514,6 +646,7 @@ class ShmWriter:
     def _destroy(self, seg: _Segment) -> None:
         self._segments.pop(seg.name, None)
         self._retired.append(seg.name)
+        self._destroyed.add(seg.name)
         seg.raw = None  # release the cached buffer export first
         try:
             seg.shm.close()
@@ -529,6 +662,20 @@ class ShmWriter:
             seg = self._segments.get(n)
             if seg is not None and seg.refs > 0:
                 seg.refs -= 1
+            elif SANITIZER.enabled:
+                # A release for a recycled segment is a legitimate race (the
+                # ring destroyed it while the ref was in flight); anything
+                # else is a refcount bug the silent ignore used to hide.
+                if seg is not None:
+                    SANITIZER.violation(
+                        f"double-release: writer ring ref for segment {n} "
+                        "released below zero"
+                    )
+                elif n not in self._destroyed:
+                    SANITIZER.violation(
+                        f"double-release: writer received a release for "
+                        f"segment {n} it never created"
+                    )
 
     def rollback(self, payload: Any) -> None:
         """Undo the refcounts of an encoded payload that never reached the

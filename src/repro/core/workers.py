@@ -155,14 +155,14 @@ class WorkerSet:
                 policy = getattr(actor, "failure_policy", FailurePolicy.RAISE)
                 if policy == FailurePolicy.RAISE and getattr(actor, "alive", True):
                     raise
-                logger.warning("sync_weights: worker %s failed: %r", actor.name, exc)
+                logger.warning("sync_weights: worker %s failed: %s", actor.name, repr(exc))
         for sink in self._weight_sinks:
             try:
                 sink(weights)
             except Exception as exc:
                 # Sinks heal themselves (InferenceClient.recover); a dead
                 # server must not poison a rollout-worker broadcast.
-                logger.warning("sync_weights: weight sink failed: %r", exc)
+                logger.warning("sync_weights: weight sink failed: %s", repr(exc))
 
     def add_weight_sink(self, sink: Callable[[Any], None]) -> None:
         """Register an extra weight-broadcast consumer (e.g. the decoupled
@@ -221,7 +221,7 @@ class WorkerSet:
                 report["restarted"].append(actor.name)
                 continue
             except Exception as exc:
-                logger.warning("recover: in-place restart of %s failed: %r", actor.name, exc)
+                logger.warning("recover: in-place restart of %s failed: %s", actor.name, repr(exc))
             if self._factory is None:
                 report["failed"].append(actor.name)
                 continue

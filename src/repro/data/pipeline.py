@@ -9,7 +9,7 @@ restart from the checkpointed step and regenerate identical data.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
 import numpy as np
 

@@ -1,6 +1,6 @@
 from repro.distributed.sharding import (
-    AxisRules,
     DEFAULT_RULES,
+    AxisRules,
     axis_rules_context,
     get_axis_rules,
     logical_spec,

@@ -15,7 +15,6 @@ from __future__ import annotations
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import AxisRules

@@ -12,6 +12,7 @@ The three layers (build / optimize+lower / run):
 """
 
 from repro.flow.algorithm import Algorithm
+from repro.flow.analysis import Diagnostic, FlowAnalysisError, Severity, analyze
 from repro.flow.compile import CompiledFlow, FlowRuntime, compose_stages, fuse_for_each
 from repro.flow.plans import (
     PLAN_BUILDERS,
@@ -33,14 +34,18 @@ from repro.flow.spec import FlowSpec, Node, ResourceRef, StageSpec, Stream, pure
 __all__ = [
     "Algorithm",
     "CompiledFlow",
+    "Diagnostic",
+    "FlowAnalysisError",
     "FlowRuntime",
     "FlowSpec",
     "Node",
     "PLAN_BUILDERS",
     "REPLAY_PLANS",
     "ResourceRef",
+    "Severity",
     "StageSpec",
     "Stream",
+    "analyze",
     "build_a2c",
     "build_a3c",
     "build_apex",

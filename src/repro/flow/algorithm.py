@@ -21,7 +21,7 @@ joins them — after it returns, no flow-owned threads are alive.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Union
+from typing import Any, Callable, Dict, List, Union
 
 from repro.core.iterators import LocalIterator
 from repro.flow.compile import CompiledFlow
@@ -57,6 +57,7 @@ class Algorithm:
         replay_actors: Any = None,
         *,
         fuse: bool = True,
+        strict: bool = False,
         own_workers: bool = True,
         **plan_kwargs: Any,
     ) -> "Algorithm":
@@ -64,6 +65,9 @@ class Algorithm:
 
         ``plan`` is a registered name (``"ppo"``, ``"apex"``, ...), a builder
         callable returning a ``FlowSpec``, or an already-built ``FlowSpec``.
+        ``strict=True`` gates compilation on the static analyzer: a plan
+        carrying error-severity diagnostics raises ``FlowAnalysisError``
+        before any resource is built (see ``docs/flowcheck.md``).
         """
         if isinstance(plan, FlowSpec):
             if plan_kwargs:
@@ -86,7 +90,10 @@ class Algorithm:
             args = (workers,) if replay_actors is None else (workers, replay_actors)
             spec = builder(*args, **plan_kwargs)
         return cls(
-            spec.compile(fuse=fuse), workers, replay_actors, own_workers=own_workers
+            spec.compile(fuse=fuse, strict=strict),
+            workers,
+            replay_actors,
+            own_workers=own_workers,
         )
 
     # ------------------------------------------------------------ training
@@ -124,6 +131,21 @@ class Algorithm:
     def resources(self) -> Dict[str, Any]:
         """Deferred runtime resources by name (e.g. learner threads)."""
         return self._compiled.runtime.resources
+
+    def check(self) -> List[Any]:
+        """Static analysis of this algorithm's plan (``FlowSpec.check``).
+
+        Returns the combined diagnostic list: the analyzer's findings over
+        the *source* spec (pre-fusion, so node ids match what the builder
+        created) plus anything the lowering fallbacks recorded while this
+        flow compiled.  Empty list = clean.
+        """
+        from repro.flow.analysis.diagnostics import sort_diagnostics
+
+        return sort_diagnostics(
+            list(self._compiled.source_spec.check())
+            + list(self._compiled.diagnostics)
+        )
 
     def to_dot(self, with_metrics: bool = False) -> str:
         """DOT rendering of the plan; ``with_metrics=True`` labels data-plane

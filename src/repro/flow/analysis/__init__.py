@@ -1,0 +1,40 @@
+"""repro.flow.analysis: static analysis over the FlowSpec IR (flowcheck).
+
+The paper's claim — an RL program *is* a dataflow graph — cuts both ways:
+misconfigurations (credit deadlocks, unbounded queues, annotations that
+cannot lower) are graph properties, detectable before a single actor
+spawns.  This package is the rule-based pass that detects them:
+
+    from repro.flow.analysis import analyze
+    diags = analyze(spec)              # or spec.check()
+    spec.compile(strict=True)          # raise FlowAnalysisError on errors
+
+Layout: ``diagnostics`` (the Diagnostic/Severity vocabulary, shared with
+the lowering fallbacks in ``flow/compile.py``), ``engine`` (GraphView +
+rule registry + ``analyze``), ``rules`` (the built-in rule set), ``audit``
+(the all-committed-plans sweep behind ``scripts/flowcheck.py``).
+"""
+
+from repro.flow.analysis.audit import audit_plans
+from repro.flow.analysis.diagnostics import (
+    Diagnostic,
+    FlowAnalysisError,
+    Severity,
+    format_report,
+    sort_diagnostics,
+)
+from repro.flow.analysis.engine import RULES, GraphView, Rule, analyze, rule
+
+__all__ = [
+    "Diagnostic",
+    "FlowAnalysisError",
+    "GraphView",
+    "RULES",
+    "Rule",
+    "Severity",
+    "analyze",
+    "audit_plans",
+    "format_report",
+    "rule",
+    "sort_diagnostics",
+]

@@ -1,0 +1,71 @@
+"""Audit the committed plan catalog: build each plan, run the analyzer.
+
+Shared by ``scripts/flowcheck.py`` (the CLI/CI gate) and
+``tests/test_flow_analysis.py`` (the error-clean regression) so both check
+exactly the same thing: every builder in ``PLAN_BUILDERS``, constructed over
+a small real worker group, must carry zero error-severity diagnostics.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.flow.analysis.diagnostics import Diagnostic
+from repro.flow.analysis.engine import analyze
+
+__all__ = ["audit_plans", "build_plan_specs"]
+
+
+def build_plan_specs(plans: Optional[Sequence[str]] = None):
+    """Yield ``(name, spec)`` for each requested committed plan.
+
+    Builds one shared 2-worker group (and a replay pool for the plans that
+    need one) exactly the way ``scripts/render_figures.py`` does, and tears
+    both down when the generator is exhausted or closed.
+    """
+    from repro.core.actor import ActorPool
+    from repro.core.workers import WorkerSet
+    from repro.flow.plans import PLAN_BUILDERS, REPLAY_PLANS
+    from repro.rl import ActorCriticPolicy, CartPole, ReplayBuffer, RolloutWorker
+
+    names = sorted(PLAN_BUILDERS) if plans is None else list(plans)
+    unknown = sorted(set(names) - set(PLAN_BUILDERS))
+    if unknown:
+        raise KeyError(f"unknown plans: {unknown}")
+
+    def factory(i: int) -> RolloutWorker:
+        return RolloutWorker(
+            CartPole(), ActorCriticPolicy(4, 2), algo="pg",
+            num_envs=2, rollout_len=8, seed=0, worker_index=i,
+        )
+
+    workers = WorkerSet.create(factory, 2)
+    replay = None
+    try:
+        for name in names:
+            if name in REPLAY_PLANS:
+                if replay is None:
+                    replay = ActorPool.from_targets([
+                        ReplayBuffer(
+                            capacity=1024, sample_batch_size=32,
+                            learning_starts=64,
+                        )
+                    ])
+                yield name, PLAN_BUILDERS[name](workers, replay)
+            else:
+                yield name, PLAN_BUILDERS[name](workers)
+    finally:
+        if replay is not None:
+            replay.stop()
+        workers.stop()
+
+
+def audit_plans(
+    plans: Optional[Sequence[str]] = None,
+    rules: Optional[Sequence[str]] = None,
+) -> Dict[str, List[Diagnostic]]:
+    """Analyze each committed plan; plan name -> sorted diagnostics."""
+    return {
+        name: analyze(spec, rules=rules)
+        for name, spec in build_plan_specs(plans)
+    }

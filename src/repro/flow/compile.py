@@ -36,6 +36,7 @@ from repro.core.operators import (
     StandardMetricsReporting,
     par_compute_gradients,
 )
+from repro.flow.analysis.diagnostics import Diagnostic, FlowAnalysisError, Severity
 from repro.flow.spec import EdgeRef, FlowSpec, Node, StageSpec, is_pure
 
 __all__ = ["CompiledFlow", "FlowRuntime", "fuse_for_each", "compose_stages"]
@@ -182,19 +183,39 @@ class FlowRuntime:
 # Lowering
 # --------------------------------------------------------------------------
 class CompiledFlow:
-    """A FlowSpec lowered onto the iterator runtime, ready to run."""
+    """A FlowSpec lowered onto the iterator runtime, ready to run.
 
-    def __init__(self, spec: FlowSpec, fuse: bool = True):
+    Lowering fallbacks (annotations that cannot apply, degraded inference)
+    surface as structured ``Diagnostic`` objects on ``self.diagnostics`` —
+    the same vocabulary ``FlowSpec.check()`` uses statically.  With
+    ``strict=True`` the static pass runs first (raising ``FlowAnalysisError``
+    before any resource is built) and any error-severity diagnostic emitted
+    during lowering also raises, after tearing the partial flow back down.
+    """
+
+    def __init__(self, spec: FlowSpec, fuse: bool = True, strict: bool = False):
         spec.validate()
+        if strict:
+            from repro.flow.analysis.engine import analyze
+
+            static = analyze(spec)
+            if any(d.is_error for d in static):
+                raise FlowAnalysisError(static, flow=spec.name)
         self.source_spec = spec
         self.spec = fuse_for_each(spec) if fuse else spec
+        self.diagnostics: List[Diagnostic] = []
+        self._diag_logged: set = set()
         self.runtime = FlowRuntime(self.spec)
         self._cache: Dict[str, Any] = {}
         self._annotated_policies: Dict[int, str] = {}
         self._inference_actors: List[Any] = []
         self._weight_sink_regs: List[Any] = []  # (workers, sink) to undo on stop
+        assert self.spec.output is not None  # validate() guarantees it
         inner = self._lower_ref(self.spec.output)
         self._out = self._deferred_start_wrapper(inner)
+        if strict and any(d.is_error for d in self.diagnostics):
+            self.stop()
+            raise FlowAnalysisError(self.diagnostics, flow=spec.name)
 
     # ------------------------------------------------------------- running
     def iterator(self) -> LocalIterator:
@@ -251,6 +272,31 @@ class CompiledFlow:
 
         return LocalIterator(_base, metrics=inner.metrics, name=self.spec.name)
 
+    def _diag(
+        self,
+        severity: str,
+        message: str,
+        node: Optional[str] = None,
+        hint: Optional[str] = None,
+    ) -> Diagnostic:
+        """Record a lowering diagnostic (rule ``lowering-fallback``).
+
+        The one dedup path for every fallback site: each distinct
+        (node, message) logs once per compile — previously each site
+        hand-rolled its own warn-once flag or per-actor dict.
+        """
+        d = Diagnostic(
+            rule="lowering-fallback", severity=severity, message=message,
+            node=node, hint=hint,
+        )
+        self.diagnostics.append(d)
+        key = (node, message)
+        if key not in self._diag_logged:
+            self._diag_logged.add(key)
+            log = logger.error if d.is_error else logger.warning
+            log("flow %s: %s", self.spec.name, d.format())
+        return d
+
     def _lower_ref(self, ref: EdgeRef) -> Any:
         nid, port = ref
         obj = self._lower(nid)
@@ -279,18 +325,25 @@ class CompiledFlow:
         from repro.core.executor import FailurePolicy
 
         FailurePolicy.validate(policy)
+        overridden: List[str] = []
+        prior_policy: Optional[str] = None
         for a in actors:
             prior = self._annotated_policies.get(id(a))
             if prior is not None and prior != policy:
-                logger.warning(
-                    "flow %s: node %s sets failure_policy=%r on actor %s, "
-                    "overriding %r set by another node of this flow — the "
-                    "policy is per-actor, and the last lowered node wins "
-                    "for every stream sharing the pool",
-                    self.spec.name, node.id, policy, getattr(a, "name", a), prior,
-                )
+                overridden.append(getattr(a, "name", repr(a)))
+                prior_policy = prior
             self._annotated_policies[id(a)] = policy
             a.failure_policy = policy
+        if overridden:
+            self._diag(
+                Severity.WARN,
+                f"failure_policy={policy!r} overrides {prior_policy!r} set "
+                f"by another node of this flow on {', '.join(overridden)}; "
+                "the policy is per-actor, and the last lowered node wins "
+                "for every stream sharing the pool",
+                node=node.id,
+                hint="annotate the pool's nodes consistently",
+            )
 
     def _lower_learner_annotations(self, node: Node, fns: Sequence[Callable]) -> None:
         """Lower ``learners(n)``/``microbatch(k)`` onto the node's train stages.
@@ -315,10 +368,13 @@ class CompiledFlow:
                     fn.microbatch = int(k)
                 hit = True
         if not hit:
-            logger.warning(
-                "flow %s: node %s carries learners/microbatch annotations but "
-                "none of its stages accept them (expected a TrainOneStep-like "
-                "operator)", self.spec.name, node.id,
+            self._diag(
+                Severity.ERROR,
+                "learners/microbatch annotations but none of the node's "
+                "stages accept them (expected a TrainOneStep-like operator); "
+                "training stays single-device",
+                node=node.id,
+                hint="attach the annotation to the TrainOneStep stage's node",
             )
 
     def _lower_inference(self, node: Node, workers: Any) -> Optional[List[Any]]:
@@ -340,10 +396,13 @@ class CompiledFlow:
         lw = workers.local_worker()
         policy = getattr(lw, "policy", None)
         if policy is None:
-            logger.warning(
-                "flow %s: node %s requests inference='server' but the local "
-                "worker has no .policy to serve; falling back to local "
-                "inference", self.spec.name, node.id,
+            self._diag(
+                Severity.ERROR,
+                "inference='server' but the local worker has no .policy to "
+                "serve; falling back to local inference",
+                node=node.id,
+                hint="use a worker type exposing .policy, or drop "
+                "inference='server'",
             )
             return None
         num_shards = max(1, len(workers.remote_workers()))
@@ -414,12 +473,14 @@ class CompiledFlow:
         if k == "for_each":
             if isinstance(up, ParallelIterator):
                 if "num_learners" in node.annotations or "microbatch" in node.annotations:
-                    logger.warning(
-                        "flow %s: node %s carries learners/microbatch "
-                        "annotations on a *parallel* for_each; the learner "
-                        "group lowers only onto local train stages — "
-                        "sequence the stream first (gather_sync/...) or the "
-                        "annotations are ignored", self.spec.name, node.id,
+                    self._diag(
+                        Severity.ERROR,
+                        "learners/microbatch annotations on a *parallel* "
+                        "for_each; the learner group lowers only onto local "
+                        "train stages, so the annotations are ignored",
+                        node=node.id,
+                        hint="sequence the stream first "
+                        "(gather_sync/gather_async/batch_across_shards)",
                     )
                 # Parallel stages keep ParallelIterator's own per-shard
                 # cloning; apply each stage separately, uninstantiated.

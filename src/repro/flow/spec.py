@@ -557,6 +557,20 @@ class FlowSpec:
             if name not in self.resources:
                 raise ValueError(f"flow {self.name!r}: undeclared resource {name!r}")
 
+    def check(self, rules: Any = None) -> List[Any]:
+        """Static analysis (flowcheck): run the rule set, return diagnostics.
+
+        Unlike ``validate()`` — which raises on the three structural
+        invariants lowering cannot survive — ``check()`` never raises on
+        account of the graph: it returns the full ``Diagnostic`` list
+        (credit deadlocks, unbounded queues, annotations that cannot lower,
+        ... — see ``docs/flowcheck.md``), sorted errors-first.  Gate on it
+        with ``compile(strict=True)`` or ``scripts/flowcheck.py``.
+        """
+        from repro.flow.analysis.engine import analyze
+
+        return analyze(self, rules=rules)
+
     def _referenced_resources(self) -> List[str]:
         return [
             n.params["resource"] for n in self.nodes.values() if n.kind in ("enqueue", "dequeue")
@@ -579,11 +593,14 @@ class FlowSpec:
         out._ids = self._ids
         return out
 
-    def compile(self, fuse: bool = True) -> Any:
-        """Lower onto the iterator runtime; see ``repro.flow.compile``."""
+    def compile(self, fuse: bool = True, strict: bool = False) -> Any:
+        """Lower onto the iterator runtime; see ``repro.flow.compile``.
+
+        ``strict=True`` runs ``check()`` first and refuses to build anything
+        when the graph carries error-severity diagnostics."""
         from repro.flow.compile import CompiledFlow
 
-        return CompiledFlow(self, fuse=fuse)
+        return CompiledFlow(self, fuse=fuse, strict=strict)
 
     # -------------------------------------------------------------- DOT
     def to_dot(self, metrics: Any = None) -> str:

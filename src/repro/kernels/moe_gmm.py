@@ -11,7 +11,6 @@ Grid: (num_row_tiles, F // block_n).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

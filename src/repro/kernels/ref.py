@@ -162,9 +162,7 @@ def moe_gmm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array
     Equivalent dense form: each row multiplied by its group's weight.
     """
     T = x.shape[0]
-    E = w.shape[0]
     ends = jnp.cumsum(group_sizes)
-    starts = ends - group_sizes
     row = jnp.arange(T)
     # expert id per row from group sizes
     eid = jnp.sum(row[:, None] >= ends[None, :], axis=-1)

@@ -19,21 +19,19 @@ Usage:
 """
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
 import traceback
 from typing import Any, Dict, Optional
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config
-from repro.distributed.hlo_analysis import HW_V5E, roofline
+from repro.distributed.hlo_analysis import roofline
 from repro.distributed.hlo_cost import analyze_hlo
-from repro.distributed.sharding import AxisRules, DEFAULT_RULES, axis_rules_context
+from repro.distributed.sharding import DEFAULT_RULES, AxisRules, axis_rules_context
 from repro.distributed.specs import (
     batch_specs,
     cache_specs,

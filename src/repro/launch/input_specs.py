@@ -7,7 +7,7 @@ shape trees via ``jax.eval_shape``.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

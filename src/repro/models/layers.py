@@ -11,12 +11,12 @@ dry-runs.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MLAConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.distributed import shard
 
 PyTree = Any

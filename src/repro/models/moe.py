@@ -16,12 +16,12 @@ semantics); shared experts (DeepSeek) run densely.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, MoEConfig
+from repro.configs.base import ModelConfig
 from repro.distributed import shard
 from repro.models.layers import dense_init
 

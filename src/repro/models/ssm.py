@@ -8,7 +8,7 @@ the decode state is carried exactly like env state in a rollout actor
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +111,6 @@ def rwkv6_decode(
     B = x.shape[0]
     d = cfg.d_model
     s = cfg.ssm
-    H = d // s.head_dim
     x_prev = state["x_prev"][:, None, :]
     r, k, v, g, w = _rwkv6_streams(params, x, x_prev, cfg)
     r1, k1, v1, w1 = (z[:, 0].astype(jnp.float32) for z in (r, k, v, w))
@@ -218,7 +217,6 @@ def mamba_decode(
 ) -> Tuple[jax.Array, PyTree]:
     """One-token decode. x: [B,1,d]."""
     s = cfg.ssm
-    B = x.shape[0]
     d_in = s.expand * cfg.d_model
     xz = x @ params["in_proj"]
     xc, z = xz[..., :d_in], xz[..., d_in:]

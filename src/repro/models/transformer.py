@@ -14,7 +14,6 @@ Step builders (``make_train_step`` / ``make_prefill_step`` /
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -351,7 +350,7 @@ class Model:
 
 # ------------------------------------------------- prefill cache builders
 def _prefill_attn_cache(ap: PyTree, h: jax.Array, cfg: ModelConfig, W: int, positions: jax.Array):
-    from repro.models.layers import _mla_qkv_train, _project_qkv
+    from repro.models.layers import _project_qkv
 
     B, S, _ = h.shape
     if cfg.mla is not None:

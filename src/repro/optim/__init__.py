@@ -3,8 +3,8 @@ from repro.optim.optimizers import (
     adam,
     adamw,
     chain_clip_by_global_norm,
-    cosine_schedule,
     constant_schedule,
+    cosine_schedule,
     linear_warmup_cosine,
     sgd,
 )

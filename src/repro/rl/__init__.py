@@ -13,14 +13,14 @@ from repro.rl.inference import (
     InferenceClient,
     InferenceUnavailable,
 )
+from repro.rl.learner_group import ShardedLearnerGroup
+from repro.rl.model_based import ModelBasedWorker
 from repro.rl.policy import (
     ActorCriticPolicy,
     DQNPolicy,
     DummyPolicy,
     SACPolicy,
 )
-from repro.rl.learner_group import ShardedLearnerGroup
-from repro.rl.model_based import ModelBasedWorker
 from repro.rl.replay import ReplayBuffer
 from repro.rl.rollout_worker import (
     MultiAgentRolloutWorker,

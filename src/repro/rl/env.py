@@ -12,9 +12,7 @@ Auto-reset on done (standard vectorized-env semantics).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import random
 import time
-from typing import Any, Dict, Iterator, List
+from typing import Any, Dict, Iterator
 
 from repro.core.actor import ActorPool, wait
 from repro.core.metrics import TimerStat

@@ -16,13 +16,13 @@ This worker extends RolloutWorker with a probabilistic dynamics ensemble
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim import Optimizer, adam
+from repro.optim import adam
 from repro.rl.advantages import gae
 from repro.rl.policy import mlp_apply, mlp_init
 from repro.rl.rollout_worker import RolloutWorker, _to_numpy_batch

@@ -8,8 +8,7 @@ while swapping the distributed execution layer.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,8 @@ learn_on_batch / update_target).
 from __future__ import annotations
 
 import functools
-import threading
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,6 @@ import numpy as np
 from repro.kernels.ops import fused_gae as gae
 from repro.optim import Optimizer, adam
 from repro.rl.env import Env, VectorEnv, VectorEnvState
-from repro.rl.policy import ActorCriticPolicy, DQNPolicy, SACPolicy
 from repro.rl.sample_batch import MultiAgentBatch, SampleBatch
 
 PyTree = Any

@@ -9,15 +9,14 @@ heads.  Drop-in replacement for ActorCriticPolicy in any plan.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.models.layers import attention_init, attention_apply, mlp_apply, mlp_init, rms_norm
-from repro.rl.policy import mlp_init as head_init, mlp_apply as head_apply
+from repro.models.layers import attention_apply, attention_init, mlp_apply, mlp_init, rms_norm
+from repro.rl.policy import mlp_apply as head_apply, mlp_init as head_init
 
 PyTree = Any
 

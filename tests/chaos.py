@@ -182,7 +182,7 @@ class StubWorker:
     Every output is a pure function of (worker index, per-method call
     count), so the thread/process backend matrix can assert *exact* equality
     of streams, and chaos tests can tell exactly which worker produced an
-    item (``obs // 10_000``).
+    item (``obs // 10_000_000``).
     """
 
     def __init__(self, index: int = 0, batch_size: int = 8):
@@ -196,7 +196,10 @@ class StubWorker:
     # ------------------------------------------------------------- sampling
     def sample(self) -> SampleBatch:
         self._n_samples += 1
-        base = self.index * 10_000 + self._n_samples * 100
+        # 10_000_000 leaves ~100k samples of headroom before the call counter
+        # would bleed into the worker-index field (free-running workers in the
+        # supervision tests can clear 100 samples while a peer restarts).
+        base = self.index * 10_000_000 + self._n_samples * 100
         obs = np.arange(self.batch_size, dtype=np.float64) + base
         return SampleBatch(
             {
@@ -243,4 +246,4 @@ def make_stub_worker(index: int) -> StubWorker:
 
 def expected_obs_base(index: int, nth_sample: int) -> int:
     """The obs offset StubWorker.sample() produces for a given call."""
-    return index * 10_000 + nth_sample * 100
+    return index * 10_000_000 + nth_sample * 100

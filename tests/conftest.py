@@ -13,6 +13,12 @@
 
 * ``backend_matrix`` params — the executor/chaos/transport suites share one
   backend axis: thread, process+pickle-pipe, process+shared-memory.
+
+* shm lease sanitizer — with ``TRANSPORT_SANITIZE=1`` in the environment,
+  every test runs inside a sanitizer epoch: the transport's lease
+  acquire/release ledger starts clean, and teardown fails the test on any
+  double-released lease, lease still live after GC, or ``/dev/shm`` segment
+  the test left behind (see ``repro.core.transport.SANITIZER``).
 """
 
 from __future__ import annotations
@@ -92,6 +98,20 @@ class DeterministicClock:
 @pytest.fixture
 def deterministic_clock(request) -> DeterministicClock:
     return DeterministicClock(seed=zlib.crc32(request.node.nodeid.encode()) & 0xFFFF)
+
+
+# ------------------------------------------------------- lease sanitizer
+@pytest.fixture(autouse=True)
+def _shm_lease_sanitizer(request):
+    """Per-test lease-sanitizer epoch, active under TRANSPORT_SANITIZE=1."""
+    from repro.core.transport import SANITIZER, sanitize_enabled
+
+    if not sanitize_enabled():
+        yield
+        return
+    SANITIZER.begin_epoch(request.node.nodeid)
+    yield
+    SANITIZER.end_epoch()
 
 
 # ------------------------------------------------------- backend matrix

@@ -13,7 +13,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker, ShardedLearnerGroup
 

@@ -11,7 +11,6 @@ sidecar, so a restored Algorithm's next rollout is *bit-identical* to what
 the original would have sampled."""
 
 import numpy as np
-import pytest
 
 import repro.flow as flow
 from repro.core.actor import ActorPool
@@ -91,7 +90,6 @@ def test_save_restore_mid_stream_resumes_identically(tmp_path):
     # ... identical weights on local AND remote workers.
     import jax
 
-    w_saved = jax.tree_util.tree_leaves(ws.local_worker().get_weights())
     algo.restore(path)  # rewind the original too, for an apples-to-apples check
     w1 = jax.tree_util.tree_leaves(ws.local_worker().get_weights())
     w2 = jax.tree_util.tree_leaves(ws2.local_worker().get_weights())

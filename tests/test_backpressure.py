@@ -15,7 +15,7 @@ import pytest
 
 import chaos
 import repro.flow as flow
-from repro.core import Concurrently, CreditPool, Dequeue, Enqueue, WorkerSet
+from repro.core import CreditPool, Enqueue, WorkerSet
 from repro.core.concurrency import OverflowPolicy
 from repro.core.iterators import from_iterators
 from repro.core.metrics import (
@@ -26,7 +26,6 @@ from repro.core.metrics import (
     MetricsContext,
     set_metrics_for_thread,
 )
-from repro.core.operators import ParallelRollouts
 from repro.flow.spec import FlowSpec
 from repro.rl.replay import ReplayBuffer
 from repro.rl.sample_batch import SampleBatch

@@ -14,12 +14,7 @@ import chaos
 import repro.flow as flow
 from conftest import BACKEND_MATRIX, make_backend
 from repro.core import WorkerSet
-from repro.core.metrics import (
-    NUM_SHARDS_DROPPED,
-    NUM_WORKER_FAILURES,
-    MetricsContext,
-    set_metrics_for_thread,
-)
+from repro.core.metrics import NUM_SHARDS_DROPPED, NUM_WORKER_FAILURES
 from repro.core.operators import ParallelRollouts, TrainOneStep
 from repro.flow.spec import FlowSpec
 
@@ -144,7 +139,7 @@ def test_hang_does_not_block_async_gather():
         got = it.take(10)
         assert time.time() - t0 < 10.0, "hung worker stalled the stream"
         # Worker 2 supplied the tail while worker 1 hung.
-        tail_workers = {int(np.asarray(b["obs"])[0]) // 10_000 for b in got[-6:]}
+        tail_workers = {int(np.asarray(b["obs"])[0]) // 10_000_000 for b in got[-6:]}
         assert tail_workers == {2}
     finally:
         release.set()  # let the hung mailbox thread unwind
@@ -169,7 +164,9 @@ def test_slow_worker_is_deterministic_and_stream_completes():
 
     first, second = run(), run()
     assert first == second
-    assert first == [10100, 20100, 10200, 20200, 10300, 20300, 10400, 20400]
+    assert first == [
+        chaos.expected_obs_base(w, n) for n in (1, 2, 3, 4) for w in (1, 2)
+    ]
 
 
 def test_injector_transparent_without_faults():

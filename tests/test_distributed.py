@@ -10,8 +10,8 @@ from repro.checkpoint import restore_pytree, save_pytree
 from repro.configs import INPUT_SHAPES, get_config, reduced_config
 from repro.data import TokenPipeline, make_batch
 from repro.distributed.hlo_cost import analyze_hlo
-from repro.distributed.sharding import AxisRules, DEFAULT_RULES
-from repro.distributed.specs import batch_specs, opt_state_specs, param_specs
+from repro.distributed.sharding import DEFAULT_RULES, AxisRules
+from repro.distributed.specs import param_specs
 from repro.launch.input_specs import decode_window_for, input_specs
 from repro.launch.mesh import make_local_mesh
 
@@ -127,7 +127,6 @@ def test_hlo_cost_walker_scan_trip_count():
 def test_local_mesh_train_step_runs():
     """End-to-end: reduced model under a real (1,1) mesh with shardings."""
     from repro.distributed.sharding import axis_rules_context
-    from repro.distributed.specs import tree_shardings
     from repro.models import Model, make_train_step
     from repro.optim import adam
 

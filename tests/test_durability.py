@@ -9,9 +9,7 @@ cheaply from the last checkpoint.
 
 import os
 
-import jax
 import numpy as np
-import pytest
 
 from repro.checkpoint import restore_pytree, save_pytree
 from repro.configs import reduced_config
@@ -67,7 +65,6 @@ def test_replay_state_is_discardable():
     ws = c.WorkerSet.create(mk, 1)
     rp = ActorPool.from_targets([ReplayBuffer(capacity=1024, sample_batch_size=16, learning_starts=32)])
     c.dqn_plan(ws, rp, target_update_freq=64).take(3)
-    weights_before = ws.local_worker().get_weights()
     rp.stop()
     # "failure": fresh replay actors, same workers/params
     rp2 = ActorPool.from_targets([ReplayBuffer(capacity=1024, sample_batch_size=16, learning_starts=32)])

@@ -11,7 +11,6 @@ import numpy as np
 import pytest
 
 import chaos
-import repro.core as c
 from conftest import BACKEND_MATRIX, make_backend
 from repro.core import (
     ActorDiedError,
@@ -50,7 +49,7 @@ def obs_bases(batches):
     out = []
     for b in batches:
         first = int(np.asarray(b["obs"])[0])
-        out.append((first // 10_000, (first % 10_000) // 100))
+        out.append((first // 10_000_000, (first % 10_000_000) // 100))
     return out
 
 

@@ -10,15 +10,7 @@ import repro.flow as flow
 from repro.core.actor import ActorPool
 from repro.core.iterators import NextValueNotReady
 from repro.core.workers import WorkerSet
-from repro.rl import (
-    ActorCriticPolicy,
-    CartPole,
-    DQNPolicy,
-    MultiAgentCartPole,
-    MultiAgentRolloutWorker,
-    ReplayBuffer,
-    RolloutWorker,
-)
+from repro.rl import ActorCriticPolicy, CartPole, DQNPolicy, ReplayBuffer, RolloutWorker
 
 
 def pg_ws(algo="pg", n=2, rollout_len=8):

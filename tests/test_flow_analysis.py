@@ -1,0 +1,645 @@
+"""flowcheck: the static-analysis pass (ISSUE 6) and the shm-lease sanitizer.
+
+One positive (rule fires, with node anchor + fix hint) and one negative
+(clean graph stays clean) case per built-in rule; a property test that the
+analyzer never crashes on arbitrary annotated specs; the regression gate
+that all committed plan builders are error-clean; and unit tests for the
+``TRANSPORT_SANITIZE=1`` lease sanitizer that the autouse conftest fixture
+drives across the whole suite.
+"""
+
+import gc
+import json
+import os
+import pickle
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.transport import SANITIZER, ShmLeaseViolation, sanitize_enabled
+from repro.flow.analysis import (
+    RULES,
+    Diagnostic,
+    FlowAnalysisError,
+    Severity,
+    analyze,
+    audit_plans,
+)
+from repro.flow.spec import FlowSpec, ResourceRef
+
+REPO = Path(__file__).resolve().parents[1]
+
+EXPECTED_RULES = {
+    "graph-structure",
+    "credit-deadlock",
+    "unbounded-queue",
+    "annotation-lowering",
+    "pickle-safety",
+    "resource-oversubscription",
+    "determinism-hazard",
+}
+
+
+# --------------------------------------------------------------- fakes
+class FakeActor:
+    def __init__(self, name, backend="thread"):
+        self.name = name
+        self.backend_name = backend
+
+
+class FakeLocalWorker:
+    def __init__(self, policy="policy"):
+        self.policy = policy
+
+
+class FakePool:
+    """Duck-typed WorkerSet: just enough surface for GraphView introspection."""
+
+    def __init__(self, n=2, backend="thread", local=None):
+        self._actors = [FakeActor(f"rollout-{i + 1}", backend) for i in range(n)]
+        self._local = local
+
+    def remote_workers(self):
+        return list(self._actors)
+
+    def local_worker(self):
+        return self._local
+
+
+def _identity(x):
+    return x
+
+
+def _uses_stdlib_random(batch):
+    return random.random()
+
+
+# Built in an isolated namespace: the rule resolves the name `random`
+# through the stage's __globals__, and this test module's own
+# `import random` (for the stdlib case above) would otherwise shadow the
+# np.random classification.
+_NP_NS = {"np": np}
+exec("def _uses_np_random(batch):\n    return np.random.rand(2)\n", _NP_NS)
+_uses_np_random = _NP_NS["_uses_np_random"]
+
+
+class _TrainStage:
+    """A TrainOneStep-shaped stage: accepts the learner-group knobs."""
+
+    num_learners = 1
+    microbatch = 1
+
+    def __call__(self, batch):
+        return batch
+
+
+def by_rule(diags, name):
+    return [d for d in diags if d.rule == name]
+
+
+# ---------------------------------------------------------- registry
+def test_builtin_rule_registry():
+    analyze(FlowSpec("touch"))  # import side effect registers the builtins
+    assert EXPECTED_RULES <= set(RULES)
+    for r in RULES.values():
+        assert r.name and r.description
+
+
+# ----------------------------------------------------- graph-structure
+def test_graph_structure_flags_missing_output_and_double_consumption():
+    spec = FlowSpec("broken")
+    s = spec.from_items([1, 2, 3])
+    s.for_each(_identity)
+    s.for_each(_identity)  # second consumer of the same edge
+    diags = by_rule(analyze(spec), "graph-structure")
+    messages = [d.message for d in diags]
+    assert any("no output set" in m for m in messages)
+    dup = [d for d in diags if "consumed 2 times" in d.message]
+    assert dup and dup[0].is_error
+    assert dup[0].node == s.node_id and dup[0].edge == s.ref
+    assert "duplicate" in dup[0].hint
+
+
+def test_graph_structure_flags_resource_wiring():
+    spec = FlowSpec("wiring")
+    spec.learner_thread(FakePool(), name="idle")  # declared, never wired
+    out = spec.from_items([1]).enqueue(ResourceRef(spec, "ghost"))  # undeclared
+    spec.set_output(out)
+    diags = by_rule(analyze(spec), "graph-structure")
+    ghost = [d for d in diags if "'ghost'" in d.message]
+    assert ghost and ghost[0].is_error and ghost[0].hint
+    idle = [d for d in diags if "'idle'" in d.message]
+    assert idle and idle[0].severity == Severity.WARN and "wire it" in idle[0].hint
+
+
+def test_graph_structure_flags_dead_duplicate_port():
+    spec = FlowSpec("dead-port")
+    live, dead = spec.from_items([1]).duplicate(2)
+    spec.set_output(live.for_each(_identity))
+    diags = by_rule(analyze(spec), "graph-structure")
+    [d] = [d for d in diags if "never consumed" in d.message]
+    assert d.severity == Severity.WARN
+    assert d.node == dead.node_id and d.edge == dead.ref and d.hint
+
+
+def test_clean_spec_analyzes_clean():
+    spec = FlowSpec("clean")
+    spec.set_output(spec.from_items([1, 2]).for_each(_identity).report())
+    assert analyze(spec) == []
+
+
+# ----------------------------------------------------- credit-deadlock
+def test_credit_deadlock_blocking_enqueue_without_dequeue():
+    spec = FlowSpec("wedge")
+    lt = spec.learner_thread(FakePool(), out_policy="block")
+    enq = spec.from_items([1], repeat=True).enqueue(lt)  # block=True default
+    spec.set_output(enq)
+    [d] = by_rule(analyze(spec), "credit-deadlock")
+    assert d.is_error and d.node == enq.node_id
+    assert "no dequeue node drains" in d.message
+    assert "spec.dequeue" in d.hint
+
+
+def test_credit_deadlock_round_robin_union_owns_both_sides():
+    spec = FlowSpec("rr-cycle")
+    lt = spec.learner_thread(FakePool(), out_policy="block")
+    enq = spec.from_items([1], repeat=True).enqueue(lt)
+    deq = spec.dequeue(lt)
+    union = spec.concurrently([enq, deq], mode="round_robin")
+    spec.set_output(union)
+    [d] = by_rule(analyze(spec), "credit-deadlock")
+    assert d.is_error and d.node == union.node_id
+    assert "round_robin union" in d.message and "concurrently(mode='async')" in d.hint
+
+
+def test_credit_deadlock_warns_on_starved_credit_window():
+    spec = FlowSpec("starved")
+    s = spec.rollouts(FakePool(n=4), mode="async", credits=2)
+    spec.set_output(s.for_each(_identity))
+    [d] = by_rule(analyze(spec), "credit-deadlock")
+    assert d.severity == Severity.WARN and d.node == s.node_id
+    assert "credits=2 is below the 4-shard pool" in d.message
+    assert ">= 4" in d.hint
+
+
+def test_credit_deadlock_quiet_when_cycle_is_drainable():
+    spec = FlowSpec("drains")
+    lt = spec.learner_thread(FakePool())  # default out_policy drops, never wedges
+    enq = spec.rollouts(FakePool(n=2), mode="async", credits=2).enqueue(lt)
+    deq = spec.dequeue(lt)
+    spec.set_output(spec.concurrently([enq, deq], mode="round_robin"))
+    assert by_rule(analyze(spec), "credit-deadlock") == []
+
+
+# ----------------------------------------------------- unbounded-queue
+def test_unbounded_queue_flags_creditless_async_feed():
+    spec = FlowSpec("unbounded")
+    lt = spec.learner_thread(FakePool())
+    enq = spec.rollouts(FakePool(), mode="async").enqueue(lt)
+    spec.set_output(spec.concurrently([enq, spec.dequeue(lt)]))
+    [d] = by_rule(analyze(spec), "unbounded-queue")
+    assert d.severity == Severity.WARN and d.node == enq.node_id
+    assert "no credit bound" in d.message and "credits=" in d.hint
+
+
+def test_unbounded_queue_quiet_with_credit_bound_or_sync_feed():
+    spec = FlowSpec("bounded")
+    lt = spec.learner_thread(FakePool())
+    enq = spec.rollouts(FakePool(n=2), mode="async", credits=4).enqueue(lt)
+    sync_enq = spec.rollouts(FakePool(n=2)).enqueue(lt)  # bulk_sync: bounded
+    spec.set_output(spec.concurrently([enq, sync_enq, spec.dequeue(lt)]))
+    assert by_rule(analyze(spec), "unbounded-queue") == []
+
+
+def test_unbounded_queue_flags_duplicate_into_async_union():
+    spec = FlowSpec("dup-async")
+    a, b = spec.from_items([1], repeat=True).duplicate(2)
+    union = spec.concurrently([a.for_each(_identity), b], mode="async")
+    spec.set_output(union)
+    [d] = by_rule(analyze(spec), "unbounded-queue")
+    assert d.severity == Severity.WARN
+    assert d.node == a.node_id and "grows without bound" in d.message
+    assert "round_robin" in d.hint
+
+
+# ------------------------------------------------- annotation-lowering
+def test_annotation_lowering_flags_misplaced_and_invalid_knobs():
+    spec = FlowSpec("bad-annotations")
+    s = spec.from_items([1]).for_each(_identity)
+    s.annotate(overflow_policy="block", credits=4)  # neither lowers here
+    out = s.enqueue(spec.learner_thread(FakePool()))
+    out.annotate(overflow_policy="bogus")
+    spec.set_output(out)
+    diags = by_rule(analyze(spec), "annotation-lowering")
+    assert all(d.is_error and d.hint for d in diags)
+    anchored = {d.node for d in diags}
+    assert {s.node_id, out.node_id} == anchored
+    assert any("only enqueue nodes lower it" in d.message for d in diags)
+    assert any("only gather_async/rollouts/replay" in d.message for d in diags)
+    assert any("unknown overflow_policy 'bogus'" in d.message for d in diags)
+
+
+def test_annotation_lowering_flags_failure_policy_misuse_and_conflict():
+    pool = FakePool(n=2)
+    spec = FlowSpec("fp")
+    a = spec.rollouts(pool, failure_policy="restart")
+    b = spec.rollouts(pool, failure_policy="drop_shard")  # same pool, conflicts
+    mid = spec.from_items([1]).annotate(failure_policy="restart")  # not a source
+    bad = spec.rollouts(FakePool()).annotate(failure_policy="explode")
+    spec.set_output(spec.concurrently([a, b, mid, bad]))
+    diags = by_rule(analyze(spec), "annotation-lowering")
+    conflict = [d for d in diags if "conflicts with" in d.message]
+    assert conflict and conflict[0].severity == Severity.WARN
+    assert conflict[0].node == b.node_id and a.node_id in conflict[0].message
+    assert any(d.node == mid.node_id and "source actors only" in d.message for d in diags)
+    assert any(d.node == bad.node_id and "unknown failure_policy" in d.message for d in diags)
+
+
+def test_annotation_lowering_learner_knobs():
+    spec = FlowSpec("learners")
+    incapable = spec.from_items([1]).for_each(_identity).learners(2)
+    capable = spec.from_items([2]).for_each(_TrainStage()).learners(2).microbatch(2)
+    spec.set_output(spec.concurrently([incapable, capable]))
+    diags = by_rule(analyze(spec), "annotation-lowering")
+    [d] = diags
+    assert d.is_error and d.node == incapable.node_id
+    assert "no stage of this node accepts" in d.message
+    assert "TrainOneStep" in d.hint
+
+
+def test_annotation_lowering_ctx_stage_is_info_not_error():
+    spec = FlowSpec("ctx")
+    s = spec.from_items([1]).for_each_ctx(lambda rt: _identity, "TrainCtx").learners(2)
+    spec.set_output(s)
+    [d] = by_rule(analyze(spec), "annotation-lowering")
+    assert d.severity == Severity.INFO and d.node == s.node_id
+
+
+def test_annotation_lowering_vector_knobs():
+    spec = FlowSpec("vector")
+    misplaced = spec.from_items([1]).annotate(vector=4)
+    bad_mode = spec.rollouts(FakePool()).annotate(inference="remote")
+    no_policy = spec.rollouts(
+        FakePool(local=FakeLocalWorker(policy=None)), inference="server"
+    )
+    spec.set_output(spec.concurrently([misplaced, bad_mode, no_policy]))
+    diags = by_rule(analyze(spec), "annotation-lowering")
+    assert all(d.is_error for d in diags)
+    assert any(d.node == misplaced.node_id and "rollouts/" in d.message for d in diags)
+    assert any(d.node == bad_mode.node_id and "unknown inference mode" in d.message for d in diags)
+    assert any(d.node == no_policy.node_id and "no .policy to" in d.message for d in diags)
+
+
+# -------------------------------------------------------- pickle-safety
+def test_pickle_safety_server_inference_on_process_workers():
+    spec = FlowSpec("proc-server")
+    s = spec.rollouts(
+        FakePool(backend="process", local=FakeLocalWorker()), inference="server"
+    )
+    spec.set_output(s)
+    [d] = by_rule(analyze(spec), "pickle-safety")
+    assert d.severity == Severity.WARN and d.node == s.node_id
+    assert "pickle" in d.message
+    assert "thread-backend" in d.hint
+
+
+def test_pickle_safety_unpicklable_parallel_stage_and_pull_fn():
+    spec = FlowSpec("proc-stages")
+    stage = (
+        spec.rollouts(FakePool(backend="process"), mode="raw")
+        .for_each(lambda b: b)  # lambdas do not pickle
+        .gather_sync()
+    )
+    par = spec.par_source(FakePool(backend="process"), pull_fn=lambda a: a)
+    spec.set_output(spec.concurrently([stage, par.gather_sync()]))
+    diags = by_rule(analyze(spec), "pickle-safety")
+    warn = [d for d in diags if d.severity == Severity.WARN]
+    info = [d for d in diags if d.severity == Severity.INFO]
+    assert warn and "cannot be cloned per shard" in warn[0].message and warn[0].hint
+    assert info and info[0].node == par.node_id and "driver-side" in info[0].message
+
+
+def test_pickle_safety_quiet_on_thread_backends():
+    spec = FlowSpec("threads")
+    s = (
+        spec.rollouts(FakePool(local=FakeLocalWorker()), mode="raw")
+        .for_each(lambda b: b)
+        .gather_sync()
+    )
+    spec.set_output(s)
+    assert by_rule(analyze(spec), "pickle-safety") == []
+
+
+# --------------------------------------- resource-oversubscription
+def test_oversubscription_flags_learners_beyond_devices():
+    spec = FlowSpec("too-many-learners")
+    s = spec.from_items([1]).for_each(_TrainStage()).learners(999)
+    spec.learner_thread(FakePool(), name="lt", num_learners=999)
+    spec.set_output(s.enqueue(ResourceRef(spec, "lt")))
+    diags = by_rule(analyze(spec), "resource-oversubscription")
+    assert len(diags) == 2 and all(d.is_error for d in diags)
+    assert any(d.node == s.node_id for d in diags)
+    assert all("XLA_FLAGS" in d.hint for d in diags)
+
+
+def test_oversubscription_warns_on_cpu_demand():
+    ncpu = os.cpu_count()
+    spec = FlowSpec("cpu-hungry")
+    s = spec.rollouts(FakePool(n=4), resources={"num_cpus": ncpu})
+    spec.set_output(s)
+    [d] = by_rule(analyze(spec), "resource-oversubscription")
+    assert d.severity == Severity.WARN and d.node == s.node_id
+    assert d.details == {"declared": 4 * ncpu, "available": ncpu}
+
+
+def test_oversubscription_quiet_within_budget():
+    spec = FlowSpec("fits")
+    s = spec.from_items([1]).for_each(_TrainStage()).learners(1)
+    spec.set_output(s)
+    assert by_rule(analyze(spec), "resource-oversubscription") == []
+
+
+# ------------------------------------------------- determinism-hazard
+def test_determinism_hazard_flags_ambient_rng():
+    spec = FlowSpec("rng")
+    a = spec.from_items([1]).for_each(_uses_stdlib_random)
+    b = spec.from_items([2]).filter(_uses_np_random)
+    spec.set_output(spec.concurrently([a, b]))
+    diags = by_rule(analyze(spec), "determinism-hazard")
+    assert {d.node for d in diags} == {a.node_id, b.node_id}
+    assert all(d.severity == Severity.WARN and "seeded" in d.hint for d in diags)
+    assert any("stdlib `random`" in d.message for d in diags)
+    assert any("np.random" in d.message for d in diags)
+
+
+def test_determinism_hazard_quiet_on_seeded_stages():
+    # The idiom the hint recommends: thread an explicit Generator through
+    # the stage (here via closure) so its body never names `random` at all.
+    rng = np.random.default_rng(0)
+
+    def seeded(batch):
+        return rng.integers(0, 2)
+
+    spec = FlowSpec("seeded")
+    spec.set_output(spec.from_items([1]).for_each(seeded))
+    assert by_rule(analyze(spec), "determinism-hazard") == []
+
+
+# ------------------------------------------------------ engine plumbing
+def test_crashing_rule_surfaces_as_analyzer_internal():
+    from repro.flow.analysis import rule
+
+    @rule("crashing-rule", "always explodes (test)")
+    def _crash(view):
+        raise RuntimeError("boom")
+
+    try:
+        spec = FlowSpec("crash")
+        spec.set_output(spec.from_items([1]))
+        [d] = analyze(spec, rules=["crashing-rule"])
+        assert d.rule == "analyzer-internal" and d.is_error
+        assert "'crashing-rule' crashed" in d.message
+    finally:
+        del RULES["crashing-rule"]
+
+
+def test_spec_check_matches_analyze_and_orders_by_severity():
+    spec = FlowSpec("ordering")
+    s = spec.from_items([1]).for_each(_uses_stdlib_random)
+    s.annotate(credits="nope")
+    spec.set_output(s)
+    diags = spec.check()
+    assert diags == analyze(spec)
+    ranks = [Severity.rank(d.severity) for d in diags]
+    assert ranks == sorted(ranks) and ranks[0] == Severity.rank(Severity.ERROR)
+
+
+def test_diagnostic_format_and_json_roundtrip():
+    d = Diagnostic(
+        "credit-deadlock", Severity.ERROR, "msg", node="n1_enqueue",
+        edge=("n0_rollouts", 0), hint="fix it", details={"k": 1},
+    )
+    text = d.format()
+    assert "error[credit-deadlock]" in text and "n1_enqueue" in text
+    assert "hint: fix it" in text
+    js = d.to_json()
+    assert js["rule"] == "credit-deadlock" and js["edge"] == ["n0_rollouts", 0]
+    assert json.loads(json.dumps(js)) == js
+
+
+# ------------------------------------- property: the analyzer never crashes
+def test_analyzer_never_crashes_on_arbitrary_annotations():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    WEIRD = [
+        {}, {"credits": -1}, {"credits": "many"}, {"overflow_policy": "bogus"},
+        {"num_learners": 0}, {"microbatch": "k"}, {"failure_policy": "explode"},
+        {"vector": "wide"}, {"inference": 17}, {"inference_credits": 0},
+        {"resources": {"num_cpus": 10**6}},
+    ]
+
+    @hypothesis.given(st.data())
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def run(data):
+        spec = FlowSpec("prop")
+        s = spec.from_items(list(range(1 + data.draw(st.integers(0, 2)))))
+        for _ in range(data.draw(st.integers(0, 3))):
+            op = data.draw(st.sampled_from(["for_each", "filter", "annotate"]))
+            if op == "for_each":
+                s = s.for_each(_identity)
+            elif op == "filter":
+                s = s.filter(_identity)
+            else:
+                s.annotate(**data.draw(st.sampled_from(WEIRD)))
+        if data.draw(st.booleans()):
+            spec.set_output(s)
+        diags = analyze(spec)
+        assert all(isinstance(d, Diagnostic) for d in diags)
+        assert not [d for d in diags if d.rule == "analyzer-internal"]
+
+    run()
+
+
+# ---------------------------------------------- the committed plans gate
+@pytest.mark.timeout(300)
+def test_all_committed_plans_are_error_clean():
+    """The regression behind ``scripts/flowcheck.py --all-plans`` in CI."""
+    from repro.flow.plans import PLAN_BUILDERS
+
+    results = audit_plans()
+    assert set(results) == set(PLAN_BUILDERS)
+    errors = {
+        name: [d.format() for d in ds if d.is_error]
+        for name, ds in results.items()
+        if any(d.is_error for d in ds)
+    }
+    assert errors == {}
+    # The three known warns are real findings (blocking learner feeds with
+    # credit-unbounded async windows) and double as the docs' example output;
+    # pin them so the rule keeps firing on real plans.
+    for plan in ("apex", "appo", "impala"):
+        assert [d.rule for d in results[plan]] == ["unbounded-queue"], plan
+
+
+def test_flowcheck_cli_json_output():
+    proc = subprocess.run(
+        [sys.executable, "scripts/flowcheck.py", "--plan", "a2c", "--json"],
+        cwd=REPO, capture_output=True, text=True, timeout=240,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert set(doc["plans"]) == {"a2c"} and doc["failing"] == 0
+    assert doc["floor"] == Severity.ERROR
+
+
+# --------------------------------------------- strict compile + promotion
+@pytest.fixture(scope="module")
+def pg_workers():
+    from repro.core.workers import WorkerSet
+    from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
+
+    def mk(i):
+        return RolloutWorker(
+            CartPole(), ActorCriticPolicy(4, 2), algo="pg",
+            num_envs=2, rollout_len=8, seed=0, worker_index=i,
+        )
+
+    ws = WorkerSet.create(mk, 2)
+    yield ws
+    ws.stop()
+
+
+def test_strict_compile_rejects_error_diagnostics(pg_workers):
+    spec = FlowSpec("strict-static")
+    s = spec.rollouts(pg_workers).for_each(_identity)
+    s.annotate(credits=3)  # cannot lower on a for_each: error severity
+    spec.set_output(s)
+    with pytest.raises(FlowAnalysisError) as ei:
+        spec.compile(strict=True)
+    assert any(d.rule == "annotation-lowering" for d in ei.value.diagnostics)
+
+
+def test_lowering_fallbacks_promote_to_diagnostics(pg_workers):
+    """Satellite: the warn-once compile fallbacks are now Diagnostic objects."""
+    spec = FlowSpec("promoted")
+    spec.set_output(spec.rollouts(pg_workers).for_each(_identity).learners(2))
+    compiled = spec.compile()  # non-strict: lowers, records the degradation
+    try:
+        fallbacks = by_rule(compiled.diagnostics, "lowering-fallback")
+        assert fallbacks and fallbacks[0].is_error
+        assert "learner" in fallbacks[0].message
+    finally:
+        compiled.stop()
+    with pytest.raises(FlowAnalysisError):
+        spec.compile(strict=True)
+
+
+def test_algorithm_check_merges_static_and_lowering(pg_workers):
+    from repro.flow.algorithm import Algorithm
+
+    spec = FlowSpec("algo-check")
+    spec.set_output(spec.rollouts(pg_workers).for_each(_identity).learners(2))
+    with Algorithm.from_plan(spec, pg_workers, own_workers=False) as algo:
+        rules = {d.rule for d in algo.check()}
+    assert {"annotation-lowering", "lowering-fallback"} <= rules
+
+
+# ------------------------------------------------- shm-lease sanitizer
+def _sanitizer_endpoints(prefix):
+    from repro.core.transport import ShmReader, ShmWriter
+
+    return ShmWriter(prefix, threshold=1024), ShmReader(prefix)
+
+
+def _roundtrip(writer, reader):
+    from repro.rl.sample_batch import SampleBatch
+
+    batch = SampleBatch({"obs": np.arange(4096, dtype=np.float64)})
+    return reader.decode(pickle.loads(pickle.dumps(writer.encode(batch))))
+
+
+def test_sanitize_enabled_reads_environment(monkeypatch):
+    monkeypatch.delenv("TRANSPORT_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    for val in ("1", "true", "on"):
+        monkeypatch.setenv("TRANSPORT_SANITIZE", val)
+        assert sanitize_enabled()
+    monkeypatch.setenv("TRANSPORT_SANITIZE", "0")
+    assert not sanitize_enabled()
+
+
+def test_sanitizer_clean_epoch_passes():
+    writer, reader = _sanitizer_endpoints("t6clean")
+    SANITIZER.begin_epoch("unit:clean")
+    try:
+        out = _roundtrip(writer, reader)
+        np.testing.assert_array_equal(out["obs"], np.arange(4096, dtype=np.float64))
+        del out
+        gc.collect()
+        writer.reclaim(reader.drain_releases())
+    finally:
+        reader.close()
+        writer.close()
+    SANITIZER.end_epoch()  # no violations: must not raise
+
+
+def test_sanitizer_catches_double_release():
+    writer, reader = _sanitizer_endpoints("t6dbl")
+    SANITIZER.begin_epoch("unit:double-release")
+    try:
+        out = _roundtrip(writer, reader)
+        del out
+        gc.collect()
+        releases = reader.drain_releases()
+        assert releases
+        writer.reclaim(releases)
+        writer.reclaim(releases)  # the bug reclaim() used to swallow silently
+        with pytest.raises(ShmLeaseViolation) as ei:
+            SANITIZER.end_epoch()
+        assert "released below zero" in str(ei.value)
+    finally:
+        reader.close()
+        writer.close()
+
+
+def test_sanitizer_catches_unmatched_lease_drop():
+    SANITIZER.begin_epoch("unit:unmatched-drop")
+    SANITIZER.lease_dropped(object(), "t6ghosts0")
+    with pytest.raises(ShmLeaseViolation) as ei:
+        SANITIZER.end_epoch()
+    assert "no live lease outstanding" in str(ei.value)
+
+
+def test_sanitizer_catches_leaked_lease():
+    writer, reader = _sanitizer_endpoints("t6leak")
+    SANITIZER.begin_epoch("unit:leak")
+    out = _roundtrip(writer, reader)
+    try:
+        with pytest.raises(ShmLeaseViolation) as ei:
+            SANITIZER.end_epoch()  # the held batch still leases its segment
+        assert "leaked lease" in str(ei.value)
+    finally:
+        del out
+        gc.collect()
+        writer.reclaim(reader.drain_releases())
+        reader.close()
+        writer.close()
+
+
+def test_sanitizer_catches_and_sweeps_leftover_segments():
+    from repro.core.transport import _open_shm, list_segments
+
+    shm = _open_shm("t6lefts0", create=True, size=4096)
+    shm.buf[:4] = b"dead"
+    SANITIZER.begin_epoch("unit:leftover")
+    with pytest.raises(ShmLeaseViolation) as ei:
+        SANITIZER.end_epoch(prefix="t6left")
+    assert "leaked /dev/shm segment: t6lefts0" in str(ei.value)
+    # One leak must not cascade into every later test: the epoch swept it.
+    assert list_segments("t6left") == []

@@ -1,12 +1,10 @@
 """Core dataflow iterator semantics (paper §4)."""
 
-import threading
 import time
 
-import pytest
 
 import repro.core as c
-from repro.core.actor import ActorPool, VirtualActor, wait
+from repro.core.actor import ActorPool
 from repro.core.iterators import NextValueNotReady, ParallelIterator
 
 

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.advantages import gae_pallas, vtrace_pallas
 from repro.kernels import ops
+from repro.kernels.advantages import gae_pallas, vtrace_pallas
 from repro.rl.advantages import gae, vtrace
 
 TOL = 1e-5

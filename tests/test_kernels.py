@@ -10,11 +10,11 @@ from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import moe_gmm_pallas
 from repro.kernels.ref import (
+    chunked_attention,
     decode_attention_ref,
     moe_gmm_ref,
     naive_attention,
     rwkv6_ref,
-    chunked_attention,
 )
 from repro.kernels.rwkv6 import rwkv6_pallas
 

@@ -10,7 +10,6 @@ import pytest
 pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.configs import reduced_config
 from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
 from repro.models.moe import moe_apply, moe_init
 

@@ -3,9 +3,8 @@
 import numpy as np
 import pytest
 
-from conftest import BACKEND_MATRIX
-
 import repro.core as c
+from conftest import BACKEND_MATRIX
 from repro.core.actor import ActorPool
 from repro.rl import (
     ActorCriticPolicy,

@@ -22,10 +22,9 @@ different order under vmap, which is float noise, not nondeterminism —
 import numpy as np
 import pytest
 
-from conftest import BACKEND_MATRIX
-
 import repro.core as c
 import repro.flow as flow
+from conftest import BACKEND_MATRIX
 from repro.rl import DummyPolicy, PerEnvRolloutWorker, StubEnv, VectorizedRolloutWorker
 
 pytestmark = pytest.mark.timeout(300)

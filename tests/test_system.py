@@ -7,7 +7,6 @@ correct end-to-end training, not just data movement.
 """
 
 import numpy as np
-import pytest
 
 import repro.core as c
 from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker

@@ -274,7 +274,7 @@ def test_kill_mid_transfer_reclaims_segments(transport):
     prefix = victim._cell._prefix_base
     victim.kill()  # hard process loss mid-stream
     survivors = [next(it) for _ in range(8)]
-    by_worker = [int(np.asarray(b["obs"])[0]) // 10_000 for b in survivors]
+    by_worker = [int(np.asarray(b["obs"])[0]) // 10_000_000 for b in survivors]
     # At most the in-flight window of victim items may still surface; the
     # stream then runs on the survivor alone.
     assert by_worker.count(1) <= 2
@@ -315,7 +315,7 @@ def test_drop_shard_via_injected_fault_under_transport(transport):
     # shard is dropped, only the survivor feeds the stream (modulo at most
     # one straggler already in flight).
     after = [next(it) for _ in range(6)]
-    by_worker = [int(np.asarray(b["obs"])[0]) // 10_000 for b in got + after]
+    by_worker = [int(np.asarray(b["obs"])[0]) // 10_000_000 for b in got + after]
     assert by_worker.count(1) <= 2
     assert [w for w in by_worker[-4:]] == [2, 2, 2, 2] or by_worker[-3:] == [2, 2, 2]
     del got, after, it

@@ -41,7 +41,6 @@ from repro.rl import (
 from repro.rl.rollout_worker import (
     EPS_STRIDE,
     MAX_LANES,
-    PerEnvRolloutWorker,
     RolloutWorker,
     VectorizedRolloutWorker,
     assemble_fragments,
