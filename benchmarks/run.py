@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
@@ -138,6 +139,11 @@ def main() -> None:
             "metrics": metrics,
             "gated": gated,
         }
+        # Current-run outputs live under git-ignored dirs (.bench/ in the
+        # tier-1 wrapper); create the parent so callers don't have to.
+        parent = os.path.dirname(args.json)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -31,14 +31,25 @@ from repro.flow import Algorithm
 from repro.flow.plans import PLAN_BUILDERS, REPLAY_PLANS, build_ppo
 from repro.rl import ActorCriticPolicy, CartPole, ReplayBuffer, RolloutWorker
 
+def _ppo_multihost(workers: WorkerSet):
+    # Two-fragment PPO: the rollout source is pinned to a declared host, so
+    # to_dot() draws it inside a dashed fragment cluster while the learner
+    # stays on the driver fragment.
+    spec = build_ppo(workers, host="rollout-box")
+    spec.declare_host("rollout-box")
+    return spec
+
+
 # Annotated variants rendered alongside the 11 canonical plans.  These are
 # built (FlowSpec only, never compiled — compiling inference='server' would
-# spin up a live InferenceActor) to show execution-mapping annotations on
-# the graph: the vectorized rollout engine with decoupled inference.
+# spin up a live InferenceActor, and ppo_multihost would launch a host
+# process) to show execution-mapping annotations on the graph: the
+# vectorized rollout engine with decoupled inference, and host placement.
 EXTRA_FIGURES = {
     "ppo_vector": lambda workers: build_ppo(
         workers, vector=8, inference="server"
     ),
+    "ppo_multihost": _ppo_multihost,
 }
 
 

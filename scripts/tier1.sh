@@ -2,6 +2,10 @@
 # Tier-1 verification: the fast test suite (excludes tests marked `slow`).
 #   scripts/tier1.sh            -> fast suite (includes chaos tests)
 #   scripts/tier1.sh --chaos    -> chaos stage only (fault-injection suite)
+#   scripts/tier1.sh --multihost-> multi-host stage only (two-fragment plans
+#                                  over localhost sockets, one OS process
+#                                  per host; CI also runs it with
+#                                  TRANSPORT_SANITIZE=1)
 #   scripts/tier1.sh --check    -> static-analysis stage: flowcheck over all
 #                                  committed plans (errors fail), plus ruff
 #                                  and the scoped mypy gate when those tools
@@ -22,6 +26,10 @@ if [[ "${1:-}" == "--chaos" ]]; then
   shift
   exec python -m pytest -x -q -m "chaos and not slow" "$@"
 fi
+if [[ "${1:-}" == "--multihost" ]]; then
+  shift
+  exec python -m pytest -x -q -m "multihost and not slow" "$@"
+fi
 if [[ "${1:-}" == "--check" ]]; then
   shift
   python scripts/flowcheck.py --all-plans "$@"
@@ -40,9 +48,11 @@ if [[ "${1:-}" == "--check" ]]; then
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift
+  # Current-run outputs go under git-ignored .bench/ — a gate run must
+  # never leave an untracked-looking artifact at the repo root.
   python -m benchmarks.run --fast --suites transport,learner \
-    --json BENCH_PR3.current.json --gate BENCH_PR3.json "$@"
+    --json .bench/BENCH_PR3.current.json --gate BENCH_PR3.json "$@"
   exec python -m benchmarks.run --fast --suites rollout \
-    --json BENCH_PR5.current.json --gate BENCH_PR5.json "$@"
+    --json .bench/BENCH_PR5.current.json --gate BENCH_PR5.json "$@"
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

@@ -70,12 +70,21 @@ from repro.core.plans import (
     ppo_plan,
     sac_plan,
 )
+from repro.core.remote import (
+    LocalHostHandle,
+    RemoteBackend,
+    RemoteCell,
+    start_local_host,
+)
 from repro.core.transport import (
     CreditPool,
+    FrameDecoder,
     OverflowPolicy,
     PickleTransport,
     SharedMemoryTransport,
+    SocketTransport,
     Transport,
+    encode_frame,
     list_segments,
     resolve_transport,
 )

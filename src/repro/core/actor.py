@@ -90,6 +90,7 @@ class VirtualActor:
         backoff_base: float = 0.05,
         backoff_cap: float = 2.0,
         failure_policy: str = FailurePolicy.RAISE,
+        restart_window_s: Optional[float] = None,
     ):
         if (target is None) == (factory is None):
             raise ValueError("pass exactly one of target= or factory=")
@@ -103,6 +104,7 @@ class VirtualActor:
             backoff_base=backoff_base,
             backoff_cap=backoff_cap,
             failure_policy=failure_policy,
+            restart_window_s=restart_window_s,
         )
         self.failure_policy = self.supervision.failure_policy
         self.actor_id = next(_actor_ids)
@@ -119,6 +121,7 @@ class VirtualActor:
         self.num_failures = 0
         self.num_restarts = 0
         self._budget_used = 0
+        self._last_failure_t: Optional[float] = None
         self._thread.start()
 
     # ----------------------------------------------------------- properties
@@ -182,6 +185,24 @@ class VirtualActor:
         self._inbox.put((fut, "restart", None, (), {}))
         fut.result(timeout=timeout)
 
+    def rehome(self, backend: Any, timeout: float = 60.0) -> None:
+        """Move this actor's target onto a different execution backend.
+
+        The fragment assembler's lever (``flow.compile``): a pool built on
+        the default backend is re-homed onto the ``RemoteBackend`` of its
+        placement host at lowering time.  The new cell rebuilds the target
+        from the factory (fresh state, like ``restart``), so only
+        factory-built actors can move.  Serializes through the mailbox
+        thread: calls queued behind the rehome reach the new cell.
+        """
+        if not self._alive:
+            raise RuntimeError(f"actor {self.name} is stopped")
+        if self._factory is None:
+            raise ActorError(f"actor {self.name} has no factory; cannot rehome")
+        fut: Future = Future()
+        self._inbox.put((fut, "rehome", resolve_backend(backend), (), {}))
+        fut.result(timeout=timeout)
+
     def stop(self) -> None:
         if self._alive:
             self._alive = False
@@ -209,6 +230,9 @@ class VirtualActor:
             if kind == "restart":
                 self._manual_restart(fut)
                 continue
+            if kind == "rehome":
+                self._do_rehome(fut, fn_or_method)
+                continue
             if self._dead:
                 fut.set_exception(ActorDiedError(f"actor {self.name} is dead"))
                 continue
@@ -233,6 +257,26 @@ class VirtualActor:
                 fut.set_exception(exc)
             else:
                 fut.set_result(result)
+
+    def _do_rehome(self, fut: Future, backend: ExecutionBackend) -> None:
+        """Mailbox-thread half of ``rehome``: build the new cell first, so a
+        backend that cannot construct (unreachable host) leaves the actor
+        exactly where it was."""
+        old_cell = self._cell
+        try:
+            new_cell = backend.make_cell(factory=self._factory)
+        except BaseException as exc:
+            fut.set_exception(exc)
+            return
+        self._backend = backend
+        self._cell = new_cell
+        self._dead = False
+        self._budget_used = 0
+        try:
+            old_cell.stop()
+        except Exception:
+            pass
+        fut.set_result(None)
 
     def _manual_restart(self, fut: Future) -> None:
         if not self._dead and self._cell.alive:
@@ -264,6 +308,18 @@ class VirtualActor:
             # rebuild (plus its backoff sleep, which would stall a gather
             # barrier blocked on this future) is pure waste.
             return
+        # Healthy-window forgiveness: a full restart_window_s without a
+        # supervised failure resets the budget (and the backoff exponent),
+        # so the budget bounds crash *loops*, not lifetime failures.
+        window = sup.restart_window_s
+        if (
+            window is not None
+            and self._budget_used > 0
+            and self._last_failure_t is not None
+            and time.monotonic() - self._last_failure_t >= window
+        ):
+            self._budget_used = 0
+        self._last_failure_t = time.monotonic()
         if sup.max_restarts > 0 and self._budget_used < sup.max_restarts:
             delay = sup.backoff(self._budget_used)
             if delay > 0:

@@ -99,12 +99,22 @@ class FailurePolicy:
 
 @dataclass(frozen=True)
 class SupervisorSpec:
-    """Restart budget + backoff schedule + consumer-facing failure policy."""
+    """Restart budget + backoff schedule + consumer-facing failure policy.
+
+    ``max_restarts`` on its own is a *lifetime* budget: a long-lived actor
+    that crashes occasionally exhausts it and dies permanently even after
+    hours of health between failures.  ``restart_window_s`` fixes that — an
+    actor that stays healthy for a full window gets its prior-restart
+    counter (and with it the backoff exponent) forgiven, so the budget only
+    bounds *crash loops*, not total failures over the actor's life.
+    ``None`` keeps the legacy lifetime-budget semantics.
+    """
 
     max_restarts: int = 0
     backoff_base: float = 0.05
     backoff_cap: float = 2.0
     failure_policy: str = FailurePolicy.RAISE
+    restart_window_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         FailurePolicy.validate(self.failure_policy)
@@ -112,6 +122,8 @@ class SupervisorSpec:
             raise ValueError("max_restarts must be >= 0")
         if self.backoff_base < 0 or self.backoff_cap < 0:
             raise ValueError("backoff must be >= 0")
+        if self.restart_window_s is not None and self.restart_window_s <= 0:
+            raise ValueError("restart_window_s must be > 0 (or None for a lifetime budget)")
 
     def backoff(self, n_prior_restarts: int) -> float:
         return min(self.backoff_base * (2.0 ** n_prior_restarts), self.backoff_cap)

@@ -62,6 +62,7 @@ __all__ = [
     "Transport",
     "PickleTransport",
     "SharedMemoryTransport",
+    "SocketTransport",
     "TRANSPORTS",
     "resolve_transport",
     "CreditPool",
@@ -70,6 +71,9 @@ __all__ = [
     "SANITIZER",
     "ShmLeaseViolation",
     "sanitize_enabled",
+    "encode_frame",
+    "FrameDecoder",
+    "FrameError",
 ]
 
 _SHM_ALIGN = 64  # column offsets aligned for safe dtype views + cache lines
@@ -919,6 +923,205 @@ class _IdentityEndpoint:
 
 
 # --------------------------------------------------------------------------
+# Length-prefixed frame codec (the inter-host wire; core.remote + chaos)
+# --------------------------------------------------------------------------
+_FRAME_HEADER = 8  # big-endian u64 body length
+_FRAME_MAX = 1 << 32  # 4 GiB: anything larger is a corrupt/hostile header
+
+
+class FrameError(RuntimeError):
+    """The byte stream violated the framing protocol (corrupt header)."""
+
+
+def encode_frame(obj: Any) -> bytes:
+    """One message -> one length-prefixed frame (u64 big-endian + pickle).
+
+    The frame is self-delimiting, so frames can be concatenated on a TCP
+    stream and recovered by ``FrameDecoder`` regardless of how the kernel
+    splits them into reads.
+    """
+    import pickle
+    import struct
+
+    body = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(body) > _FRAME_MAX:
+        raise FrameError(f"frame body of {len(body)} bytes exceeds protocol max")
+    return struct.pack("!Q", len(body)) + body
+
+
+class FrameDecoder:
+    """Incremental frame parser: feed arbitrary chunks, get whole messages.
+
+    TCP delivers a byte stream, not messages — one ``recv`` may carry half a
+    header, three frames, or a header and part of a body.  ``feed`` buffers
+    whatever arrives and yields each message exactly once, as soon as its
+    last byte is in.  Pure function of the byte stream: no socket, no
+    threads, so the round-trip property is testable byte-split by byte-split
+    (``tests/test_transport_properties.py``).
+    """
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def feed(self, chunk: bytes) -> List[Any]:
+        import pickle
+        import struct
+
+        self._buf.extend(chunk)
+        out: List[Any] = []
+        while len(self._buf) >= _FRAME_HEADER:
+            (size,) = struct.unpack_from("!Q", self._buf)
+            if size > _FRAME_MAX:
+                raise FrameError(f"frame header claims {size} bytes (max {_FRAME_MAX})")
+            if len(self._buf) < _FRAME_HEADER + size:
+                break
+            body = bytes(self._buf[_FRAME_HEADER : _FRAME_HEADER + size])
+            del self._buf[: _FRAME_HEADER + size]
+            out.append(pickle.loads(body))
+        return out
+
+
+class _SocketBatchRef:
+    """One SampleBatch flattened for the socket wire: column table + blob.
+
+    Columns are packed contiguously (aligned like the shm layout) into one
+    ``bytes`` blob so the frame pickles a single buffer instead of N arrays;
+    ``created_at`` rides alongside so cross-fragment latency stamps survive
+    the hop exactly as they do across the shm plane.
+    """
+
+    __slots__ = ("columns", "blob", "created_at")
+
+    def __init__(self, columns: List[_ColumnRef], blob: bytes, created_at: Any):
+        self.columns = columns
+        self.blob = blob
+        self.created_at = created_at
+
+    def __getstate__(self):
+        return (self.columns, self.blob, self.created_at)
+
+    def __setstate__(self, state):
+        self.columns, self.blob, self.created_at = state
+
+
+class SocketWriter:
+    """Producer endpoint for the socket plane: batches -> column-blob refs.
+
+    Unlike ``ShmWriter`` there is no shared segment and no lease protocol —
+    the bytes are copied onto the wire — so ``reclaim``/``rollback`` are
+    no-ops and the endpoint is stateless beyond its stats.
+    """
+
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+        self.stats: Dict[str, int] = {"messages": 0, "socket_batches": 0, "bytes_socket": 0}
+
+    def encode(self, obj: Any) -> Any:
+        self.stats["messages"] += 1
+        collected: List[Any] = []
+        _collect_batches(obj, collected, 0)
+        batches = [b for b in {id(b): b for b in collected}.values() if _eligible_batch(b)]
+        if not batches:
+            return obj
+        refs: Dict[int, _SocketBatchRef] = {}
+        for b in batches:
+            cols: List[_ColumnRef] = []
+            parts: List[bytes] = []
+            offset = 0
+            for k, v in b._data.items():
+                v = np.ascontiguousarray(v)
+                parts.append(v.tobytes())
+                cols.append(_ColumnRef(k, v.dtype.str, v.shape, offset, v.nbytes))
+                pad = _align(v.nbytes) - v.nbytes
+                if pad:
+                    parts.append(b"\x00" * pad)
+                offset = _align(offset + v.nbytes)
+            blob = b"".join(parts)
+            refs[id(b)] = _SocketBatchRef(cols, blob, getattr(b, "created_at", None))
+            self.stats["socket_batches"] += 1
+            self.stats["bytes_socket"] += len(blob)
+        return _substitute(obj, refs, 0)  # type: ignore[arg-type]
+
+    def reclaim(self, names: List[str]) -> None:
+        pass
+
+    def rollback(self, payload: Any) -> None:
+        pass
+
+    def drain_releases(self) -> List[str]:
+        return []
+
+    def close(self, unlink: bool = True) -> None:
+        pass
+
+
+class SocketReader:
+    """Consumer endpoint: rebuilds read-only column views over the blob."""
+
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+        self.stats: Dict[str, int] = {"socket_batches": 0, "bytes_socket": 0}
+
+    def decode(self, payload: Any) -> Any:
+        return self._decode_tree(payload, 0, {})
+
+    def _decode_tree(self, obj: Any, depth: int, memo: Dict[int, Any]) -> Any:
+        if depth > 4:
+            return obj
+        if isinstance(obj, _SocketBatchRef):
+            if id(obj) not in memo:
+                memo[id(obj)] = self._materialize(obj)
+            return memo[id(obj)]
+        if isinstance(obj, _ShmMultiRef):
+            from repro.rl.sample_batch import MultiAgentBatch
+
+            return MultiAgentBatch(
+                {k: self._decode_tree(v, depth + 1, memo) for k, v in obj.policy_refs.items()}
+            )
+        if isinstance(obj, tuple):
+            return tuple(self._decode_tree(x, depth + 1, memo) for x in obj)
+        if isinstance(obj, list):
+            return [self._decode_tree(x, depth + 1, memo) for x in obj]
+        if isinstance(obj, dict):
+            return {k: self._decode_tree(v, depth + 1, memo) for k, v in obj.items()}
+        return obj
+
+    def _materialize(self, ref: _SocketBatchRef) -> Any:
+        from repro.rl.sample_batch import SampleBatch
+
+        base = np.frombuffer(ref.blob, dtype=np.uint8)  # bytes -> read-only view
+        cols: Dict[str, np.ndarray] = {}
+        for c in ref.columns:
+            cols[c.key] = (
+                base[c.offset : c.offset + c.nbytes]
+                .view(np.dtype(c.dtype))
+                .reshape(c.shape)
+            )
+        batch = SampleBatch(cols)
+        if ref.created_at is not None:
+            batch.created_at = ref.created_at
+        self.stats["socket_batches"] += 1
+        self.stats["bytes_socket"] += len(ref.blob)
+        return batch
+
+    def reclaim(self, names: List[str]) -> None:
+        pass
+
+    def rollback(self, payload: Any) -> None:
+        pass
+
+    def drain_releases(self) -> List[str]:
+        return []
+
+    def close(self, unlink: bool = True) -> None:
+        pass
+
+
+# --------------------------------------------------------------------------
 # Transport specs (picklable configuration shipped into the child)
 # --------------------------------------------------------------------------
 class Transport:
@@ -977,9 +1180,32 @@ class SharedMemoryTransport(Transport):
         return ShmReader(prefix)
 
 
+class SocketTransport(Transport):
+    """Inter-host data plane: payloads ride length-prefixed socket frames.
+
+    The endpoint pair mirrors the shm transport's API (encode/decode/
+    reclaim/rollback/drain_releases/close), so ``core.remote`` drives it
+    exactly the way ``ProcessCell`` drives its transport — but the payload
+    crosses a TCP stream (``encode_frame``/``FrameDecoder``), not a pipe,
+    and batch columns travel as one contiguous blob per batch.  Shm refs
+    must never reach this transport: a segment name is meaningless on
+    another machine (the ``cross-host-placement`` flowcheck rule enforces
+    the corresponding graph-level invariant).
+    """
+
+    name = "socket"
+
+    def server_endpoint(self, prefix: str) -> SocketWriter:
+        return SocketWriter(prefix)
+
+    def client_endpoint(self, prefix: str) -> SocketReader:
+        return SocketReader(prefix)
+
+
 TRANSPORTS: Dict[str, Callable[[], Transport]] = {
     "pickle": PickleTransport,
     "shm": SharedMemoryTransport,
+    "socket": SocketTransport,
 }
 
 

@@ -66,6 +66,7 @@ class WorkerSet:
         backoff_base: float = 0.05,
         backoff_cap: float = 2.0,
         failure_policy: str = FailurePolicy.RAISE,
+        restart_window_s: Optional[float] = None,
     ) -> "WorkerSet":
         """Build a local worker (index 0) and ``num_workers`` remote actors.
 
@@ -98,6 +99,7 @@ class WorkerSet:
             backoff_base=backoff_base,
             backoff_cap=backoff_cap,
             failure_policy=failure_policy,
+            restart_window_s=restart_window_s,
         )
         actors = [
             cls._make_actor(worker_factory, i + 1, actor_kwargs)

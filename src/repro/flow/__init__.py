@@ -13,7 +13,13 @@ The three layers (build / optimize+lower / run):
 
 from repro.flow.algorithm import Algorithm
 from repro.flow.analysis import Diagnostic, FlowAnalysisError, Severity, analyze
-from repro.flow.compile import CompiledFlow, FlowRuntime, compose_stages, fuse_for_each
+from repro.flow.compile import (
+    CompiledFlow,
+    FlowRuntime,
+    compose_stages,
+    fuse_for_each,
+    partition_flowspec,
+)
 from repro.flow.plans import (
     PLAN_BUILDERS,
     REPLAY_PLANS,
@@ -29,7 +35,15 @@ from repro.flow.plans import (
     build_ppo,
     build_sac,
 )
-from repro.flow.spec import FlowSpec, Node, ResourceRef, StageSpec, Stream, pure
+from repro.flow.spec import (
+    FlowSpec,
+    HostSpec,
+    Node,
+    ResourceRef,
+    StageSpec,
+    Stream,
+    pure,
+)
 
 __all__ = [
     "Algorithm",
@@ -38,6 +52,7 @@ __all__ = [
     "FlowAnalysisError",
     "FlowRuntime",
     "FlowSpec",
+    "HostSpec",
     "Node",
     "PLAN_BUILDERS",
     "REPLAY_PLANS",
@@ -59,5 +74,6 @@ __all__ = [
     "build_sac",
     "compose_stages",
     "fuse_for_each",
+    "partition_flowspec",
     "pure",
 ]

@@ -436,6 +436,111 @@ def _check_vector_annotations(
 
 
 # --------------------------------------------------------------------------
+# cross-host-placement: host annotations that cannot partition cleanly (PR 7)
+# --------------------------------------------------------------------------
+@rule("cross-host-placement", "host fragments that cannot lower cleanly")
+def _cross_host_placement(view: GraphView) -> Iterator[Diagnostic]:
+    """Validate the multi-host fragment partition before any host launches.
+
+    ``compile()`` splits a spec into per-host fragments along ``host=``
+    annotations, rehoming each annotated source pool onto a
+    ``RemoteBackend`` (socket transport).  Everything that would make that
+    partition unsound is a graph property: placement on a node lowering
+    never reads, an undeclared host, an shm data plane that cannot span
+    the host boundary, or a driver-pinned inference server claimed by a
+    remote fragment.
+    """
+    spec = view.spec
+    host_by_pool: Dict[int, Tuple[str, str]] = {}  # id(pool) -> (host, node)
+    for node in spec.nodes.values():
+        host = node.annotations.get("host")
+        if host is None:
+            continue
+        if not isinstance(host, str) or not host:
+            yield Diagnostic(
+                "cross-host-placement", Severity.ERROR,
+                f"host={host!r} is not a host name",
+                node=node.id,
+                hint="annotate with the name passed to spec.declare_host()",
+            )
+            continue
+        if node.kind not in SOURCE_KINDS:
+            yield Diagnostic(
+                "cross-host-placement", Severity.ERROR,
+                f"host={host!r} annotates a {node.kind!r} node; placement "
+                "lowers onto source actor pools only — the annotation is "
+                "silently ignored and the node stays on the driver",
+                node=node.id,
+                hint="annotate the source node (rollouts/replay/"
+                "par_gradients/par_source)",
+            )
+            continue
+        if host not in spec.hosts:
+            yield Diagnostic(
+                "cross-host-placement", Severity.ERROR,
+                f"host={host!r} is not declared on this spec; lowering "
+                "degrades the fragment to the driver's local backend",
+                node=node.id,
+                hint=f"call spec.declare_host({host!r}) before compiling",
+            )
+            continue
+        # shm edges may not span fragments: a SharedMemoryTransport ref
+        # names a segment in the *driver's* /dev/shm, which does not exist
+        # on the remote host — rehoming a process(shm)-backed actor would
+        # swap its data plane out from under the pool mid-flow.
+        procs = view.process_backed(node)
+        if procs:
+            yield Diagnostic(
+                "cross-host-placement", Severity.ERROR,
+                f"host={host!r} on a source pool with process-backed "
+                f"actors ({', '.join(procs)}): their shm/pipe data plane "
+                "is local to the driver machine and cannot span the host "
+                "boundary",
+                node=node.id,
+                hint="build the pool on the thread backend and let host= "
+                "move it onto the socket transport, or drop the annotation",
+            )
+        # The decoupled inference server is a driver-side VirtualActor
+        # shared by all shards; a remote fragment's shards would call back
+        # across the host boundary on every action, defeating the split.
+        if node.annotations.get("inference") == "server":
+            yield Diagnostic(
+                "cross-host-placement", Severity.ERROR,
+                f"inference='server' on a node placed on host {host!r}: "
+                "the inference server is pinned to the driver fragment, so "
+                "every action round-trips the socket and the fragment "
+                "split buys nothing",
+                node=node.id,
+                hint="use inference='local' on remote fragments, or keep "
+                "the served pool on the driver",
+            )
+        pool = view.node_pool(node)
+        prior = host_by_pool.get(id(pool))
+        if prior is not None and prior[0] != host:
+            yield Diagnostic(
+                "cross-host-placement", Severity.WARN,
+                f"host={host!r} conflicts with {prior[0]!r} set by node "
+                f"{prior[1]} on the same actor pool; placement is "
+                "per-actor and the first lowered node wins",
+                node=node.id,
+                hint="annotate the pool's nodes with one host",
+            )
+        host_by_pool[id(pool)] = (host, node.id)
+    for name in spec.hosts:
+        if not any(
+            n.annotations.get("host") == name for n in spec.nodes.values()
+        ):
+            yield Diagnostic(
+                "cross-host-placement", Severity.WARN,
+                f"host {name!r} is declared but no node is placed on it; "
+                "the declaration is dead (hosts launch lazily, so nothing "
+                "runs there)",
+                hint=f"place a source on it (.host({name!r})) or drop the "
+                "declaration",
+            )
+
+
+# --------------------------------------------------------------------------
 # pickle-safety: process-backend boundaries that silently change semantics
 # --------------------------------------------------------------------------
 @rule("pickle-safety", "state that cannot cross a ProcessBackend boundary")

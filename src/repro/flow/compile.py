@@ -39,9 +39,39 @@ from repro.core.operators import (
 from repro.flow.analysis.diagnostics import Diagnostic, FlowAnalysisError, Severity
 from repro.flow.spec import EdgeRef, FlowSpec, Node, StageSpec, is_pure
 
-__all__ = ["CompiledFlow", "FlowRuntime", "fuse_for_each", "compose_stages"]
+__all__ = [
+    "CompiledFlow",
+    "FlowRuntime",
+    "fuse_for_each",
+    "compose_stages",
+    "partition_flowspec",
+]
 
 logger = logging.getLogger(__name__)
+
+
+# --------------------------------------------------------------------------
+# Partitioning pass: per-host dataflow fragments
+# --------------------------------------------------------------------------
+def partition_flowspec(spec: FlowSpec) -> Dict[Optional[str], List[str]]:
+    """Split a FlowSpec into per-host dataflow fragments.
+
+    Returns ``{host_name_or_None: [node_id, ...]}``: every node annotated
+    ``host=<name>`` lands in that host's fragment; everything else — the
+    driver-side remainder, including all learner/report nodes — lands under
+    ``None``.  Undeclared host names still get their own fragment here (the
+    ``cross-host-placement`` analysis rule flags them; lowering degrades
+    them to the driver), so callers can see exactly what the annotations
+    asked for.  Node order within a fragment follows the spec's insertion
+    order, which is topological for the fluent builder.
+    """
+    fragments: Dict[Optional[str], List[str]] = {None: []}
+    for name in spec.hosts:
+        fragments[name] = []
+    for nid, node in spec.nodes.items():
+        host = node.annotations.get("host")
+        fragments.setdefault(host, []).append(nid)
+    return fragments
 
 
 # --------------------------------------------------------------------------
@@ -210,6 +240,17 @@ class CompiledFlow:
         self._annotated_policies: Dict[int, str] = {}
         self._inference_actors: List[Any] = []
         self._weight_sink_regs: List[Any] = []  # (workers, sink) to undo on stop
+        # Multi-host fragments: host name -> owned LocalHostHandle (only for
+        # driver-managed hosts this compile launched), host name -> the
+        # RemoteBackend its actors were rehomed onto (None = launch failed,
+        # don't retry per node), and (actor, original backend) pairs so
+        # stop() can return a *shared* WorkerSet's actors to their local
+        # backend before the flow tears its hosts down.
+        self.fragments = partition_flowspec(self.spec)
+        self.host_handles: Dict[str, Any] = {}
+        self._host_backends: Dict[str, Any] = {}
+        self._placed_actors: Dict[int, str] = {}
+        self._rehomed: List[Any] = []  # (actor, original ExecutionBackend)
         assert self.spec.output is not None  # validate() guarantees it
         inner = self._lower_ref(self.spec.output)
         self._out = self._deferred_start_wrapper(inner)
@@ -258,6 +299,24 @@ class CompiledFlow:
                         it.close()
                     except Exception:  # pragma: no cover
                         pass
+        # Return rehomed actors to their original (local) backend before the
+        # flow kills the hosts it launched: a shared WorkerSet outlives the
+        # flow, and its actors must not be left pointing at a dead host.
+        # Actors already dead (e.g. a chaos machine-loss kill) are skipped —
+        # WorkerSet.recover() replaces them on their original backend.
+        for actor, backend in self._rehomed:
+            try:
+                if getattr(actor, "alive", False):
+                    actor.rehome(backend, timeout=30.0)
+            except Exception:  # pragma: no cover - teardown is best-effort
+                pass
+        self._rehomed = []
+        for handle in self.host_handles.values():
+            try:
+                handle.stop()
+            except Exception:  # pragma: no cover - teardown is best-effort
+                pass
+        self.host_handles = {}
 
     def to_dot(self) -> str:
         return self.spec.to_dot()
@@ -309,6 +368,102 @@ class CompiledFlow:
         out = self._lower_node(node)
         self._cache[nid] = out
         return out
+
+    def _host_backend(self, host: str, node: Node) -> Any:
+        """Resolve (and memoize) the RemoteBackend for a declared host.
+
+        A driver-managed host (``HostSpec.address is None``) is launched
+        here via ``start_local_host`` and owned by this flow — ``stop()``
+        tears it down.  An external host (``"host:port"``) is only
+        connected to; its lifetime is the operator's problem.  A launch or
+        connect failure degrades that host's fragment to the driver (one
+        error diagnostic, memoized so each host fails at most once).
+        """
+        if host in self._host_backends:
+            return self._host_backends[host]
+        from repro.core.remote import RemoteBackend, start_local_host
+
+        hspec = self.spec.hosts[host]
+        backend: Any = None
+        try:
+            if hspec.address is None:
+                handle = start_local_host()
+                self.host_handles[host] = handle
+                address: Any = handle.address
+            else:
+                address = hspec.address
+            backend = RemoteBackend(address=address)
+        except Exception as exc:
+            self._diag(
+                Severity.ERROR,
+                f"failed to launch/connect host {host!r}: {exc!r}; its "
+                "fragment stays on the driver's local backend",
+                node=node.id,
+                hint="check the host address, or use a driver-managed host "
+                "(declare_host with no address)",
+            )
+        self._host_backends[host] = backend
+        return backend
+
+    def _lower_host(self, node: Node, actors: Any) -> None:
+        """Lower a source node's ``host=`` placement annotation.
+
+        This is the cross-host lowering step: the graph says *where* a
+        fragment runs declaratively; here each of the node's pool actors is
+        rehomed onto the host's ``RemoteBackend``, so its target lives in
+        the host process and every edge to the driver crosses the socket
+        transport.  Placement is per-actor (like ``failure_policy``): a pool
+        shared by nodes annotated with different hosts keeps the first
+        placement and warns, rather than bouncing actors between hosts.
+        """
+        host = node.annotations.get("host")
+        if host is None:
+            return
+        if host not in self.spec.hosts:
+            self._diag(
+                Severity.ERROR,
+                f"host={host!r} is not declared on this spec; the node "
+                "stays on the driver's local backend",
+                node=node.id,
+                hint=f"call spec.declare_host({host!r}) before building the node",
+            )
+            return
+        backend = self._host_backend(host, node)
+        if backend is None:
+            return
+        stranded: List[str] = []
+        for a in actors:
+            placed = self._placed_actors.get(id(a))
+            if placed == host:
+                continue
+            if placed is not None:
+                self._diag(
+                    Severity.WARN,
+                    f"actor {getattr(a, 'name', repr(a))} is already placed "
+                    f"on host {placed!r}; host={host!r} on this node is "
+                    "ignored (placement is per-actor, first lowered node "
+                    "wins)",
+                    node=node.id,
+                    hint="annotate the pool's nodes with one host",
+                )
+                continue
+            try:
+                original = a._backend  # rehome() swaps this; keep for stop()
+                a.rehome(backend, timeout=60.0)
+            except Exception as exc:
+                stranded.append(f"{getattr(a, 'name', repr(a))} ({exc!r})")
+                continue
+            self._placed_actors[id(a)] = host
+            self._rehomed.append((a, original))
+        if stranded:
+            self._diag(
+                Severity.ERROR,
+                f"could not rehome onto host {host!r}: {', '.join(stranded)}; "
+                "those shards stay on the driver's local backend",
+                node=node.id,
+                hint="actors need a picklable factory (WorkerSet.create / "
+                "VirtualActor(factory=...)) to cross a host boundary",
+            )
 
     def _lower_annotations(self, node: Node, actors: Any) -> None:
         """Apply a node's failure annotations to its source actors.
@@ -433,6 +588,7 @@ class CompiledFlow:
     def _lower_node(self, node: Node) -> Any:
         k, p = node.kind, node.params
         if k == "rollouts":
+            self._lower_host(node, p["workers"].remote_workers())
             self._lower_annotations(node, p["workers"].remote_workers())
             return ParallelRollouts(
                 p["workers"],
@@ -445,6 +601,7 @@ class CompiledFlow:
                 inference_clients=self._lower_inference(node, p["workers"]),
             )
         if k == "replay":
+            self._lower_host(node, p["actors"])
             self._lower_annotations(node, p["actors"])
             return Replay(
                 p["actors"],
@@ -453,6 +610,7 @@ class CompiledFlow:
                 metrics_key=node.id,
             )
         if k == "par_gradients":
+            self._lower_host(node, p["workers"].remote_workers())
             self._lower_annotations(node, p["workers"].remote_workers())
             return par_compute_gradients(
                 p["workers"],
@@ -461,6 +619,7 @@ class CompiledFlow:
                 inference_clients=self._lower_inference(node, p["workers"]),
             )
         if k == "par_source":
+            self._lower_host(node, p["pool"])
             self._lower_annotations(node, p["pool"])
             return ParallelIterator.from_actors(p["pool"], p["pull_fn"], name=node.label)
         if k == "from_items":

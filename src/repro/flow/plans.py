@@ -91,6 +91,7 @@ def build_ppo(
     microbatch: int = 0,
     vector: int = 0,
     inference: str = None,
+    host: str = None,
 ) -> FlowSpec:
     """Synchronous sample -> concat -> standardize -> multi-epoch SGD.
 
@@ -102,11 +103,17 @@ def build_ppo(
     rollout engine (ISSUE 5): N synchronized env lanes per worker with one
     batched policy dispatch per step, optionally served by a decoupled
     InferenceActor (``inference='server'``).
+
+    ``host`` places the rollout fragment on a declared host (ISSUE 7): the
+    caller must also ``spec.declare_host(host)`` on the returned spec, and
+    ``compile()`` rehomes the rollout actors onto that host's
+    ``RemoteBackend`` so samples cross the socket transport.
     """
     spec = FlowSpec("ppo")
     train_op = (
         spec.rollouts(
-            workers, mode="bulk_sync", vector=vector or None, inference=inference
+            workers, mode="bulk_sync", vector=vector or None, inference=inference,
+            host=host,
         )
         .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")
         .for_each(StandardizeFields(["advantages"]))

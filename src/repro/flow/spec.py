@@ -28,7 +28,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-__all__ = ["FlowSpec", "Stream", "Node", "StageSpec", "ResourceRef", "pure"]
+__all__ = ["FlowSpec", "Stream", "Node", "StageSpec", "ResourceRef", "HostSpec", "pure"]
 
 # Edge endpoint: (producer node id, output port).  Port > 0 only for
 # multi-output nodes (duplicate).
@@ -76,6 +76,21 @@ class Node:
     # {"failure_policy": "drop_shard", "resources": {"num_cpus": 1}}.
     # ``compile()`` lowers failure policies onto the node's source actors.
     annotations: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class HostSpec:
+    """A placement target for dataflow fragments (MSRL: one fragment per
+    host, same IR, different placement).
+
+    ``address=None`` means *driver-managed*: ``compile()`` launches a local
+    ``RemoteHost`` process on this box and owns its lifecycle (the localhost
+    two-fragment test topology).  A concrete ``"host:port"`` address points
+    at an externally-run host on another machine — the driver only connects.
+    """
+
+    name: str
+    address: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -134,8 +149,10 @@ class Stream:
         (ints, see ``learners()``/``microbatch()``) lower a train stage onto
         a sharded SPMD learner group; ``vector``/``inference``/
         ``inference_credits`` (rollouts/par_gradients nodes) configure the
-        vectorized rollout engine and decoupled batched inference.  Other
-        keys (e.g.
+        vectorized rollout engine and decoupled batched inference;
+        ``host`` (a name declared via ``declare_host``) places a source
+        node's actor pool on a remote dataflow fragment (see ``host()``).
+        Other keys (e.g.
         ``resources={"num_cpus": 1}``) are carried as placement metadata for
         schedulers/introspection.
         """
@@ -170,6 +187,23 @@ class Stream:
         if k < 1:
             raise ValueError(f"microbatch() needs k >= 1 (got {k})")
         return self.annotate(microbatch=int(k))
+
+    def host(self, name: str) -> "Stream":
+        """Place this source node's actor pool on the named fragment host.
+
+        Sugar for ``annotate(host=name)``.  The host must be declared via
+        ``spec.declare_host(name)``; at lowering time the partitioner
+        (``flow.compile``) re-homes the node's actors onto that host's
+        ``RemoteBackend``, so the node's output stream crosses the host
+        boundary over the socket transport while everything unannotated
+        stays on the driver fragment::
+
+            spec.declare_host("rollout-box")
+            rollouts = spec.rollouts(workers, mode="bulk_sync").host("rollout-box")
+        """
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"host() needs a non-empty host name (got {name!r})")
+        return self.annotate(host=name)
 
     # ----------------------------------------------------- transformations
     def for_each(self, fn: Callable, label: Optional[str] = None) -> "Stream":
@@ -295,6 +329,7 @@ class FlowSpec:
         self.name = name
         self.nodes: Dict[str, Node] = {}
         self.resources: Dict[str, ResourceSpec] = {}
+        self.hosts: Dict[str, HostSpec] = {}
         self.output: Optional[EdgeRef] = None
         self._ids = itertools.count()
 
@@ -327,10 +362,30 @@ class FlowSpec:
         self.nodes[node.id] = node
         return node
 
+    # ------------------------------------------------------------ hosts
+    def declare_host(self, name: str, address: Optional[str] = None) -> HostSpec:
+        """Declare a placement host for dataflow fragments.
+
+        ``address=None`` -> driver-managed: ``compile()`` launches a local
+        ``RemoteHost`` process and tears it down with the flow.  Pass
+        ``"host:port"`` to target an externally-run ``RemoteHost`` (started
+        on another machine via ``repro.core.remote.start_local_host`` or an
+        equivalent entrypoint).  Source nodes opt in with ``.host(name)``.
+        """
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"declare_host() needs a non-empty name (got {name!r})")
+        if name in self.hosts:
+            raise ValueError(f"duplicate host {name!r}")
+        spec = HostSpec(name, address)
+        self.hosts[name] = spec
+        return spec
+
     # ------------------------------------------------------------ sources
     @staticmethod
     def _source_annotations(
-        failure_policy: Optional[str], resources: Optional[Dict[str, Any]]
+        failure_policy: Optional[str],
+        resources: Optional[Dict[str, Any]],
+        host: Optional[str] = None,
     ) -> Dict[str, Any]:
         ann: Dict[str, Any] = {}
         if failure_policy is not None:
@@ -339,6 +394,10 @@ class FlowSpec:
             ann["failure_policy"] = FailurePolicy.validate(failure_policy)
         if resources is not None:
             ann["resources"] = dict(resources)
+        if host is not None:
+            if not isinstance(host, str) or not host:
+                raise ValueError(f"host= needs a non-empty host name (got {host!r})")
+            ann["host"] = host
         return ann
 
     @staticmethod
@@ -377,6 +436,7 @@ class FlowSpec:
         vector: Optional[int] = None,
         inference: Optional[str] = None,
         inference_credits: Optional[int] = None,
+        host: Optional[str] = None,
     ) -> Stream:
         """Experience stream from the rollout workers (paper Fig 5).
 
@@ -402,7 +462,7 @@ class FlowSpec:
                 f"credits= requires mode='async' (got mode={mode!r}); other "
                 "rollout modes have no in-flight pipeline to bound"
             )
-        annotations = self._source_annotations(failure_policy, resources)
+        annotations = self._source_annotations(failure_policy, resources, host)
         annotations.update(
             self._vector_annotations(vector, inference, inference_credits)
         )
@@ -421,6 +481,7 @@ class FlowSpec:
         credits: Optional[int] = None,
         failure_policy: Optional[str] = None,
         resources: Optional[Dict[str, Any]] = None,
+        host: Optional[str] = None,
     ) -> Stream:
         """Replayed-batch stream from replay-buffer actors (Ape-X §5.2).
 
@@ -430,7 +491,7 @@ class FlowSpec:
             "replay", (),
             {"actors": actors, "num_async": num_async, "credits": credits},
             "Replay", False,
-            annotations=self._source_annotations(failure_policy, resources),
+            annotations=self._source_annotations(failure_policy, resources, host),
         )
         return Stream(self, node.id)
 
@@ -442,13 +503,14 @@ class FlowSpec:
         vector: Optional[int] = None,
         inference: Optional[str] = None,
         inference_credits: Optional[int] = None,
+        host: Optional[str] = None,
     ) -> Stream:
         """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C).
 
         ``vector=``/``inference=`` annotate the vectorized rollout engine
         exactly as on ``rollouts()`` (the gradient workers sample through
         the same engine)."""
-        annotations = self._source_annotations(failure_policy, resources)
+        annotations = self._source_annotations(failure_policy, resources, host)
         annotations.update(
             self._vector_annotations(vector, inference, inference_credits)
         )
@@ -465,12 +527,13 @@ class FlowSpec:
         name: str = "ParSource",
         failure_policy: Optional[str] = None,
         resources: Optional[Dict[str, Any]] = None,
+        host: Optional[str] = None,
     ) -> Stream:
         """Generic parallel source over an actor pool (MAML inner loop, LM
         data pipelines)."""
         node = self._add(
             "par_source", (), {"pool": pool, "pull_fn": pull_fn}, name, True,
-            annotations=self._source_annotations(failure_policy, resources),
+            annotations=self._source_annotations(failure_policy, resources, host),
         )
         return Stream(self, node.id, parallel=True)
 
@@ -589,6 +652,7 @@ class FlowSpec:
         out = FlowSpec(self.name)
         out.nodes = dict(nodes)
         out.resources = dict(self.resources)
+        out.hosts = dict(self.hosts)
         out.output = self.output
         out._ids = self._ids
         return out
@@ -647,6 +711,10 @@ class FlowSpec:
                 f'  "{esc(res.name)}" [shape=ellipse, style=filled, '
                 f'fillcolor=lightgrey, label="LearnerThread({esc(res.name)})"];'
             )
+        # Nodes grouped by placement fragment: host-annotated nodes render
+        # inside a dashed cluster per declared host (MSRL's per-host
+        # dataflow-fragment picture); everything else is the driver fragment.
+        by_host: Dict[Optional[str], List[str]] = {}
         for node in self.nodes.values():
             if node.kind == "for_each":
                 label = "\\n".join(esc(s.label) for s in node.params["stages"])
@@ -662,7 +730,18 @@ class FlowSpec:
                 shape = ", shape=trapezium"
             elif node.parallel or node.kind in ("rollouts", "replay", "par_gradients", "par_source"):
                 shape = ", style=rounded"
-            lines.append(f'  "{node.id}" [label="{label}"{shape}];')
+            host = node.annotations.get("host") if self.hosts else None
+            by_host.setdefault(host if host in self.hosts else None, []).append(
+                f'"{node.id}" [label="{label}"{shape}];'
+            )
+        lines.extend(f"  {line}" for line in by_host.get(None, []))
+        for i, host_name in enumerate(sorted(h for h in by_host if h is not None)):
+            addr = self.hosts[host_name].address or "driver-managed"
+            lines.append(f'  subgraph "cluster_host_{i}" {{')
+            lines.append(f'    label="fragment: {esc(host_name)} ({esc(addr)})";')
+            lines.append("    style=dashed;")
+            lines.extend(f"    {line}" for line in by_host[host_name])
+            lines.append("  }")
         for node in self.nodes.values():
             async_union = node.kind == "concurrently" and node.params.get("mode") == "async"
             for i, (src, port) in enumerate(node.inputs):

@@ -43,6 +43,9 @@ __all__ = [
     "ChaosFactory",
     "StubWorker",
     "make_stub_worker",
+    "PacedWorker",
+    "make_paced_worker",
+    "kill_fragment",
 ]
 
 
@@ -237,6 +240,48 @@ class StubWorker:
 
     def episode_stats(self) -> Dict[str, float]:
         return {"episode_reward_mean": float(self.index), "episodes": self._n_samples}
+
+
+class PacedWorker:
+    """Driver-paced fault injection: fails exactly when the test says so.
+
+    Call-count faults (``RaiseOnNth``) reset on every supervisor rebuild —
+    a fresh target has fresh counters — so they cannot express "one failure
+    per wall-clock window", which is what the ``restart_window_s`` budget
+    semantics need.  Here the *driver* decides each failure:
+    ``tick(fail=True)`` raises, anything else succeeds, independent of how
+    many times the supervisor has rebuilt the target.
+    """
+
+    def __init__(self, index: int = 0):
+        self.index = index
+        self.ticks = 0
+
+    def tick(self, fail: bool = False) -> int:
+        self.ticks += 1
+        if fail:
+            raise RuntimeError(f"chaos: paced failure (tick #{self.ticks})")
+        return self.ticks
+
+
+def make_paced_worker(index: int) -> PacedWorker:
+    """Module-level (hence picklable) PacedWorker factory."""
+    return PacedWorker(index)
+
+
+def kill_fragment(compiled: Any, host: str) -> Any:
+    """Machine-loss injection: kill the OS process hosting a fragment.
+
+    ``compiled`` is a ``CompiledFlow`` (``algo.compiled``) that owns
+    driver-managed hosts; terminating the named host's process kills every
+    actor rehomed onto it at once — the multi-host analogue of a sticky
+    ``RaiseOnNth`` node loss, except nothing driver-side is warned first:
+    in-flight RPCs fail with a dead socket, exactly like a machine falling
+    off the network.  Returns the (now dead) host handle.
+    """
+    handle = compiled.host_handles[host]
+    handle.kill()
+    return handle
 
 
 def make_stub_worker(index: int) -> StubWorker:

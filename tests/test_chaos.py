@@ -198,6 +198,63 @@ def test_sticky_fault_simulates_death():
             w.sample()
 
 
+# --------------------------------------- restart-window budget (ISSUE 7 fix)
+def test_restart_window_forgives_spaced_failures():
+    """ISSUE 7 bugfix: ``max_restarts`` was a *lifetime* budget, so any
+    long-lived worker eventually died of accumulated unrelated faults.  With
+    ``restart_window_s`` the counter resets after a healthy interval: a
+    worker failing once per window restarts indefinitely."""
+    import functools
+
+    from repro.core.actor import VirtualActor
+
+    a = VirtualActor(
+        factory=functools.partial(chaos.make_paced_worker, 1),
+        name="windowed", max_restarts=1, backoff_base=0.0,
+        restart_window_s=0.2,
+    )
+    try:
+        for _ in range(4):  # 4 spaced failures >> max_restarts=1
+            assert a.sync("tick") >= 1
+            with pytest.raises(RuntimeError, match="paced failure"):
+                a.sync("tick", fail=True)
+            deadline = time.time() + 10
+            while not a.alive and time.time() < deadline:
+                time.sleep(0.01)
+            assert a.alive, "supervisor did not heal a within-budget failure"
+            time.sleep(0.25)  # a healthy window passes -> budget forgiven
+        assert a.num_restarts == 4
+        assert a.sync("tick") >= 1  # still serving
+    finally:
+        a.stop()
+
+
+def test_restart_window_still_exhausts_on_crash_loop():
+    """The forgiveness window must not weaken the crash-loop guard:
+    back-to-back failures inside one window exhaust the budget exactly as
+    the lifetime semantics did."""
+    import functools
+
+    from repro.core.actor import VirtualActor
+
+    a = VirtualActor(
+        factory=functools.partial(chaos.make_paced_worker, 1),
+        name="crash-loop", max_restarts=2, backoff_base=0.0,
+        restart_window_s=60.0,  # no failure-free interval ever elapses
+    )
+    try:
+        for _ in range(10):
+            if not a.alive:
+                break
+            with pytest.raises(RuntimeError):
+                a.sync("tick", fail=True)
+            time.sleep(0.01)  # let the mailbox thread finish the rebuild
+        assert not a.alive
+        assert a.num_restarts == 2  # budget spent, not a single restart more
+    finally:
+        a.stop()
+
+
 # ------------------------------------------- decoupled inference (ISSUE 5)
 def make_vec_inference_worker(i):
     """AC policy (not Dummy): real weights, so the weight-resync assertion

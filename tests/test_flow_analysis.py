@@ -38,6 +38,7 @@ EXPECTED_RULES = {
     "credit-deadlock",
     "unbounded-queue",
     "annotation-lowering",
+    "cross-host-placement",
     "pickle-safety",
     "resource-oversubscription",
     "determinism-hazard",
@@ -390,6 +391,69 @@ def test_determinism_hazard_quiet_on_seeded_stages():
 
 
 # ------------------------------------------------------ engine plumbing
+# ------------------------------------------------- cross-host-placement
+def test_cross_host_flags_undeclared_and_non_source_placement():
+    spec = FlowSpec("bad-hosts")
+    spec.declare_host("box")
+    out = (
+        spec.rollouts(FakePool(), host="ghost")  # never declared
+        .for_each(_identity)
+        .host("box")  # placement on a for_each: lowering never reads it
+    )
+    spec.set_output(out)
+    diags = by_rule(analyze(spec), "cross-host-placement")
+    ghost = [d for d in diags if "'ghost'" in d.message and "not declared" in d.message]
+    assert ghost and ghost[0].is_error and "declare_host" in ghost[0].hint
+    nonsrc = [d for d in diags if "for_each" in d.message]
+    assert nonsrc and nonsrc[0].is_error and "source node" in nonsrc[0].hint
+
+
+def test_cross_host_flags_shm_edge_spanning_fragments():
+    """ISSUE 7 acceptance: an shm edge may not span fragments — a
+    process(shm)-backed pool placed on a remote host is a static error."""
+    spec = FlowSpec("shm-span")
+    spec.declare_host("box")
+    spec.set_output(spec.rollouts(FakePool(backend="process"), host="box"))
+    diags = by_rule(analyze(spec), "cross-host-placement")
+    span = [d for d in diags if "process-backed" in d.message]
+    assert span and span[0].is_error
+    assert "cannot span the host boundary" in span[0].message
+    assert "thread backend" in span[0].hint
+
+
+def test_cross_host_flags_server_inference_on_remote_fragment():
+    spec = FlowSpec("srv-remote")
+    spec.declare_host("box")
+    pool = FakePool(local=FakeLocalWorker())
+    spec.set_output(spec.rollouts(pool, host="box", inference="server"))
+    diags = by_rule(analyze(spec), "cross-host-placement")
+    srv = [d for d in diags if "inference='server'" in d.message]
+    assert srv and srv[0].is_error and "driver fragment" in srv[0].message
+
+
+def test_cross_host_warns_on_conflicting_and_dead_placement():
+    spec = FlowSpec("host-conflict")
+    spec.declare_host("box-a")
+    spec.declare_host("box-b")
+    spec.declare_host("idle")  # declared, never placed on
+    pool = FakePool()
+    a = spec.rollouts(pool, host="box-a")
+    b = spec.rollouts(pool, host="box-b")  # same pool, different host
+    spec.set_output(spec.concurrently([a.for_each(_identity), b.for_each(_identity)]))
+    diags = by_rule(analyze(spec), "cross-host-placement")
+    conflict = [d for d in diags if "conflicts with" in d.message]
+    assert conflict and conflict[0].severity == Severity.WARN
+    dead = [d for d in diags if "'idle'" in d.message]
+    assert dead and dead[0].severity == Severity.WARN and "dead" in dead[0].message
+
+
+def test_cross_host_quiet_on_clean_two_fragment_plan():
+    spec = FlowSpec("clean-hosts")
+    spec.declare_host("box")
+    spec.set_output(spec.rollouts(FakePool(), host="box").for_each(_identity))
+    assert not by_rule(analyze(spec), "cross-host-placement")
+
+
 def test_crashing_rule_surfaces_as_analyzer_internal():
     from repro.flow.analysis import rule
 

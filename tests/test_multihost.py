@@ -1,0 +1,219 @@
+"""Multi-host fragment suite (ISSUE 7): two-fragment plans over localhost.
+
+Each test here crosses a real OS-process boundary: ``spec.declare_host`` +
+a ``host=`` placement annotation make ``compile()`` launch a host process
+(``start_local_host``), rehome the annotated source pool onto its
+``RemoteBackend``, and route every sample through the length-prefixed
+``SocketTransport`` — the driver and the rollout fragment share nothing
+but the socket.  Marked ``multihost``; run alone with
+``scripts/tier1.sh --multihost`` (CI also runs it under
+``TRANSPORT_SANITIZE=1``).
+"""
+
+import functools
+import os
+import time
+
+import numpy as np
+import pytest
+
+import chaos
+import repro.flow as flow
+from repro.core import WorkerSet
+from repro.core.actor import VirtualActor
+from repro.core.executor import ActorDiedError
+from repro.core.metrics import NUM_SHARDS_DROPPED
+from repro.core.operators import TrainOneStep
+from repro.core.remote import RemoteBackend, start_local_host
+from repro.flow.plans import build_ppo
+from repro.flow.spec import FlowSpec
+
+pytestmark = [pytest.mark.multihost, pytest.mark.timeout(300)]
+
+HOST = "rollout-box"
+
+
+def make_ppo_worker(i):
+    """Module-level PPO CartPole worker factory: crosses the host boundary
+    by pickle, so it must not close over test-local state."""
+    from repro.rl import ActorCriticPolicy, CartPole, RolloutWorker
+
+    return RolloutWorker(
+        CartPole(),
+        ActorCriticPolicy(4, 2, loss_kind="ppo", rollout_len=16),
+        algo="ppo", num_envs=2, rollout_len=16, seed=3, worker_index=i,
+    )
+
+
+def run_ppo(host=None, iters=3):
+    """Train the PPO plan for ``iters`` rounds; return per-round counters.
+
+    With ``host`` set, the rollout fragment runs on a driver-managed host
+    process and the run asserts the fragment actually crossed the boundary
+    (remote backend, distinct PID) before comparing anything.
+    """
+    ws = WorkerSet.create(make_ppo_worker, 2)
+    spec = build_ppo(
+        ws, train_batch_size=64, num_sgd_iter=2, sgd_minibatch_size=32, host=host
+    )
+    if host is not None:
+        spec.declare_host(host)
+    algo = flow.Algorithm.from_plan(spec, ws, own_workers=True)
+    try:
+        c = algo.compiled
+        errors = [d.format() for d in c.diagnostics if d.is_error]
+        assert not errors, errors
+        if host is not None:
+            assert set(c.fragments) == {None, host}
+            handle = c.host_handles[host]
+            assert handle.alive and handle.pid != os.getpid()
+            for a in ws.remote_workers():
+                assert a.backend_name == "remote"
+        rounds = []
+        for _ in range(iters):
+            counters = algo.train()["counters"]
+            rounds.append(
+                {k: counters[k] for k in ("num_steps_sampled", "num_steps_trained")}
+            )
+        return rounds
+    finally:
+        algo.stop()
+
+
+# ----------------------------------------------------------- the acceptance
+def test_two_fragment_ppo_trains_with_single_host_parity():
+    """ISSUE 7 acceptance: the two-fragment PPO plan — rollout fragment in
+    its own OS process, learner fragment on the driver, connected only by
+    the localhost socket — trains through Algorithm.train() with metrics
+    parity against the same plan run single-host."""
+    single = run_ppo(host=None)
+    multi = run_ppo(host=HOST)
+    # Bulk-sync rollouts with seeded workers are deterministic: the socket
+    # hop must not change a single sampled or trained step.
+    assert multi == single
+    assert multi[-1]["num_steps_sampled"] == 3 * 64
+
+
+def test_machine_loss_of_rollout_fragment_shrinks_shard_set():
+    """ISSUE 7 acceptance: chaos-kill the rollout fragment's host process
+    mid-training.  Under FailurePolicy.drop_shard the gather loop drops the
+    fragment's shards (NUM_SHARDS_DROPPED) and training continues on the
+    driver-side survivors — a machine loss, not a worker loss."""
+    ws_remote = WorkerSet.create(chaos.make_stub_worker, 2, failure_policy="drop_shard")
+    ws_local = WorkerSet.create(chaos.make_stub_worker, 2, failure_policy="drop_shard")
+    spec = FlowSpec("machine_loss")
+    spec.declare_host(HOST)
+    remote = spec.rollouts(
+        ws_remote, mode="async", num_async=1, failure_policy="drop_shard", host=HOST
+    )
+    local = spec.rollouts(
+        ws_local, mode="async", num_async=1, failure_policy="drop_shard"
+    )
+    out = spec.concurrently([remote, local], mode="async").for_each(
+        TrainOneStep(ws_local)
+    )
+    spec.set_output(out.report(ws_local))
+    algo = flow.Algorithm.from_plan(spec, ws_local, own_workers=False)
+    try:
+        result = algo.train()  # both fragments feeding
+        for a in ws_remote.remote_workers():
+            assert a.backend_name == "remote"
+
+        chaos.kill_fragment(algo.compiled, HOST)
+
+        deadline = time.time() + 60
+        while result["counters"].get(NUM_SHARDS_DROPPED, 0) < 2 and time.time() < deadline:
+            result = algo.train()
+        assert result["counters"][NUM_SHARDS_DROPPED] == 2
+        assert ws_remote.num_healthy_workers() == 0  # the whole machine died
+        assert ws_local.num_healthy_workers() == 2  # survivors untouched
+        # ... and training continues on the shrunken shard set.
+        before = result["counters"]["num_steps_trained"]
+        for _ in range(4):
+            result = algo.train()
+        assert result["counters"]["num_steps_trained"] > before
+    finally:
+        algo.stop()
+        ws_remote.stop()
+        ws_local.stop()
+
+
+# ------------------------------------------------------- RemoteBackend unit
+def test_remote_backend_actor_roundtrip_and_stub_stream():
+    """A VirtualActor on RemoteBackend serves the full worker protocol from
+    another process, with StubWorker determinism intact across the wire."""
+    handle = start_local_host()
+    try:
+        backend = RemoteBackend(address=handle.address)
+        a = VirtualActor(
+            factory=functools.partial(chaos.make_stub_worker, 3),
+            name="remote-stub", backend=backend,
+        )
+        try:
+            b = a.sync("sample")
+            assert b.count == 8
+            np.testing.assert_array_equal(
+                np.asarray(b["obs"]),
+                np.arange(8, dtype=np.float64) + chaos.expected_obs_base(3, 1),
+            )
+            a.sync("set_weights", np.array([5.0, 6.0], np.float32))
+            np.testing.assert_array_equal(
+                np.asarray(a.sync("get_weights")), [5.0, 6.0]
+            )
+            # apply() runs driver-side against the RPC proxy.
+            assert a.apply(lambda w: w.sample().count).result() == 8
+        finally:
+            a.stop()
+    finally:
+        handle.stop()
+
+
+def test_remote_backend_detects_host_death():
+    """Killing the host process: the heartbeat marks the *cell* dead with no
+    traffic needed (fail-fast on silent machine loss), and the next dispatch
+    raises ActorDiedError through supervision — the signal gather loops
+    consume.  Same two-step contract as ProcessCell, minus the traffic
+    requirement."""
+    handle = start_local_host()
+    backend = RemoteBackend(address=handle.address, heartbeat_interval=0.2)
+    a = VirtualActor(
+        factory=functools.partial(chaos.make_stub_worker, 1),
+        name="doomed", backend=backend,
+    )
+    try:
+        assert a.sync("sample").count == 8
+        handle.kill()
+        deadline = time.time() + 15
+        while a._cell.alive and time.time() < deadline:
+            time.sleep(0.05)  # idle actor: only the heartbeat can notice
+        assert not a._cell.alive
+        with pytest.raises((ActorDiedError, RuntimeError)):
+            a.sync("sample")
+        assert not a.alive  # no restart budget: supervision marks it dead
+    finally:
+        a.stop()
+
+
+def test_rehome_moves_live_actor_across_backends():
+    """rehome() swaps a live actor's cell onto another backend: the target
+    is rebuilt from the factory on the new host and serves immediately."""
+    handle = start_local_host()
+    try:
+        a = VirtualActor(
+            factory=functools.partial(chaos.make_stub_worker, 2), name="mover"
+        )
+        try:
+            assert a.backend_name == "thread"
+            assert a.sync("sample").count == 8
+            a.rehome(RemoteBackend(address=handle.address))
+            assert a.backend_name == "remote"
+            # Fresh target on the new host: call counters restart at 1.
+            b = a.sync("sample")
+            np.testing.assert_array_equal(
+                np.asarray(b["obs"]),
+                np.arange(8, dtype=np.float64) + chaos.expected_obs_base(2, 1),
+            )
+        finally:
+            a.stop()
+    finally:
+        handle.stop()

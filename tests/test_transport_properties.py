@@ -1,4 +1,4 @@
-"""Property tests: SampleBatch algebra + SharedMemoryTransport round trips.
+"""Property tests: SampleBatch algebra + transport round trips.
 
 ISSUE 3 satellite.  Three invariant families, all hypothesis-driven:
 
@@ -16,6 +16,12 @@ fragment assembler (``repro.rl.rollout_worker.assemble_fragments``):
 shard/slice/concat round trips must preserve per-lane trace boundaries,
 ``created_at`` birth stamps, and column dtypes, and ``split_by_episode``
 must recover exactly the per-episode fragments the assembler labeled.
+
+ISSUE 7 adds the socket wire protocol: length-prefixed frames must decode
+identically however a TCP stream fragments them (``FrameDecoder`` fed
+arbitrary chunkings), and ``SocketTransport`` encode→decode must preserve
+every column's dtype/shape/values, trace ids, and ``created_at`` stamps —
+the same contract the shm family proves, across the host boundary.
 """
 
 import gc
@@ -27,7 +33,14 @@ import pytest
 pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.transport import ShmReader, ShmWriter, list_segments
+from repro.core.transport import (
+    FrameDecoder,
+    ShmReader,
+    ShmWriter,
+    SocketTransport,
+    encode_frame,
+    list_segments,
+)
 from repro.rl.rollout_worker import EPS_STRIDE, MAX_LANES, assemble_fragments
 from repro.rl.sample_batch import SampleBatch
 
@@ -233,6 +246,96 @@ def test_reclaim_never_corrupts_held_batches(parts, data):
         reader.close()
         writer.close()
         assert list_segments("hyp2") == []
+
+
+# ------------------------------------------- socket wire protocol (ISSUE 7)
+def chunked(blob, cuts):
+    """Split ``blob`` at the (sorted, deduped) cut offsets — an arbitrary
+    TCP fragmentation of the byte stream, short reads included."""
+    points = sorted({c % (len(blob) + 1) for c in cuts})
+    pieces, start = [], 0
+    for p in points:
+        if p > start:
+            pieces.append(blob[start:p])
+            start = p
+    pieces.append(blob[start:])
+    return [p for p in pieces if p]
+
+
+@given(
+    st.lists(
+        st.one_of(
+            st.integers(min_value=-(2**40), max_value=2**40),
+            st.text(max_size=32),
+            st.binary(max_size=64),
+            st.dictionaries(st.text(max_size=8), st.integers(), max_size=4),
+            st.tuples(st.text(max_size=8), st.integers(), st.booleans()),
+        ),
+        min_size=1,
+        max_size=6,
+    ),
+    st.lists(st.integers(min_value=0, max_value=2**16), max_size=24),
+)
+@settings(max_examples=100, deadline=None)
+def test_frame_roundtrip_over_arbitrary_splits(objs, cuts):
+    """However the byte stream fragments — mid-header, mid-body, several
+    frames per chunk — the decoder yields exactly the encoded objects, in
+    order, with nothing buffered at the end."""
+    stream = b"".join(encode_frame(o) for o in objs)
+    dec = FrameDecoder()
+    out = []
+    for piece in chunked(stream, cuts):
+        out.extend(dec.feed(piece))
+    assert out == objs
+    assert dec.pending_bytes == 0
+
+
+@given(batches(), st.lists(st.integers(min_value=0, max_value=2**20), max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_socket_transport_roundtrip_preserves_batches(batch, cuts):
+    """encode→frame→arbitrary refeed→decode across SocketTransport keeps
+    every column bit-for-bit (dtype, shape, values) plus the created_at
+    birth stamp — the cross-host analogue of the shm round-trip family."""
+    spec = SocketTransport()
+    writer = spec.server_endpoint("hypsock")
+    reader = spec.client_endpoint("hypsock")
+    payload = (batch, {"n": batch.count})
+    stream = encode_frame(writer.encode(payload))
+    dec = FrameDecoder()
+    frames = []
+    for piece in chunked(stream, cuts):
+        frames.extend(dec.feed(piece))
+    assert len(frames) == 1
+    out_batch, info = reader.decode(frames[0])
+    assert_batches_equal(batch, out_batch)
+    assert info == {"n": batch.count}
+    assert out_batch.created_at == batch.created_at
+    # Columns are read-only views over the frame blob: a consumer mutating
+    # its input cannot corrupt a sibling decode of the same ref.
+    for k in out_batch:
+        assert not out_batch[k].flags.writeable
+
+
+@given(rollout_cols())
+@settings(max_examples=30, deadline=None)
+def test_socket_transport_preserves_assembled_traces(data):
+    """A vectorized-engine batch keeps its per-lane trace structure across
+    the socket: eps_id traces, dtypes, and the episode-split partition are
+    identical on both sides of the wire."""
+    cols, lane_base, _T, _B = data
+    batch = assemble_fragments(cols, lane_base)
+    spec = SocketTransport()
+    writer = spec.server_endpoint("hypsock2")
+    reader = spec.client_endpoint("hypsock2")
+    out = reader.decode(writer.encode(batch))
+    assert_batches_equal(batch, out)
+    assert out.created_at == batch.created_at
+    np.testing.assert_array_equal(out["eps_id"], batch["eps_id"])
+    frags_in = batch.split_by_episode()
+    frags_out = out.split_by_episode()
+    assert len(frags_in) == len(frags_out)
+    for a, b in zip(frags_in, frags_out):
+        assert_batches_equal(a, b)
 
 
 @given(batches())
