@@ -13,6 +13,11 @@ from typing import Any, Dict, List, Tuple
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
 
+# Gated: when this suite runs under ``benchmarks.run --gate``, a missing or
+# empty dryrun.jsonl must fail the gate (dryrun_present=0 < min) rather than
+# letting an all-zero summary pass as a healthy run.
+GATED = {"dryrun_present": {"min": 1.0, "value": 1.0}}
+
 
 def load(path: str = RESULTS) -> List[Dict[str, Any]]:
     rows = []
@@ -56,7 +61,12 @@ def run() -> List[Tuple[str, float, str]]:
     rows = load()
     ok = [r for r in rows if r.get("ok")]
     fail = [r for r in rows if not r.get("ok")]
+    # dryrun_present is GATED: a missing/empty results/dryrun.jsonl used to
+    # yield dryrun_combinations_ok=0 with no failing metric — the suite
+    # "passed" while measuring nothing. Emit an explicit presence row so the
+    # regression gate fails loudly instead of silently skipping the sweep.
     out: List[Tuple[str, float, str]] = [
+        ("dryrun_present", 1.0 if rows else 0.0, RESULTS),
         ("dryrun_combinations_ok", len(ok), f"failed={len(fail)}"),
     ]
     doms: Dict[str, int] = {}

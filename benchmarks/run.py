@@ -74,6 +74,7 @@ def main() -> None:
             iters=5 if args.fast else 10,
             trials=2 if args.fast else 3,
         ),
+        "loss": _lazy("bench_loss", iters=2 if args.fast else 4),
         "roofline": _lazy("roofline"),
     }
 
@@ -92,6 +93,7 @@ def main() -> None:
             "transport": "bench_transport",
             "learner": "bench_learner",
             "rollout": "bench_rollout",
+            "loss": "bench_loss",
             "roofline": "roofline",
         }
         out = {}
@@ -131,7 +133,8 @@ def main() -> None:
         gated = _gated_specs(selected)
         doc = {
             "meta": {
-                "issue": "bench baselines (PR3 data plane, PR5 rollout engine)",
+                "issue": "bench baselines (PR3 data plane, PR5 rollout engine, "
+                "PR8 fused loss + explain)",
                 "python": platform.python_version(),
                 "machine": platform.machine(),
                 "suites": sorted(selected),

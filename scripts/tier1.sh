@@ -16,6 +16,8 @@
 #                                      vs BENCH_PR3.json
 #                                  (2) vectorized-rollout suite vs
 #                                      BENCH_PR5.json
+#                                  (3) fused-loss + explain suite vs
+#                                      BENCH_PR8.json
 #                                  each fails on >10% regression of any
 #                                  gated metric
 #   scripts/tier1.sh -m ""      -> full suite, slow tests included
@@ -52,7 +54,9 @@ if [[ "${1:-}" == "--bench" ]]; then
   # never leave an untracked-looking artifact at the repo root.
   python -m benchmarks.run --fast --suites transport,learner \
     --json .bench/BENCH_PR3.current.json --gate BENCH_PR3.json "$@"
-  exec python -m benchmarks.run --fast --suites rollout \
+  python -m benchmarks.run --fast --suites rollout \
     --json .bench/BENCH_PR5.current.json --gate BENCH_PR5.json "$@"
+  exec python -m benchmarks.run --fast --suites loss \
+    --json .bench/BENCH_PR8.current.json --gate BENCH_PR8.json "$@"
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

@@ -60,6 +60,7 @@ from repro.core.executor import FailurePolicy
 from repro.core.metrics import (
     BYTES_MOVED_PREFIX,
     CREDIT_STALL_TIME,
+    GATHER_TIMER_PREFIX,
     INFLIGHT_PREFIX,
     NUM_BYTES_MOVED,
     NUM_CREDIT_STALLS,
@@ -684,6 +685,7 @@ class ParallelIterator(Generic[T]):
                 # remove_workers race / teardown) is skipped, but futures
                 # already dispatched this round are still gathered so their
                 # items are never silently discarded.
+                round_start = time.perf_counter()
                 futures = []
                 for s in shards:
                     try:
@@ -706,6 +708,13 @@ class ParallelIterator(Generic[T]):
                     results.append((item, s.actor))
                 if any(isinstance(item, _Exhausted) for item, _ in results):
                     return
+                # Per-round wall time of the dispatch -> barrier -> gathered
+                # window, keyed by node id: the stage's live wall-time column
+                # in Algorithm.explain() (for a rollouts source this is the
+                # sample time the flow actually observed).
+                get_metrics().timers[GATHER_TIMER_PREFIX + key].push(
+                    time.perf_counter() - round_start
+                )
                 for item, actor in results:
                     if isinstance(item, (NextValueNotReady, _ShardVerdict)):
                         continue
@@ -913,6 +922,7 @@ class ParallelIterator(Generic[T]):
                     return
                 # Defensive dispatch: see gather_sync — skip actors stopped
                 # mid-round but never abandon already-dispatched futures.
+                round_start = time.perf_counter()
                 futures = []
                 for s in shards:
                     try:
@@ -935,6 +945,11 @@ class ParallelIterator(Generic[T]):
                         )
                 if any(isinstance(x, _Exhausted) for x in items):
                     return
+                # Same per-round gather timer as gather_sync (see there); for
+                # a bulk_sync rollouts source this is the observed sample time.
+                get_metrics().timers[GATHER_TIMER_PREFIX + key].push(
+                    time.perf_counter() - round_start
+                )
                 items = [
                     x for x in items
                     if not isinstance(x, (NextValueNotReady, _ShardVerdict))

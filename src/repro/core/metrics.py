@@ -45,6 +45,10 @@ CREDIT_STALL_TIME = "credit_stall_time_s"
 BYTES_MOVED_PREFIX = "bytes_moved/"
 QUEUE_OCCUPANCY_PREFIX = "queue_occupancy/"
 INFLIGHT_PREFIX = "inflight/"
+# Per-round wall time of a sync gather (dispatch -> barrier -> gathered),
+# keyed by node id — the live wall-time column Algorithm.explain() joins
+# for source nodes.
+GATHER_TIMER_PREFIX = "gather/"
 
 # Latency streams (LatencyStat reservoirs; p50/p99 surfaced by save()).
 SAMPLE_TO_LEARN_LATENCY = "sample_to_learn_s"

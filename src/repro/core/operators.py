@@ -351,6 +351,19 @@ class TrainOneStep:
         self.workers.sync_weights()
         return batch, info
 
+    def reset_warnings(self) -> None:
+        """Re-arm the warn-once fallback latch.
+
+        Called by ``CompiledFlow._instantiate`` once per compile: operator
+        instances that survive a deepcopy carry the old latch into the new
+        flow, and instances that *can't* be deep-copied (this one holds a
+        live WorkerSet) are shared across every compile of the spec — either
+        way, without the reset a fallback in one Algorithm would silently
+        suppress the warning in every later Algorithm built from the same
+        operators (and across test runs in one process).
+        """
+        self._warned_fallback = False
+
     def _warn_fallback(self, lw: Any, why: str) -> None:
         if self._warned_fallback:
             return

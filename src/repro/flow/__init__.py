@@ -20,6 +20,7 @@ from repro.flow.compile import (
     fuse_for_each,
     partition_flowspec,
 )
+from repro.flow.explain import ExplainReport, StageCost, explain_flow
 from repro.flow.plans import (
     PLAN_BUILDERS,
     REPLAY_PLANS,
@@ -49,6 +50,7 @@ __all__ = [
     "Algorithm",
     "CompiledFlow",
     "Diagnostic",
+    "ExplainReport",
     "FlowAnalysisError",
     "FlowRuntime",
     "FlowSpec",
@@ -58,6 +60,7 @@ __all__ = [
     "REPLAY_PLANS",
     "ResourceRef",
     "Severity",
+    "StageCost",
     "StageSpec",
     "Stream",
     "analyze",
@@ -73,6 +76,7 @@ __all__ = [
     "build_ppo",
     "build_sac",
     "compose_stages",
+    "explain_flow",
     "fuse_for_each",
     "partition_flowspec",
     "pure",

@@ -147,6 +147,27 @@ class Algorithm:
             + list(self._compiled.diagnostics)
         )
 
+    def explain(self, hw: Any = None) -> Any:
+        """Roofline-driven per-stage cost attribution (``ExplainReport``).
+
+        Lowers each stage's jitted program (rollout scan, fused SGD step) to
+        optimized HLO, prices it with the trip-count-aware cost model
+        against ``hw`` (default TPU v5e), and joins the live per-node
+        metrics this flow has accumulated — so run a few ``train()`` calls
+        first if you want the wall-time columns populated.  Memory-bound
+        stages are flagged as Pallas-kernel candidates.  Purely
+        introspective: nothing is executed and worker state is unchanged.
+        """
+        if self._stopped:
+            raise RuntimeError("Algorithm is stopped")
+        from repro.distributed.hlo_analysis import HW_V5E
+        from repro.flow.explain import explain_flow
+
+        return explain_flow(
+            self._compiled, self._workers, self._it.metrics,
+            hw=hw if hw is not None else HW_V5E,
+        )
+
     def to_dot(self, with_metrics: bool = False) -> str:
         """DOT rendering of the plan; ``with_metrics=True`` labels data-plane
         edges with live bytes-moved counters and queue occupancy."""

@@ -712,6 +712,13 @@ class CompiledFlow:
                 fn = copy.deepcopy(fn)
             except Exception:
                 fn = stage.fn
+        # Warn-once latches are per-*compile* state: whether the instance was
+        # deep-copied (copies the set latch along) or fell back to the shared
+        # original (same latch object across Algorithms), re-arm it so every
+        # compiled flow emits its own fallback warnings exactly once.
+        reset = getattr(fn, "reset_warnings", None)
+        if callable(reset):
+            reset()
         return fn
 
     def __repr__(self) -> str:  # pragma: no cover

@@ -11,7 +11,7 @@ Set ``repro.kernels.ops.FORCE_MODE`` to 'pallas' | 'ref' | None (auto).
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,7 @@ __all__ = [
     "moe_gmm",
     "fused_gae",
     "fused_vtrace",
+    "fused_ppo_loss",
     "use_pallas",
 ]
 
@@ -73,22 +74,74 @@ def rwkv6(
     state: Optional[jax.Array] = None,
     chunk: int = 64,
 ):
-    if use_pallas():
+    # The Pallas kernel always starts from zero state (it raises on a
+    # nonzero ``state``); stateful callers (decode resume, chunked prefill
+    # continuation) route to the reference recurrence, which carries
+    # [B,H,N,N] state exactly — a fallback, never a crash.
+    if use_pallas() and state is None:
         from repro.kernels.rwkv6 import rwkv6_pallas
 
-        return rwkv6_pallas(r, k, v, w, u, state=state, chunk=chunk)
+        return rwkv6_pallas(r, k, v, w, u, state=None, chunk=chunk)
     # jnp fallback: exact sequential recurrence, chunk-rematted (the TPU win
     # of the Pallas kernel is keeping the [N,N] state in VMEM across the
     # time loop).
     return _ref.rwkv6_ref(r, k, v, w, u, state=state, chunk=chunk)
 
 
-def moe_gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+def moe_gmm(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jax.Array:
+    # block_m must divide every per-expert group (tiles may not straddle a
+    # group boundary — the kernel picks one expert id per row tile); callers
+    # with small groups pass the group size itself (see models/moe.py).
     if use_pallas():
         from repro.kernels.moe_gmm import moe_gmm_pallas
 
-        return moe_gmm_pallas(x, w, group_sizes)
+        return moe_gmm_pallas(x, w, group_sizes, block_m=block_m, block_n=block_n)
     return _ref.moe_gmm_ref(x, w, group_sizes)
+
+
+def fused_ppo_loss(
+    logits: jax.Array,          # [B, A]
+    values: jax.Array,          # [B]
+    actions: jax.Array,         # [B] int
+    behaviour_logp: jax.Array,  # [B]
+    advantages: jax.Array,      # [B]
+    returns: jax.Array,         # [B]
+    clip_eps: float = 0.2,
+    vf_coef: float = 0.5,
+    ent_coef: float = 0.01,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """PPO clipped-surrogate loss downstream of ``logits_value``: Pallas-
+    fused per-row terms on TPU (differentiable — the kernel carries a
+    hand-written Pallas backward via ``jax.custom_vjp``), the bit-identical
+    jnp math of the historical ``rl/policy.py`` loss on CPU.
+
+    Returns ``(loss, aux)`` with the same aux dict the in-policy loss
+    produced: ``{"pg_loss", "vf_loss", "entropy", "kl"}``.
+    """
+    if use_pallas():
+        from repro.kernels.surrogate import ppo_surrogate_pallas
+
+        pg_i, vf_i, ent_i, kl_i = ppo_surrogate_pallas(
+            logits, values, actions, behaviour_logp, advantages, returns,
+            clip_eps=clip_eps,
+        )
+    else:
+        pg_i, vf_i, ent_i, kl_i = _ref.ppo_surrogate_ref(
+            logits, values, actions, behaviour_logp, advantages, returns,
+            clip_eps=clip_eps,
+        )
+    pg = jnp.mean(pg_i)
+    vf = jnp.mean(vf_i)
+    ent = jnp.mean(ent_i)
+    kl = jnp.mean(kl_i)
+    loss = pg + vf_coef * vf - ent_coef * ent
+    return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent, "kl": kl}
 
 
 # The advantage-estimation oracles live with the RL numerics

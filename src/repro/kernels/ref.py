@@ -5,6 +5,8 @@
 - ``decode_attention_ref``: single-token attention against a KV cache
 - ``rwkv6_ref``         : step-by-step WKV recurrence (data-dependent decay)
 - ``moe_gmm_ref``       : grouped matmul over per-expert token groups
+- ``ppo_surrogate_ref`` : per-row PPO surrogate terms (ratio/clip/min/
+                          entropy/value error) — the fused-loss oracle
 """
 
 from __future__ import annotations
@@ -21,6 +23,7 @@ __all__ = [
     "decode_attention_ref",
     "rwkv6_ref",
     "moe_gmm_ref",
+    "ppo_surrogate_ref",
 ]
 
 
@@ -153,6 +156,34 @@ def rwkv6_ref(
     else:
         state, out = jax.lax.scan(step, state, xs)
     return out.swapaxes(0, 1).astype(r.dtype), state
+
+
+def ppo_surrogate_ref(
+    logits: jax.Array,          # [B, A]
+    values: jax.Array,          # [B]
+    actions: jax.Array,         # [B] int
+    behaviour_logp: jax.Array,  # [B]
+    advantages: jax.Array,      # [B]
+    returns: jax.Array,         # [B]
+    clip_eps: float = 0.2,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-row PPO surrogate terms, op-for-op the ``rl/policy.py`` PPO loss
+    downstream of ``logits_value`` (the CPU path of ``ops.fused_ppo_loss``
+    is bit-identical to the historical in-policy loss).  Returns
+    (pg_i, vf_i, ent_i, kl_i), each [B]; batch means + coefficient
+    combination happen in the dispatcher, shared with the kernel path."""
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(
+        logp_all, actions.astype(jnp.int32)[:, None], axis=-1
+    )[:, 0]
+    entropy = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+    ratio = jnp.exp(logp - behaviour_logp)
+    unclipped = ratio * advantages
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * advantages
+    pg = -jnp.minimum(unclipped, clipped)
+    vf = jnp.square(values - returns)
+    kl = behaviour_logp - logp
+    return pg, vf, entropy, kl
 
 
 def moe_gmm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:

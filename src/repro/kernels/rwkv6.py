@@ -83,6 +83,12 @@ def rwkv6_pallas(
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     B, T, H, N = r.shape
+    if state is not None:
+        # The kernel's VMEM state scratch is zero-initialized on the first
+        # chunk; a nonzero initial state would need an extra input stream.
+        # Checked *before* any compute — callers needing stateful resume go
+        # through ``ops.rwkv6``, which routes them to the exact reference.
+        raise NotImplementedError("rwkv6_pallas starts from zero state")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     chunk = min(chunk, T)
@@ -113,9 +119,4 @@ def rwkv6_pallas(
         interpret=interpret,
     )(tm(r), tm(k), tm(v), tm(w), u)
     out = out.transpose(0, 2, 1, 3)
-    if state is not None:
-        # Initial state support is handled by the caller folding it into the
-        # first chunk; for the framework path the train/prefill state starts
-        # at zero, matching the oracle default.
-        raise NotImplementedError("rwkv6_pallas starts from zero state")
     return out, s_out

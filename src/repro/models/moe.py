@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed import shard
+from repro.kernels import ops
 from repro.models.layers import dense_init
 
 PyTree = Any
@@ -113,18 +114,74 @@ def moe_init(key: jax.Array, cfg: ModelConfig) -> PyTree:
     return p
 
 
+# --------------------------------------------------------------------------
+# Expert matmuls, routed through the grouped-matmul kernel.
+#
+# The [B, E, C, d] dispatch buffer *is* a grouped-rows layout: transposing to
+# [E, B*C, d] makes every expert's tokens contiguous with a static group size
+# of B*C rows, exactly what ``ops.moe_gmm`` (MegaBlocks-style Pallas kernel,
+# scalar-prefetch expert ids) consumes.  ``pallas_call`` has no transpose
+# rule, so the routed op carries a custom_vjp whose backward is the two
+# batched einsums of the dense path — gradients are identical to the einsum
+# the kernel replaces.
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def _gmm_matmul(xe, w):
+    """[B, E, C, K] x [E, K, N] -> [B, E, C, N] via ``ops.moe_gmm``."""
+    B, E, C, K = xe.shape
+    xg = xe.transpose(1, 0, 2, 3).reshape(E * B * C, K)
+    groups = jnp.full((E,), B * C, jnp.int32)
+    # Row tiles may not straddle an expert boundary: block_m must divide the
+    # per-expert group of B*C rows (the _gmm_ok gate guarantees it can).
+    block_m = B * C if B * C <= 128 else 128
+    out = ops.moe_gmm(xg, w, groups, block_m=block_m)
+    return out.reshape(E, B, C, w.shape[-1]).transpose(1, 0, 2, 3).astype(xe.dtype)
+
+
+def _gmm_matmul_fwd(xe, w):
+    return _gmm_matmul(xe, w), (xe, w)
+
+
+def _gmm_matmul_bwd(res, dy):
+    xe, w = res
+    dxe = jnp.einsum("becn,ekn->beck", dy, w).astype(xe.dtype)
+    dw = jnp.einsum("beck,becn->ekn", xe, dy).astype(w.dtype)
+    return dxe, dw
+
+
+_gmm_matmul.defvjp(_gmm_matmul_fwd, _gmm_matmul_bwd)
+
+
+def _gmm_ok(xe: jax.Array, w: jax.Array) -> bool:
+    """Kernel tiling gate: the per-expert group of B*C rows must be
+    tileable by a block_m that never straddles an expert boundary (B*C
+    itself when small, else 128 | B*C), and the output columns by
+    ``min(128, N)``; otherwise the dense einsum stays."""
+    B, E, C, _ = xe.shape
+    group, cols = B * C, w.shape[-1]
+    rows_ok = group <= 128 or group % 128 == 0
+    cols_ok = cols % min(128, max(cols, 1)) == 0
+    return ops.use_pallas() and rows_ok and cols_ok
+
+
+def _expert_mm(xe: jax.Array, w: jax.Array) -> jax.Array:
+    if _gmm_ok(xe, w):
+        return _gmm_matmul(xe, w)
+    return jnp.einsum("beck,ekn->becn", xe, w)
+
+
 def _expert_ffn(p: PyTree, xe: jax.Array, cfg: ModelConfig) -> jax.Array:
     """xe: [B, E, C, d] -> [B, E, C, d] via per-expert (gated) FFN."""
-    h = jnp.einsum("becd,edf->becf", xe, p["up"])
+    h = _expert_mm(xe, p["up"])
     h = shard(h, "batch", "experts", None, None)
     if cfg.activation == "silu":
-        g = jnp.einsum("becd,edf->becf", xe, p["gate"])
+        g = _expert_mm(xe, p["gate"])
         h = jax.nn.silu(g) * h
     elif cfg.activation == "relu2":
         h = jnp.square(jax.nn.relu(h))
     else:
         h = jax.nn.gelu(h)
-    out = jnp.einsum("becf,efd->becd", h, p["down"])
+    out = _expert_mm(h, p["down"])
     return shard(out, "batch", "experts", None, None)
 
 

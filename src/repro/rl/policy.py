@@ -134,17 +134,25 @@ class ActorCriticPolicy:
         return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent}
 
     def _ppo_loss(self, params, batch):
-        logp, entropy, values = self._dist_terms(params, batch)
-        ratio = jnp.exp(logp - batch["logp"])
-        adv = batch["advantages"]
-        unclipped = ratio * adv
-        clipped = jnp.clip(ratio, 1 - self.clip_eps, 1 + self.clip_eps) * adv
-        pg = -jnp.mean(jnp.minimum(unclipped, clipped))
-        vf = jnp.mean(jnp.square(values - batch["returns"]))
-        ent = jnp.mean(entropy)
-        loss = pg + self.vf_coef * vf - self.ent_coef * ent
-        kl = jnp.mean(batch["logp"] - logp)
-        return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent, "kl": kl}
+        """Clipped-surrogate PPO loss via ``ops.fused_ppo_loss``: the fused
+        Pallas kernel on TPU (one pass over the batch panel, differentiable
+        through a hand-written Pallas backward), the bit-identical jnp math
+        this method used to inline on CPU — the oracle the kernel is
+        parity-tested against (``tests/test_kernel_surrogate.py``)."""
+        from repro.kernels.ops import fused_ppo_loss
+
+        logits, values = self.logits_value(params, batch["obs"])
+        return fused_ppo_loss(
+            logits,
+            values,
+            batch["actions"],
+            batch["logp"],
+            batch["advantages"],
+            batch["returns"],
+            clip_eps=self.clip_eps,
+            vf_coef=self.vf_coef,
+            ent_coef=self.ent_coef,
+        )
 
     def _vtrace_loss(self, params, batch):
         """IMPALA: importance-corrected off-policy actor-critic.
