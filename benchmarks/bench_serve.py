@@ -1,0 +1,205 @@
+"""Serving-tier soak: open-loop load over the multi-replica router.
+
+ISSUE 9 acceptance bench.  ``launch/serve.py``'s open-loop client (arrival
+times fixed in advance — queueing delay counts against latency) drives four
+tier shapes: 1 vs 3 replicas x stateless (least-loaded whole-batch routing)
+vs SSM (sticky lane->replica routing with server-side state).  Recorded
+rows are req/s and p50/p99 action latency per shape.
+
+Gated (all within-run booleans, so they transfer across machines):
+
+  * ``serve_bit_parity_ok`` — a 3-replica stateless tier returns results
+    bit-identical to one direct local dispatch (routing adds no numerics);
+  * ``serve_sticky_pinning_ok`` — under sticky routing every lane's state
+    lives on exactly one replica and pins survive a full soak;
+  * ``serve_replica_kill_recovery_ok`` — killing 1 of 3 replicas mid-load
+    under ``drop_shard`` drops only in-flight requests, the router heals to
+    2 replicas, and load completes;
+  * ``serve_latency_tail_ok`` — the p99/p50 tail of the 3-replica stateless
+    soak stays within a generous envelope (p99 <= 100*p50 + 50ms): a
+    head-of-line-blocking regression in the router or admission queue blows
+    this up by orders of magnitude, while machine speed cancels out.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+GATED: Dict[str, Dict[str, float]] = {
+    "serve_bit_parity_ok": {"min": 1.0, "value": 1.0},
+    "serve_sticky_pinning_ok": {"min": 1.0, "value": 1.0},
+    "serve_replica_kill_recovery_ok": {"min": 1.0, "value": 1.0},
+    "serve_latency_tail_ok": {"min": 1.0, "value": 1.0},
+}
+
+_LANES = 8
+
+
+def _warm(router, lanes_n: int = 2 * _LANES) -> None:
+    # Two co-batched clients x _LANES lanes: the admission queue can merge
+    # both clients' requests into one dispatch, so warm up to 2*_LANES.
+    from repro.launch.serve import warm_replicas
+
+    warm_replicas(router, lanes_n=lanes_n)
+
+
+def _soak_rows(
+    tag: str, policy: str, replicas: int, requests: int
+) -> Tuple[List[Tuple[str, float, str]], Dict[str, float]]:
+    from repro.launch.serve import build_serving_tier, open_loop_load
+
+    router, _ = build_serving_tier(policy=policy, replicas=replicas, seed=7)
+    try:
+        _warm(router)
+        res = open_loop_load(
+            router,
+            rate_hz=300.0,
+            num_requests=requests,
+            lanes_per_request=_LANES,
+            num_clients=2,
+            seed=7,
+        )
+    finally:
+        router.stop()
+    rows = [
+        (f"serve_{tag}_rps", round(res["rps"], 1), f"{replicas} replica(s)"),
+        (f"serve_{tag}_p50_ms", round(res["latency_p50_s"] * 1e3, 2), "open-loop"),
+        (f"serve_{tag}_p99_ms", round(res["latency_p99_s"] * 1e3, 2), "open-loop"),
+    ]
+    return rows, res
+
+
+def run(iters: int = 10, trials: int = 3) -> List[Tuple[str, float, str]]:
+    import numpy as np
+
+    from repro.launch.serve import build_serving_tier, open_loop_load
+    from repro.rl.inference import InferenceActor
+    from repro.rl.policy import DummyPolicy
+
+    requests = max(60, iters * 12)
+    rows: List[Tuple[str, float, str]] = []
+
+    # ---------------------------------------------- soak grid (recorded)
+    for tag, policy, replicas in (
+        ("stateless_r1", "stateless", 1),
+        ("stateless_r3", "stateless", 3),
+        ("sticky_ssm_r1", "ssm", 1),
+        ("sticky_ssm_r3", "ssm", 3),
+    ):
+        soak, res = _soak_rows(tag, policy, replicas, requests)
+        rows.extend(soak)
+        if tag == "stateless_r3":
+            tail_ok = (
+                res["latency_p99_s"] <= 100.0 * res["latency_p50_s"] + 0.050
+                and res["requests_dropped"] == 0
+            )
+            rows.append(
+                (
+                    "serve_latency_tail_ok",
+                    1.0 if tail_ok else 0.0,
+                    "p99<=100*p50+50ms, no drops",
+                )
+            )
+
+    # ------------------------------------- bit parity: router == local
+    rng = np.random.RandomState(7)
+    obs = rng.randn(_LANES, 4).astype(np.float32)
+    keys = rng.randint(0, 2**31, size=(_LANES, 2)).astype(np.uint32)
+    local = InferenceActor(lambda: DummyPolicy(4, 2), seed=7)
+    ref = local.compute_actions(obs, keys)
+    router, _ = build_serving_tier(policy="stateless", replicas=3, seed=7)
+    try:
+        _warm(router)
+        got = router.compute_actions(obs, keys)
+    finally:
+        router.stop()
+    parity = all(np.array_equal(a, b) for a, b in zip(ref, got))
+    rows.append(("serve_bit_parity_ok", 1.0 if parity else 0.0, "3-replica==local"))
+
+    # ----------------------------- sticky pinning holds over a full soak
+    router, actors = build_serving_tier(policy="ssm", replicas=3, seed=7)
+    try:
+        _warm(router)
+        open_loop_load(
+            router,
+            rate_hz=300.0,
+            num_requests=requests // 2,
+            lanes_per_request=_LANES,
+            num_clients=2,
+            seed=7,
+        )
+        per_rep = [a.sync("stats")["num_lane_states"] for a in actors]
+        stats = router.stats()
+        # Disjoint server-side state: the lane universe is 2 clients x 8
+        # disjoint lanes (warmup lanes are negative and reset); every pinned
+        # lane has state on exactly one replica.
+        pin_ok = (
+            sum(per_rep) == stats["num_pinned_lanes"]
+            and stats["num_lane_repins"] == 0
+            and stats["sticky"] is True
+        )
+    finally:
+        router.stop()
+    rows.append(
+        ("serve_sticky_pinning_ok", 1.0 if pin_ok else 0.0, "state on 1 replica/lane")
+    )
+
+    # --------------------- replica kill mid-load under drop_shard heals
+    router, actors = build_serving_tier(
+        policy="stateless", replicas=3, failure_policy="drop_shard", seed=7
+    )
+    try:
+        _warm(router)
+        import threading
+        import time
+
+        # Kill one replica roughly mid-soak (the load runs ~requests/300 s).
+        def kill_one():
+            time.sleep(0.4 * requests / 300.0)
+            actors[0].kill()
+
+        t = threading.Thread(target=kill_one)
+        t.start()
+        res = open_loop_load(
+            router,
+            rate_hz=300.0,
+            num_requests=requests,
+            lanes_per_request=_LANES,
+            num_clients=2,
+            seed=7,
+            on_failure="recover",
+        )
+        t.join()
+        # Clients only call recover() on a tripped request; if the kill
+        # landed between dispatches nothing tripped — heal explicitly (the
+        # same drop_shard path) so the tier's end state is deterministic.
+        router.recover()
+        stats = router.stats()
+        recovery_ok = (
+            stats["num_replicas_dropped"] == 1
+            and len(stats["replicas"]) == 2
+            and res["requests_ok"] + res["requests_dropped"] == requests
+            and res["requests_ok"] > 0
+        )
+        rows.append(
+            (
+                "serve_replica_kill_recovery_ok",
+                1.0 if recovery_ok else 0.0,
+                f"dropped {res['requests_dropped']} in-flight",
+            )
+        )
+        rows.append(
+            (
+                "serve_kill_requests_dropped",
+                float(res["requests_dropped"]),
+                "in-flight only",
+            )
+        )
+    finally:
+        router.stop()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

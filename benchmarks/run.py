@@ -9,6 +9,8 @@ Prints ``name,value,derived`` CSV rows:
   * Fig 15   -> bench_streaming    (vs streaming-system state-serialization)
   * Data plane -> bench_transport  (shm vs pickle process transports,
                                     sample->learn latency, bytes/step)
+  * Serving   -> bench_serve       (multi-replica router soak: parity,
+                                    sticky pinning, kill-recovery, tail)
   * Roofline -> roofline           (dry-run sweep summary)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only name] [--suites a,b]
@@ -75,6 +77,7 @@ def main() -> None:
             trials=2 if args.fast else 3,
         ),
         "loss": _lazy("bench_loss", iters=2 if args.fast else 4),
+        "serve": _lazy("bench_serve", iters=5 if args.fast else 10),
         "roofline": _lazy("roofline"),
     }
 
@@ -94,6 +97,7 @@ def main() -> None:
             "learner": "bench_learner",
             "rollout": "bench_rollout",
             "loss": "bench_loss",
+            "serve": "bench_serve",
             "roofline": "roofline",
         }
         out = {}
@@ -134,7 +138,7 @@ def main() -> None:
         doc = {
             "meta": {
                 "issue": "bench baselines (PR3 data plane, PR5 rollout engine, "
-                "PR8 fused loss + explain)",
+                "PR8 fused loss + explain, PR9 serving tier)",
                 "python": platform.python_version(),
                 "machine": platform.machine(),
                 "suites": sorted(selected),

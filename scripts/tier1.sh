@@ -18,6 +18,8 @@
 #                                      BENCH_PR5.json
 #                                  (3) fused-loss + explain suite vs
 #                                      BENCH_PR8.json
+#                                  (4) serving-tier soak suite vs
+#                                      BENCH_PR9.json
 #                                  each fails on >10% regression of any
 #                                  gated metric
 #   scripts/tier1.sh -m ""      -> full suite, slow tests included
@@ -56,7 +58,9 @@ if [[ "${1:-}" == "--bench" ]]; then
     --json .bench/BENCH_PR3.current.json --gate BENCH_PR3.json "$@"
   python -m benchmarks.run --fast --suites rollout \
     --json .bench/BENCH_PR5.current.json --gate BENCH_PR5.json "$@"
-  exec python -m benchmarks.run --fast --suites loss \
+  python -m benchmarks.run --fast --suites loss \
     --json .bench/BENCH_PR8.current.json --gate BENCH_PR8.json "$@"
+  exec python -m benchmarks.run --fast --suites serve \
+    --json .bench/BENCH_PR9.current.json --gate BENCH_PR9.json "$@"
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

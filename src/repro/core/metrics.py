@@ -187,6 +187,30 @@ class MetricsContext:
         self.info: Dict[str, Any] = {}
         self.current_actor: Any = None
         self._lock = threading.Lock()
+        # Pull-based publishers (ISSUE 9): subsystems that keep their own
+        # counters (the inference router, external pools) register a probe
+        # ``fn(ctx)`` that writes into this context; ``save()`` runs them
+        # first, so serving gauges land in every train() result without the
+        # subsystem pushing on its own hot path.
+        self._probes: list = []
+
+    def register_probe(self, probe: Any) -> None:
+        with self._lock:
+            self._probes.append(probe)
+
+    def unregister_probe(self, probe: Any) -> None:
+        with self._lock:
+            if probe in self._probes:
+                self._probes.remove(probe)
+
+    def run_probes(self) -> None:
+        with self._lock:
+            probes = list(self._probes)
+        for probe in probes:
+            try:
+                probe(self)
+            except Exception:  # a dead publisher must not break reporting
+                pass
 
     @staticmethod
     def _racefree_copy(d: Dict) -> Dict:
@@ -207,6 +231,7 @@ class MetricsContext:
         return self._racefree_copy(self.counters)
 
     def save(self) -> Dict[str, Any]:
+        self.run_probes()
         return {
             "counters": self.snapshot_counters(),
             "info": self._racefree_copy(self.info),

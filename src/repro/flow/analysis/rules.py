@@ -27,7 +27,13 @@ __all__: List[str] = []  # rules register via the decorator, not by import
 
 # Annotation keys lowered onto TrainOneStep-like stages / source nodes.
 _LEARNER_KEYS = ("num_learners", "microbatch")
-_VECTOR_KEYS = ("vector", "inference", "inference_credits")
+_VECTOR_KEYS = (
+    "vector",
+    "inference",
+    "inference_credits",
+    "inference_replicas",
+    "inference_routing",
+)
 
 
 # --------------------------------------------------------------------------
@@ -414,7 +420,33 @@ def _check_vector_annotations(
             f"inference_credits={creds!r} is not a positive int",
             node=node.id, hint="inference_credits must be >= 1",
         )
+    replicas = carried.get("inference_replicas")
+    if replicas is not None and (not isinstance(replicas, int) or replicas < 1):
+        yield Diagnostic(
+            "annotation-lowering", Severity.ERROR,
+            f"inference_replicas={replicas!r} is not a positive int",
+            node=node.id, hint="inference_replicas must be >= 1",
+        )
+    routing = carried.get("inference_routing")
+    if routing is not None and routing not in ("auto", "least_loaded", "sticky"):
+        yield Diagnostic(
+            "annotation-lowering", Severity.ERROR,
+            f"unknown inference routing {routing!r} "
+            "(want 'auto'|'least_loaded'|'sticky')",
+            node=node.id, hint="pick 'auto', 'least_loaded', or 'sticky'",
+        )
     inf = carried.get("inference")
+    if inf != "server" and (replicas is not None or routing is not None):
+        keys = "/".join(
+            k for k in ("inference_replicas", "inference_routing") if k in carried
+        )
+        yield Diagnostic(
+            "annotation-lowering", Severity.WARN,
+            f"{keys} without inference='server': the serving tier only "
+            "lowers in server mode, so the annotation is silently ignored",
+            node=node.id,
+            hint="add inference='server' (or drop the serving knobs)",
+        )
     if inf is not None and inf not in ("local", "server"):
         yield Diagnostic(
             "annotation-lowering", Severity.ERROR,

@@ -240,6 +240,9 @@ class CompiledFlow:
         self._annotated_policies: Dict[int, str] = {}
         self._inference_actors: List[Any] = []
         self._weight_sink_regs: List[Any] = []  # (workers, sink) to undo on stop
+        # node id -> {"router": InferenceRouter, "gate": CreditGate} for every
+        # served source node: the serving-tier handle explain()/tests reach.
+        self._inference_meta: Dict[str, Dict[str, Any]] = {}
         # Multi-host fragments: host name -> owned LocalHostHandle (only for
         # driver-managed hosts this compile launched), host name -> the
         # RemoteBackend its actors were rehomed onto (None = launch failed,
@@ -253,6 +256,13 @@ class CompiledFlow:
         self._rehomed: List[Any] = []  # (actor, original ExecutionBackend)
         assert self.spec.output is not None  # validate() guarantees it
         inner = self._lower_ref(self.spec.output)
+        # Serving metrics flow into train() results via MetricsContext
+        # probes: each router publishes occupancy / admission latency /
+        # credit stalls under inference/<node-id>/ at every save().
+        for nid, meta in self._inference_meta.items():
+            register = getattr(inner.metrics, "register_probe", None)
+            if register is not None:
+                register(meta["router"].metrics_probe(nid))
         self._out = self._deferred_start_wrapper(inner)
         if strict and any(d.is_error for d in self.diagnostics):
             self.stop()
@@ -533,20 +543,25 @@ class CompiledFlow:
             )
 
     def _lower_inference(self, node: Node, workers: Any) -> Optional[List[Any]]:
-        """Build the decoupled-inference serving side for a source node.
+        """Build the decoupled-inference serving tier for a source node.
 
-        ``inference='server'`` lowers to one ``InferenceActor`` (a
-        ``VirtualActor`` with a restart budget, so the chaos/FailurePolicy
-        path can heal it) shared by the node's rollout shards, plus one
-        credit-gated ``InferenceClient`` per shard.  The actor serves the
+        ``inference='server'`` lowers to ``inference_replicas`` (default 1)
+        ``InferenceActor`` replicas — each a ``VirtualActor`` with a restart
+        budget, so the chaos/FailurePolicy path can heal them — behind one
+        ``InferenceRouter`` shared by the node's rollout shards (the router
+        satisfies the client API; the node's ``failure_policy`` doubles as
+        the replica-loss policy).  ``inference_routing`` picks dispatch:
+        ``'auto'`` probes the served policy for statefulness, else
+        ``'least_loaded'``/``'sticky'`` force it.  The router serves the
         local worker's policy and is registered as a weight sink on the
-        WorkerSet, so every ``sync_weights`` broadcast also refreshes the
-        server.  Owned by this CompiledFlow: ``stop()`` stops it.
+        WorkerSet, so every ``sync_weights`` broadcast bumps the weight
+        version on every replica.  Owned by this CompiledFlow: ``stop()``
+        stops the replicas.
         """
         if node.annotations.get("inference") != "server":
             return None
         from repro.core.actor import VirtualActor
-        from repro.rl.inference import CreditGate, InferenceActor, InferenceClient
+        from repro.rl.inference import CreditGate, InferenceActor, InferenceRouter
 
         lw = workers.local_worker()
         policy = getattr(lw, "policy", None)
@@ -562,28 +577,45 @@ class CompiledFlow:
             return None
         num_shards = max(1, len(workers.remote_workers()))
         credits = node.annotations.get("inference_credits") or 2 * num_shards
-        actor = VirtualActor(
-            factory=lambda: InferenceActor(
-                lambda: policy,
-                algo=getattr(lw, "algo", "pg"),
-                epsilon=getattr(lw, "epsilon", 0.0),
-            ),
-            name=f"inference-{node.id}",
-            max_restarts=1,
-            backoff_base=0.0,
-        )
-        gate = CreditGate(int(credits))
-        provider = lw.get_weights
-        clients = [
-            InferenceClient(actor, credits=gate, weights_provider=provider)
-            for _ in range(num_shards)
+        replicas_n = int(node.annotations.get("inference_replicas") or 1)
+        routing = node.annotations.get("inference_routing", "auto")
+        failure_policy = node.annotations.get("failure_policy")
+        if failure_policy not in ("restart", "drop_shard"):
+            failure_policy = "restart"
+        actors = [
+            VirtualActor(
+                factory=lambda: InferenceActor(
+                    lambda: policy,
+                    algo=getattr(lw, "algo", "pg"),
+                    epsilon=getattr(lw, "epsilon", 0.0),
+                ),
+                name=(
+                    f"inference-{node.id}"
+                    if replicas_n == 1
+                    else f"inference-{node.id}-r{i}"
+                ),
+                max_restarts=1,
+                backoff_base=0.0,
+            )
+            for i in range(replicas_n)
         ]
-        clients[0].sync_weights()  # serve canonical weights from the start
+        gate = CreditGate(int(credits))
+        router = InferenceRouter(
+            actors,
+            credits=gate,
+            weights_provider=lw.get_weights,
+            sticky=None if routing == "auto" else routing == "sticky",
+            failure_policy=failure_policy,
+            name=f"inference-router-{node.id}",
+        )
+        router.sync_weights()  # serve canonical weights from the start
         if hasattr(workers, "add_weight_sink"):
-            workers.add_weight_sink(clients[0].sync_weights)
-            self._weight_sink_regs.append((workers, clients[0].sync_weights))
-        self._inference_actors.append(actor)
-        return clients
+            workers.add_weight_sink(router.sync_weights)
+            self._weight_sink_regs.append((workers, router.sync_weights))
+        self._inference_actors.extend(actors)
+        self._inference_meta[node.id] = {"router": router, "gate": gate}
+        # One router shared by every shard: dispatch and health are global.
+        return [router] * num_shards
 
     def _lower_node(self, node: Node) -> Any:
         k, p = node.kind, node.params

@@ -70,6 +70,15 @@ class StageCost:
     calls: int = 0
     bytes_moved: int = 0
     queue_occupancy: Optional[float] = None
+    # Serving-tier join (ISSUE 9): populated for source nodes running
+    # inference='server' — CreditGate contention on the request path plus
+    # the router's continuous-batching occupancy/admission-latency gauges
+    # (published under ``inference/<node-id>/`` by the router probe).
+    credit_stalls: int = 0
+    credit_stall_time_s: float = 0.0
+    serve_replicas: Optional[float] = None
+    serve_occupancy_mean: Optional[float] = None
+    serve_admission_p99_s: Optional[float] = None
     # Verdict.
     kernel_candidate: bool = False
     note: str = ""
@@ -208,6 +217,10 @@ def explain_flow(
     live ``MetricsContext`` of the algorithm's iterator — run a few
     ``train()`` steps first if you want the wall-time columns populated.
     """
+    # Pull-based publishers (the serving tier's router probes) only write on
+    # save(); run them so the join below sees current serving gauges even if
+    # no train() result was pulled since the last request.
+    getattr(metrics, "run_probes", lambda: None)()
     spec = compiled.spec
     rows: List[StageCost] = []
     for node in spec.nodes.values():
@@ -224,6 +237,20 @@ def explain_flow(
         occ = metrics.gauges.get(QUEUE_OCCUPANCY_PREFIX + node.id)
         if occ is not None:
             row.queue_occupancy = float(occ)
+        # Serving-tier join: the router probe publishes under
+        # inference/<node-id>/ (see InferenceRouter.metrics_probe).
+        serve = f"inference/{node.id}/"
+        row.credit_stalls = int(metrics.counters.get(serve + "credit_stalls", 0))
+        row.credit_stall_time_s = float(
+            metrics.gauges.get(serve + "credit_stall_time_s", 0.0)
+        )
+        reps = metrics.gauges.get(serve + "replicas")
+        if reps is not None:
+            row.serve_replicas = float(reps)
+            row.serve_occupancy_mean = metrics.gauges.get(serve + "occupancy_mean")
+            row.serve_admission_p99_s = metrics.gauges.get(
+                serve + "admission_wait_p99_s"
+            )
         # Wall-time join, most specific key first: the per-node gather timer
         # (recorded by gather_sync under this node's id), then the canonical
         # operator timers (``sample`` from the low-level ports, ``learn``

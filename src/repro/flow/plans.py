@@ -91,6 +91,9 @@ def build_ppo(
     microbatch: int = 0,
     vector: int = 0,
     inference: str = None,
+    inference_replicas: int = 0,
+    inference_routing: str = None,
+    failure_policy: str = None,
     host: str = None,
 ) -> FlowSpec:
     """Synchronous sample -> concat -> standardize -> multi-epoch SGD.
@@ -102,7 +105,10 @@ def build_ppo(
     ``vector``/``inference`` annotate the rollouts node with the vectorized
     rollout engine (ISSUE 5): N synchronized env lanes per worker with one
     batched policy dispatch per step, optionally served by a decoupled
-    InferenceActor (``inference='server'``).
+    InferenceActor (``inference='server'``).  ``inference_replicas``/
+    ``inference_routing`` scale that into a multi-replica serving tier
+    behind an ``InferenceRouter`` (ISSUE 9); ``failure_policy`` on the
+    rollouts node doubles as the replica-loss policy.
 
     ``host`` places the rollout fragment on a declared host (ISSUE 7): the
     caller must also ``spec.declare_host(host)`` on the returned spec, and
@@ -113,6 +119,9 @@ def build_ppo(
     train_op = (
         spec.rollouts(
             workers, mode="bulk_sync", vector=vector or None, inference=inference,
+            inference_replicas=inference_replicas or None,
+            inference_routing=inference_routing,
+            failure_policy=failure_policy,
             host=host,
         )
         .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")

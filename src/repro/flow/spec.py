@@ -405,6 +405,8 @@ class FlowSpec:
         vector: Optional[int],
         inference: Optional[str],
         inference_credits: Optional[int],
+        inference_replicas: Optional[int] = None,
+        inference_routing: Optional[str] = None,
     ) -> Dict[str, Any]:
         ann: Dict[str, Any] = {}
         if vector is not None:
@@ -423,6 +425,19 @@ class FlowSpec:
                     f"inference_credits= must be >= 1 (got {inference_credits})"
                 )
             ann["inference_credits"] = int(inference_credits)
+        if inference_replicas is not None:
+            if int(inference_replicas) < 1:
+                raise ValueError(
+                    f"inference_replicas= must be >= 1 (got {inference_replicas})"
+                )
+            ann["inference_replicas"] = int(inference_replicas)
+        if inference_routing is not None:
+            if inference_routing not in ("auto", "least_loaded", "sticky"):
+                raise ValueError(
+                    f"unknown inference routing {inference_routing!r} "
+                    "(want 'auto'|'least_loaded'|'sticky')"
+                )
+            ann["inference_routing"] = inference_routing
         return ann
 
     def rollouts(
@@ -436,6 +451,8 @@ class FlowSpec:
         vector: Optional[int] = None,
         inference: Optional[str] = None,
         inference_credits: Optional[int] = None,
+        inference_replicas: Optional[int] = None,
+        inference_routing: Optional[str] = None,
         host: Optional[str] = None,
     ) -> Stream:
         """Experience stream from the rollout workers (paper Fig 5).
@@ -451,9 +468,13 @@ class FlowSpec:
         ``inference='server'`` additionally decouples acting onto a shared
         ``InferenceActor`` (batched requests over the executor transport,
         ``inference_credits`` bounding requests in flight across shards —
-        default ``2 × num_workers``).  Server inference requires
-        thread-backend rollout workers; others fall back to local with a
-        warning.
+        default ``2 × num_workers``).  ``inference_replicas=N`` serves from
+        N replicas behind an ``InferenceRouter`` with per-replica health +
+        weight-version tracking; ``inference_routing`` picks the dispatch
+        policy (``'auto'`` — sticky iff the policy is stateful —
+        ``'least_loaded'``, or ``'sticky'`` lane->replica pinning).  Server
+        inference requires thread-backend rollout workers; others fall back
+        to local with a warning.
         """
         if mode not in ("raw", "bulk_sync", "async"):
             raise ValueError(f"unknown rollout mode {mode!r}")
@@ -464,7 +485,10 @@ class FlowSpec:
             )
         annotations = self._source_annotations(failure_policy, resources, host)
         annotations.update(
-            self._vector_annotations(vector, inference, inference_credits)
+            self._vector_annotations(
+                vector, inference, inference_credits,
+                inference_replicas, inference_routing,
+            )
         )
         node = self._add(
             "rollouts", (),
@@ -503,6 +527,8 @@ class FlowSpec:
         vector: Optional[int] = None,
         inference: Optional[str] = None,
         inference_credits: Optional[int] = None,
+        inference_replicas: Optional[int] = None,
+        inference_routing: Optional[str] = None,
         host: Optional[str] = None,
     ) -> Stream:
         """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C).
@@ -512,7 +538,10 @@ class FlowSpec:
         the same engine)."""
         annotations = self._source_annotations(failure_policy, resources, host)
         annotations.update(
-            self._vector_annotations(vector, inference, inference_credits)
+            self._vector_annotations(
+                vector, inference, inference_credits,
+                inference_replicas, inference_routing,
+            )
         )
         node = self._add(
             "par_gradients", (), {"workers": workers}, "ComputeGradients", True,

@@ -8,9 +8,11 @@ from repro.rl.env import (
     VectorEnvState,
 )
 from repro.rl.inference import (
+    AdmissionQueue,
     CreditGate,
     InferenceActor,
     InferenceClient,
+    InferenceRouter,
     InferenceUnavailable,
 )
 from repro.rl.learner_group import ShardedLearnerGroup
@@ -29,6 +31,7 @@ from repro.rl.rollout_worker import (
     VectorizedRolloutWorker,
 )
 from repro.rl.sample_batch import MultiAgentBatch, SampleBatch, concat_batches
+from repro.rl.stateful_policy import SSMStatePolicy
 from repro.rl.transformer_policy import TransformerPolicy
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -510,13 +510,23 @@ class VectorizedRolloutWorker(RolloutWorker):
                 self.inference_client.recover()
 
     def _server_rollout(self) -> Dict[str, np.ndarray]:
+        # Routing clients (InferenceRouter) want the global lane ids so
+        # stateful policies can be sticky-routed; plain clients/bare targets
+        # keep the two-argument call (legacy fakes in the chaos suite).
+        send_lanes = bool(getattr(self.inference_client, "wants_lanes", False))
+        lanes = np.asarray(self._lane_base) if send_lanes else None
         steps: List[Dict[str, np.ndarray]] = []
         for _ in range(self.rollout_len):
             self.act_rng, k_act = VectorEnv._split_lanes(self.act_rng)
             obs = np.asarray(self.vstate.obs)
-            action, logp, value = self.inference_client.compute_actions(
-                obs, np.asarray(k_act)
-            )
+            if lanes is not None:
+                action, logp, value = self.inference_client.compute_actions(
+                    obs, np.asarray(k_act), lanes
+                )
+            else:
+                action, logp, value = self.inference_client.compute_actions(
+                    obs, np.asarray(k_act)
+                )
             self.vstate, out = self._vstep_jit(self.vstate, jnp.asarray(action))
             steps.append(
                 {

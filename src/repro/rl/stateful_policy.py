@@ -1,0 +1,120 @@
+"""Stateful (recurrent) serving policies: per-lane state lives server-side.
+
+The serving tier's *stateful-policy protocol* is two methods on top of the
+usual ``init_params``:
+
+  * ``init_lane_state(n) -> pytree`` — fresh recurrent state for ``n`` lanes
+    (leading axis ``n`` on every leaf, so the server can gather/scatter
+    per-lane rows with ``tree_map``).
+  * ``compute_actions_stateful(params, obs[B,D], keys[B,2], state) ->
+    (actions, logp, values, new_state)`` — one decode step over a batch of
+    lanes, carrying the state exactly like env state in a rollout actor
+    (DESIGN.md §4: model-state-as-actor-state).
+
+``InferenceActor`` detects the protocol (``hasattr(policy,
+"init_lane_state")``), keys the state by the caller's global lane id, and
+``InferenceRouter`` then routes those lanes *sticky*: a lane's state exists
+on exactly one replica, so its requests must keep landing there.
+
+``SSMStatePolicy`` below is the concrete exemplar: a Mamba block
+(``models/ssm.py``) as the actor-critic trunk, whose selective-scan state
+``{"h": [B, d_in, d_state], "conv": [B, d_conv-1, d_in]}`` is the per-lane
+server-side state.  A KV-cache transformer policy
+(``kernels/decode_attention.py``) slots into the same protocol — the cache
+is just a bigger pytree with the same leading lane axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, SSMConfig
+from repro.models.ssm import init_mamba_state, mamba_decode, mamba_init
+from repro.rl.policy import mlp_apply, mlp_init
+
+PyTree = Any
+
+__all__ = ["SSMStatePolicy"]
+
+
+def _serve_ssm_config(d_model: int, d_state: int) -> ModelConfig:
+    return ModelConfig(
+        name="serve-ssm",
+        arch_type="ssm",
+        num_layers=1,
+        d_model=d_model,
+        num_heads=1,
+        num_kv_heads=1,
+        d_ff=d_model,
+        vocab_size=1,
+        block_pattern=(LayerSpec(kind="mamba", mlp="none"),),
+        ssm=SSMConfig(kind="mamba", d_state=d_state, d_conv=2, expand=1),
+        dtype="float32",
+    )
+
+
+class SSMStatePolicy:
+    """Discrete actor-critic over a single Mamba block, decoded one env step
+    at a time with O(1) per-lane state.
+
+    Each ``compute_actions_stateful`` call is one token of an unbounded
+    decode: the observation embeds to a d_model token, the Mamba block
+    advances ``(h, conv)`` for every lane in the batch, and policy/value
+    heads read the block output.  The recurrent state is returned to the
+    caller (the serving actor), never kept here — the policy object stays
+    stateless and picklable.
+    """
+
+    def __init__(
+        self,
+        obs_dim: int,
+        num_actions: int,
+        d_model: int = 32,
+        d_state: int = 4,
+    ):
+        self.obs_dim = obs_dim
+        self.num_actions = num_actions
+        self.cfg = _serve_ssm_config(d_model, d_state)
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        d = self.cfg.d_model
+        return {
+            "embed": jax.random.normal(k1, (self.obs_dim, d), jnp.float32)
+            * (1.0 / jnp.sqrt(self.obs_dim)),
+            "trunk": mamba_init(k2, self.cfg),
+            "pi": mlp_init(k3, (d, self.num_actions)),
+            "vf": mlp_init(k4, (d, 1), scale_last=1.0),
+        }
+
+    # ------------------------------------------------ stateful-policy protocol
+    def init_lane_state(self, n: int) -> PyTree:
+        """Fresh decode state for ``n`` lanes (leading axis n on each leaf)."""
+        return init_mamba_state(self.cfg, n)
+
+    def compute_actions_stateful(
+        self, params: PyTree, obs: jax.Array, keys: jax.Array, state: PyTree
+    ) -> Tuple[jax.Array, jax.Array, jax.Array, PyTree]:
+        """One decode step for a batch of lanes with per-lane RNG keys."""
+        x = (obs @ params["embed"])[:, None, :]  # [B, 1, d_model]
+        out, new_state = mamba_decode(params["trunk"], x, state, self.cfg)
+        h = jnp.tanh(out[:, 0])
+        logits = mlp_apply(params["pi"], h)
+        action = jax.vmap(jax.random.categorical)(keys, logits)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, action[:, None], axis=-1)[:, 0]
+        value = mlp_apply(params["vf"], h)[:, 0]
+        return action, logp, value, new_state
+
+    # ------------------------------------------------------- value queries
+    def value(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        """State-free value estimate (bootstrap queries): decode one step
+        from a fresh state without advancing anything."""
+        x = (obs @ params["embed"])[:, None, :]
+        out, _ = mamba_decode(
+            params["trunk"], x, init_mamba_state(self.cfg, obs.shape[0]), self.cfg
+        )
+        return mlp_apply(params["vf"], jnp.tanh(out[:, 0]))[:, 0]

@@ -323,6 +323,61 @@ def test_chaos_kill_inference_actor_recovers_and_drops_only_inflight():
         algo.stop()
 
 
+def test_chaos_kill_one_of_three_replicas_drop_shard_heals_router():
+    """ISSUE 9 satellite: kill 1 of 3 inference replicas mid-training under
+    ``drop_shard``.  Sticky routing makes the loss deterministic: the killed
+    replica holds pinned lanes, so the owning worker's next request MUST
+    trip (a pinned lane is never silently served elsewhere), that worker
+    drops only its in-flight fragment, recover() removes the replica and
+    re-pins the orphaned lanes, and training continues on the surviving two
+    — every emitted batch stays whole."""
+    ws = WorkerSet.create(make_vec_inference_worker, 2)  # thread backend
+    algo = flow.Algorithm.from_plan(
+        "ppo", ws, train_batch_size=32, num_sgd_iter=1,
+        inference="server", inference_replicas=3,
+        inference_routing="sticky", failure_policy="drop_shard",
+    )
+    try:
+        r1 = algo.train()
+        actors = algo.compiled._inference_actors
+        assert len(actors) == 3
+        ((nid, meta),) = algo.compiled._inference_meta.items()
+        router = meta["router"]
+        stats = router.stats()
+        assert len(stats["replicas"]) == 3
+        assert stats["num_pinned_lanes"] == 4  # 2 shards x 2 lanes
+
+        # Session affinity pins the first shard's lanes to the first
+        # replica: killing it guarantees a pinned-lane trip next rollout.
+        actors[0].kill()
+
+        r2 = algo.train()
+        assert (
+            r2["counters"]["num_steps_sampled"]
+            > r1["counters"]["num_steps_sampled"]
+        )
+        drops = sum(
+            a.sync("episode_stats")["fragments_dropped"]
+            for a in ws.remote_workers()
+        )
+        assert 1 <= drops <= 2  # at most one in-flight fragment per shard
+        # Every batch that reached the learner was whole (lanes x T each).
+        assert r2["counters"]["num_steps_sampled"] % (2 * 8) == 0
+        stats = router.stats()
+        assert stats["num_replicas_dropped"] == 1
+        assert len(stats["replicas"]) == 2
+        assert stats["num_replica_failures"] >= 1
+        assert stats["num_lane_repins"] >= 2  # the dead replica's lanes
+        assert stats["num_pinned_lanes"] == 4  # ... re-pinned on survivors
+        # The serving-tier probe reports the shrunken tier in train() results.
+        r3 = algo.train()
+        assert r3["counters"]["num_steps_trained"] > r2["counters"]["num_steps_trained"]
+        assert r3["counters"][f"inference/{nid}/num_replicas_dropped"] == 1
+        assert r3["gauges"][f"inference/{nid}/replicas"] == 2.0
+    finally:
+        algo.stop()
+
+
 def test_inference_fault_injection_is_deterministic():
     """Seeded RaiseOnNth against the inference target: the supervisor
     rebuilds it (restart budget), the client re-syncs weights, and exactly

@@ -1,0 +1,422 @@
+"""Serving tier (ISSUE 9): multi-replica routing + continuous batching.
+
+Pins the production-inference contracts end to end:
+
+  * an N-replica stateless tier is bit-identical to one local inference
+    (routing adds no numerics);
+  * sticky lane->replica routing pins a request's lanes together (session
+    affinity), keeps pins stable across steps, and re-pins — with a state
+    reset, counted — only through ``recover()`` after a replica loss;
+  * weight-version tracking refuses a replica that missed a
+    ``sync_weights`` broadcast, even one restarted out-of-band, until
+    ``recover()`` re-syncs it;
+  * the admission queue's continuous batching is result-invariant
+    (chunked == unbounded) and co-batches interleaved clients into one
+    dispatch;
+  * AdmissionQueue invariants — conservation, FIFO fairness, bounded
+    occupancy — hold under arbitrary op interleavings (hypothesis when
+    installed, a seeded model-based fuzzer always);
+  * ``Algorithm.explain()`` joins the serving-tier gauges (credit stalls,
+    replica count) onto the served rollouts node's row.
+"""
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as c
+import repro.flow as flow
+from repro.core.actor import VirtualActor
+from repro.rl import (
+    AdmissionQueue,
+    CreditGate,
+    DummyPolicy,
+    InferenceActor,
+    InferenceRouter,
+    InferenceUnavailable,
+    SSMStatePolicy,
+    StubEnv,
+    VectorizedRolloutWorker,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: the fuzzer still runs
+    HAVE_HYPOTHESIS = False
+
+
+def dummy_factory():
+    return DummyPolicy(4, 2)
+
+
+def ssm_factory():
+    return SSMStatePolicy(4, 2)
+
+
+def make_vec_worker(i, **kw):
+    kw.setdefault("num_envs", 4)
+    kw.setdefault("rollout_len", 8)
+    kw.setdefault("seed", 21)
+    kw.setdefault("algo", "pg")
+    return VectorizedRolloutWorker(
+        StubEnv(max_steps=6), DummyPolicy(4, 2), worker_index=i, **kw
+    )
+
+
+def _rows(n, seed=0, obs_dim=4):
+    rng = np.random.RandomState(seed)
+    obs = rng.randn(n, obs_dim).astype(np.float32)
+    keys = rng.randint(0, 2**31, size=(n, 2)).astype(np.uint32)
+    return obs, keys
+
+
+def _virtual_replicas(factory, n, prefix):
+    return [
+        VirtualActor(
+            factory=lambda: InferenceActor(factory, seed=7),
+            name=f"{prefix}-{i}",
+            max_restarts=1,
+            backoff_base=0.0,
+        )
+        for i in range(n)
+    ]
+
+
+# ------------------------------------------------------------- bit parity
+def test_three_replica_server_bit_matches_local_mode():
+    """ISSUE 9 acceptance: N-replica serving is the same computation as
+    local inference — identical weights + key chains => identical streams,
+    through the full rollout-worker sample() path."""
+    actors = _virtual_replicas(dummy_factory, 3, "parity")
+    router = InferenceRouter(actors, credits=CreditGate(2), name="parity")
+    w_srv = make_vec_worker(1, inference="server", inference_client=router)
+    router.sync_weights(w_srv.get_weights())
+    w_loc = make_vec_worker(1)
+    w_loc.set_weights(w_srv.get_weights())
+    try:
+        for _ in range(2):
+            b_srv, b_loc = w_srv.sample(), w_loc.sample()
+            assert set(b_srv.keys()) == set(b_loc.keys())
+            for k in b_srv:
+                np.testing.assert_array_equal(b_srv[k], b_loc[k], err_msg=k)
+        # The router actually served every request of both rollouts.
+        assert router.stats()["num_requests"] >= 16  # 2 samples x 8 steps
+    finally:
+        router.stop()
+
+
+# ---------------------------------------------------------- sticky routing
+def test_sticky_pins_request_lanes_together_and_stays_pinned():
+    """Session affinity: all of a request's new lanes pin to ONE replica
+    (per-lane spreading would shred batching), and repeated steps reuse the
+    pin without ever re-pinning."""
+    reps = [InferenceActor(ssm_factory, seed=7) for _ in range(3)]
+    router = InferenceRouter(reps, name="sticky")
+    assert router.sticky is True  # probed from the stateful replica
+    obs, keys = _rows(8, seed=1)
+    lanes_a = np.arange(8)
+    lanes_b = np.arange(100, 108)
+    for step in range(3):
+        router.compute_actions(obs, keys, lanes_a)
+        router.compute_actions(obs, keys, lanes_b)
+    stats = router.stats()
+    assert stats["num_pinned_lanes"] == 16
+    assert stats["num_lane_repins"] == 0
+    # Each lane set lives wholly on one replica: per-replica state counts
+    # are a partition of the 16 lanes into request-sized groups.
+    per_rep = [r.stats()["num_lane_states"] for r in reps]
+    assert sum(per_rep) == 16
+    assert all(n in (0, 8, 16) for n in per_rep)
+    # Lane state actually evolved server-side across the 3 steps.
+    assert all(r.stats()["num_lane_steps"] % 8 == 0 for r in reps)
+
+
+def test_sticky_repins_with_state_reset_after_replica_loss():
+    """A lane pinned to a dead replica fails the request (never silently
+    served without its state); recover() under drop_shard removes the
+    replica, unpins its lanes with a state reset (counted), and the next
+    request re-pins onto a survivor."""
+    actors = _virtual_replicas(ssm_factory, 3, "repin")
+    router = InferenceRouter(
+        actors, credits=CreditGate(2), failure_policy="drop_shard", name="repin"
+    )
+    obs, keys = _rows(8, seed=2)
+    lanes = np.arange(8)
+    try:
+        router.compute_actions(obs, keys, lanes)
+        # Find the replica holding the lane states and kill it.
+        stats = router.stats()
+        victim_name = next(
+            r["name"]
+            for r in stats["replicas"]
+            if r.get("stats", {}).get("num_lane_states") == 8
+        )
+        victim = next(a for a in actors if a.name == victim_name)
+        victim.kill()
+        with pytest.raises(InferenceUnavailable):
+            router.compute_actions(obs, keys, lanes)
+        router.recover()
+        stats = router.stats()
+        assert stats["num_replicas_dropped"] == 1
+        assert len(stats["replicas"]) == 2
+        assert stats["num_lane_repins"] == 8
+        assert stats["num_lane_state_resets"] == 8
+        # Serving continues: the lanes re-pin (fresh state) on a survivor.
+        router.compute_actions(obs, keys, lanes)
+        stats = router.stats()
+        assert stats["num_pinned_lanes"] == 8
+        survivor_states = [
+            r.get("stats", {}).get("num_lane_states", 0)
+            for r in stats["replicas"]
+        ]
+        assert sorted(survivor_states) == [0, 8]
+    finally:
+        router.stop()
+
+
+# ------------------------------------------------------ weight versioning
+def test_stale_replica_refused_until_recover_resyncs():
+    """A replica that missed a sync_weights broadcast — even restarted
+    out-of-band afterwards — stays ineligible until recover() re-syncs it:
+    stale weights never serve."""
+    actors = _virtual_replicas(dummy_factory, 2, "stale")
+    canonical = actors[0].sync("get_weights")
+    router = InferenceRouter(
+        actors,
+        credits=CreditGate(2),
+        weights_provider=lambda: canonical,
+        name="stale",
+    )
+    obs, keys = _rows(4, seed=3)
+    try:
+        router.sync_weights()
+        assert router.stats()["num_eligible"] == 2
+
+        actors[1].kill()
+        router.sync_weights()  # v2 broadcast: the dead replica misses it
+        assert router.weight_version == 2
+        actors[1].restart()  # out-of-band heal: alive but stale
+        assert actors[1].alive
+        stats = router.stats()
+        assert stats["num_eligible"] == 1
+        by_name = {r["name"]: r for r in stats["replicas"]}
+        assert by_name["stale-0"]["weight_version"] == 2
+        assert by_name["stale-1"]["weight_version"] < 2
+        # Requests keep flowing — but only through the fresh replica.
+        router.compute_actions(obs, keys)
+        by_name = {r["name"]: r for r in router.stats()["replicas"]}
+        assert by_name["stale-0"]["stats"]["num_requests"] == 1
+        assert by_name["stale-1"]["stats"]["num_requests"] == 0
+        router.recover()  # re-syncs the stale-but-alive replica
+        stats = router.stats()
+        assert stats["num_eligible"] == 2
+        assert all(r["weight_version"] == 2 for r in stats["replicas"])
+    finally:
+        router.stop()
+
+
+# ---------------------------------------------------- continuous batching
+def test_chunked_continuous_batching_matches_unbounded():
+    """max_batch bounds occupancy per dispatch step without changing any
+    result: chunked serving is bit-identical to whole-batch serving."""
+    obs, keys = _rows(8, seed=4)
+    whole = InferenceActor(dummy_factory, seed=3)
+    chunked = InferenceActor(dummy_factory, seed=3, max_batch=3)
+    ref = whole.compute_actions(obs, keys)
+    got = chunked.compute_actions(obs, keys)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert whole.stats()["num_dispatches"] == 1
+    cs = chunked.stats()
+    assert cs["num_dispatches"] == 3  # 3 + 3 + 2
+    assert cs["queue"]["occupancy_peak"] == 3.0
+    assert cs["queue"]["num_completed"] == 8.0
+
+
+def test_interleaved_clients_cobatch_into_one_dispatch():
+    """Submissions from different clients pending at the same serve step
+    are co-batched into ONE jitted dispatch (continuous batching), and the
+    other client's poll returns its finished rows without a new dispatch."""
+    actor = InferenceActor(dummy_factory, seed=5)
+    obs_a, keys_a = _rows(4, seed=5)
+    obs_b, keys_b = _rows(4, seed=6)
+    ids_a = actor.submit(obs_a, keys_a)
+    ids_b = actor.submit(obs_b, keys_b)
+    res_b = actor.poll(ids_b)  # drives the serve step admitting all 8
+    assert res_b is not None
+    res_a = actor.poll(ids_a)  # already computed: no extra dispatch
+    assert res_a is not None
+    assert actor.stats()["num_dispatches"] == 1
+    assert actor.stats()["queue"]["occupancy_peak"] == 8.0
+    # Per-client results match a dedicated whole-batch dispatch.
+    ref = InferenceActor(dummy_factory, seed=5).compute_actions(obs_a, keys_a)
+    for a, b in zip(ref, res_a):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stateful_submit_requires_lanes():
+    actor = InferenceActor(ssm_factory, seed=7)
+    obs, keys = _rows(2, seed=7)
+    with pytest.raises(ValueError, match="lanes"):
+        actor.submit(obs, keys)
+
+
+# ------------------------------------------- AdmissionQueue property suite
+def _check_op_sequence(rnd, max_occ, num_ops=60):
+    """Model-based check: drive an AdmissionQueue with a random op sequence
+    and assert conservation, FIFO fairness, and bounded occupancy after
+    every op."""
+    q = AdmissionQueue(max_occ)
+    pending, active = [], set()
+    completed, evicted = set(), set()
+    next_id = 0
+    for _ in range(num_ops):
+        op = rnd.choice(("submit", "submit", "admit", "complete", "evict"))
+        if op == "submit":
+            q.submit(next_id)
+            pending.append(next_id)
+            next_id += 1
+        elif op == "admit":
+            got = q.admit()
+            free = len(pending) if max_occ is None else max_occ - len(active)
+            want = pending[: max(0, free)]
+            assert got == want, "admission is not FIFO up to free capacity"
+            active |= set(want)
+            del pending[: len(want)]
+        elif op == "complete" and active:
+            ids = rnd.sample(sorted(active), rnd.randint(1, len(active)))
+            q.complete(ids)
+            active -= set(ids)
+            completed |= set(ids)
+        elif op == "evict" and (pending or active):
+            universe = pending + sorted(active)
+            ids = rnd.sample(universe, rnd.randint(1, len(universe)))
+            assert q.evict(ids) == len(ids)
+            pending = [r for r in pending if r not in set(ids)]
+            active -= set(ids)
+            evicted |= set(ids)
+        # Invariants after every op:
+        assert q.occupancy == len(active)
+        if max_occ is not None:
+            assert q.occupancy <= max_occ
+        s = q.stats()
+        assert s["num_submitted"] == next_id
+        assert s["num_completed"] == len(completed)
+        assert s["num_evicted"] == len(evicted)
+    # Conservation: every id is in exactly one bucket, nothing lost/duped.
+    assert next_id == len(pending) + len(active) + len(completed) + len(evicted)
+    assert not (set(pending) | active) & (completed | evicted)
+    assert not completed & evicted
+
+
+@pytest.mark.parametrize("max_occ", [None, 1, 3])
+@pytest.mark.parametrize("seed", range(25))
+def test_admission_queue_fuzz(seed, max_occ):
+    _check_op_sequence(random.Random(f"{seed}-{max_occ}"), max_occ)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=150, deadline=None)
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        max_occ=st.one_of(st.none(), st.integers(1, 6)),
+    )
+    def test_admission_queue_properties_hypothesis(seed, max_occ):
+        _check_op_sequence(random.Random(seed), max_occ)
+
+
+def test_admission_queue_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="max_occupancy"):
+        AdmissionQueue(0)
+    q = AdmissionQueue(2)
+    q.submit(1)
+    with pytest.raises(ValueError, match="already queued"):
+        q.submit(1)
+    with pytest.raises(ValueError, match="not active"):
+        q.complete([1])  # still pending, never admitted
+    assert q.evict([1]) == 1
+    assert q.evict([1]) == 0  # already gone: a no-op, not an error
+
+
+# ----------------------------------------------------- open-loop load client
+def test_open_loop_load_measures_from_scheduled_arrival():
+    """The serve entrypoint's load client is open-loop: all requests are
+    served at the offered rate, latency/throughput summaries are coherent,
+    and a bare (unsupervised) tier works for in-process tests."""
+    from repro.launch.serve import build_serving_tier, open_loop_load, warm_replicas
+
+    router, actors = build_serving_tier(
+        policy="stateless", replicas=2, supervised=False, seed=1
+    )
+    try:
+        assert len(actors) == 2 and not hasattr(actors[0], "call")
+        warm_replicas(router, lanes_n=8)
+        res = open_loop_load(
+            router,
+            rate_hz=500.0,
+            num_requests=20,
+            lanes_per_request=4,
+            num_clients=2,
+            seed=1,
+        )
+        assert res["requests_ok"] == 20 and res["requests_dropped"] == 0
+        assert res["rps"] > 0 and res["lane_steps_per_s"] == 4 * res["rps"]
+        assert 0 < res["latency_p50_s"] <= res["latency_p99_s"]
+        assert res["offered_rate_hz"] == 500.0
+        # Warmup left no routing state behind (negative lanes were reset).
+        assert router.stats()["num_pinned_lanes"] == 0
+        assert all(a.stats()["num_lane_states"] == 0 for a in actors)
+    finally:
+        router.stop()
+
+
+# --------------------------------------------------- explain() serving join
+def test_explain_joins_credit_stalls_and_replica_gauges():
+    """ISSUE 9 satellite: CreditGate contention and the serving-tier gauges
+    surface on the served rollouts node's explain() row."""
+    ws = c.WorkerSet.create(make_vec_worker, 2)
+    algo = flow.Algorithm.from_plan(
+        "ppo",
+        ws,
+        train_batch_size=64,
+        num_sgd_iter=1,
+        inference="server",
+        inference_replicas=2,
+    )
+    try:
+        algo.train()
+        ((nid, meta),) = algo.compiled._inference_meta.items()
+        gate = meta["gate"]
+        # Manufacture deterministic contention: drain every credit, block
+        # one acquire on a thread, then release — exactly one stall.
+        stalls_before = gate.stalls
+        for _ in range(gate.credits):
+            gate.acquire()
+        blocked = threading.Thread(target=gate.acquire)
+        blocked.start()
+        time.sleep(0.05)
+        for _ in range(gate.credits + 1):
+            gate.release()
+        blocked.join(timeout=10)
+        assert not blocked.is_alive()
+        assert gate.stalls == stalls_before + 1
+
+        report = algo.explain()
+        row = next(r for r in report.rows if r.node_id == nid)
+        assert row.kind == "rollouts"
+        assert row.credit_stalls == gate.stalls >= 1
+        assert row.serve_replicas == 2.0
+        assert row.serve_occupancy_mean > 0
+        assert row.serve_admission_p99_s is not None
+        # ... and the same counters landed in the train() metrics stream.
+        result = algo.train()
+        assert result["counters"][f"inference/{nid}/num_requests"] > 0
+    finally:
+        algo.stop()

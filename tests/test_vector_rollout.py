@@ -217,7 +217,13 @@ def test_inference_actor_serves_and_counts():
     keys = np.stack([np.asarray(jax.random.PRNGKey(i)) for i in range(4)])
     a, logp, v = target.compute_actions(obs, keys)
     assert a.shape == (4,) and logp.shape == (4,) and v.shape == (4,)
-    assert target.stats() == {"num_requests": 1, "num_lane_steps": 4}
+    stats = target.stats()
+    assert stats["num_requests"] == 1 and stats["num_lane_steps"] == 4
+    # Continuous batching defaults to unbounded admission: a whole-batch
+    # request is one admit step + one jitted dispatch (bit-parity anchor).
+    assert stats["num_dispatches"] == 1 and stats["stateful"] is False
+    assert stats["queue"]["num_completed"] == 4.0
+    assert stats["queue"]["occupancy_peak"] == 4.0
     vals = target.compute_values(obs)
     np.testing.assert_allclose(vals, v, atol=1e-5)
 
