@@ -1,0 +1,126 @@
+"""RLHF workload bench: KV-cache decode rollouts vs no-cache re-forward.
+
+PR 10 acceptance bench.  One vectorized LM rollout worker over ``TokenEnv``
+samples on both decode paths (``decode='cache'``: prefill once per episode
+then one ``ops.decode_attention`` step per token; ``decode='forward'``: full
+re-forward every token) and the ``build_ppo_lm`` plan trains through the
+normal ``Algorithm`` facade.  Recorded rows are decode tokens/s per path,
+the cache/no-cache speedup, and the learner step time.
+
+Gated (within-run booleans, so they transfer across machines):
+
+  * ``rlhf_decode_parity_ok`` — one true decode step against a prefilled
+    per-lane cache matches the no-cache forward logits (max gap < 1e-3);
+  * ``rlhf_reward_rising_ok`` — ``build_ppo_lm`` trains >= 3 iterations on
+    the stub programmatic reward and the episode reward rises.
+
+The raw speedup is recorded but not gated: on this CPU container with a
+toy-sized model the O(1)-per-token win is small and machine-dependent,
+while the parity + training gates catch real regressions.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+GATED: Dict[str, Dict[str, float]] = {
+    "rlhf_decode_parity_ok": {"min": 1.0, "value": 1.0},
+    "rlhf_reward_rising_ok": {"min": 1.0, "value": 1.0},
+}
+
+_ENVS = 8
+_LEN = 16
+
+
+def _tokens_per_s(worker, iters: int) -> float:
+    worker.sample()  # warm the jit for the current decode mode
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(iters):
+        n += worker.sample().count
+    return n / (time.perf_counter() - t0)
+
+
+def run(iters: int = 6) -> List[Tuple[str, float, str]]:
+    import jax
+    import numpy as np
+
+    from repro import flow
+    from repro.core.workers import WorkerSet
+    from repro.launch.rlhf import make_rlhf_worker
+
+    rows: List[Tuple[str, float, str]] = []
+
+    # ------------------------------------ decode throughput: cache vs forward
+    w = make_rlhf_worker(0, num_envs=_ENVS, rollout_len=_LEN)
+    cache_tps = _tokens_per_s(w, iters)
+    w.configure_vectorization(decode="forward")
+    fwd_tps = _tokens_per_s(w, iters)
+    rows.append(("rlhf_decode_tokens_per_s", round(cache_tps, 1), "decode=cache"))
+    rows.append(("rlhf_forward_tokens_per_s", round(fwd_tps, 1), "decode=forward"))
+    rows.append(
+        ("rlhf_cache_speedup", round(cache_tps / max(fwd_tps, 1e-9), 3), "cache/forward")
+    )
+
+    # ------------------------------------------- decode/forward parity (gate)
+    w.configure_vectorization(decode="cache")
+    policy = w.policy
+    obs = np.asarray(w.vstate.obs)
+    prev = obs.copy()
+    prev[:, policy.ctx] -= 1  # cache holds tokens 0..L-2; decode appends L-1
+    prev[:, policy.ctx + 1] = 0
+    state = policy.init_lane_state(obs.shape[0])
+    _, _, _, state = policy.compute_actions_stateful(
+        w.params, prev, jax.random.split(jax.random.PRNGKey(0), obs.shape[0]), state
+    )
+    gap = float(policy.decode_parity_gap(w.params, obs, state))
+    rows.append(("rlhf_decode_parity_gap", round(gap, 9), "max |logits| gap"))
+    rows.append(("rlhf_decode_parity_ok", 1.0 if gap < 1e-3 else 0.0, "gap<1e-3"))
+
+    # ------------------------------------------------------ learner step time
+    batch = w.sample()
+    w.learn_on_batch(batch)  # warm
+    t0 = time.perf_counter()
+    trials = max(3, iters // 2)
+    for _ in range(trials):
+        w.learn_on_batch(batch)
+    rows.append(
+        (
+            "rlhf_learner_step_ms",
+            round((time.perf_counter() - t0) / trials * 1e3, 2),
+            f"ppo learn_on_batch({batch.count})",
+        )
+    )
+
+    # ----------------------------- build_ppo_lm trains, reward rises (gate)
+    def mk(i):
+        return make_rlhf_worker(
+            i, num_envs=4, rollout_len=16, d_model=16, n_layers=1, seed=3, lr=1e-2
+        )
+
+    ws = WorkerSet.create(mk, 2)
+    algo = flow.Algorithm.from_plan(
+        "ppo_lm", ws, train_batch_size=128, num_sgd_iter=2, sgd_minibatch_size=64
+    )
+    try:
+        rewards = []
+        for _ in range(4):
+            res = algo.train()
+            rewards.append(res["episodes"]["episode_reward_mean"])
+        trained = res["counters"].get("num_steps_trained", 0)
+        rising = len(rewards) >= 3 and rewards[-1] > rewards[0] and trained >= 3 * 128
+    finally:
+        algo.stop()
+        ws.stop()
+    rows.append(("rlhf_ppo_lm_reward_first", round(rewards[0], 4), "iter 0"))
+    rows.append(("rlhf_ppo_lm_reward_last", round(rewards[-1], 4), f"iter {len(rewards) - 1}"))
+    rows.append(
+        ("rlhf_reward_rising_ok", 1.0 if rising else 0.0, ">=3 iters, reward up")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

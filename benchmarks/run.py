@@ -11,6 +11,8 @@ Prints ``name,value,derived`` CSV rows:
                                     sample->learn latency, bytes/step)
   * Serving   -> bench_serve       (multi-replica router soak: parity,
                                     sticky pinning, kill-recovery, tail)
+  * RLHF      -> bench_rlhf        (KV-cache decode rollouts: parity,
+                                    cache vs no-cache tokens/s, PPO-LM)
   * Roofline -> roofline           (dry-run sweep summary)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only name] [--suites a,b]
@@ -78,6 +80,7 @@ def main() -> None:
         ),
         "loss": _lazy("bench_loss", iters=2 if args.fast else 4),
         "serve": _lazy("bench_serve", iters=5 if args.fast else 10),
+        "rlhf": _lazy("bench_rlhf", iters=3 if args.fast else 6),
         "roofline": _lazy("roofline"),
     }
 
@@ -98,6 +101,7 @@ def main() -> None:
             "rollout": "bench_rollout",
             "loss": "bench_loss",
             "serve": "bench_serve",
+            "rlhf": "bench_rlhf",
             "roofline": "roofline",
         }
         out = {}

@@ -20,6 +20,8 @@
 #                                      BENCH_PR8.json
 #                                  (4) serving-tier soak suite vs
 #                                      BENCH_PR9.json
+#                                  (5) RLHF decode-rollout suite vs
+#                                      BENCH_PR10.json
 #                                  each fails on >10% regression of any
 #                                  gated metric
 #   scripts/tier1.sh -m ""      -> full suite, slow tests included
@@ -60,7 +62,9 @@ if [[ "${1:-}" == "--bench" ]]; then
     --json .bench/BENCH_PR5.current.json --gate BENCH_PR5.json "$@"
   python -m benchmarks.run --fast --suites loss \
     --json .bench/BENCH_PR8.current.json --gate BENCH_PR8.json "$@"
-  exec python -m benchmarks.run --fast --suites serve \
+  python -m benchmarks.run --fast --suites serve \
     --json .bench/BENCH_PR9.current.json --gate BENCH_PR9.json "$@"
+  exec python -m benchmarks.run --fast --suites rlhf \
+    --json .bench/BENCH_PR10.current.json --gate BENCH_PR10.json "$@"
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

@@ -58,12 +58,13 @@ def configure_vectorized_rollouts(
     vector: Optional[int] = None,
     inference: Optional[str] = None,
     inference_clients: Optional[Sequence[Any]] = None,
+    decode: Optional[str] = None,
 ) -> List[Dict[str, Any]]:
     """Broadcast vectorization config onto the rollout workers.
 
-    The graph carries ``vector=``/``inference=`` declaratively (FlowSpec
-    annotations on the rollouts node); this is the lowering step — workers
-    exposing ``configure_vectorization`` (``VectorizedRolloutWorker``)
+    The graph carries ``vector=``/``inference=``/``decode=`` declaratively
+    (FlowSpec annotations on the rollouts node); this is the lowering step —
+    workers exposing ``configure_vectorization`` (``VectorizedRolloutWorker``)
     rebuild their ``VectorEnv`` to ``vector`` lanes and adopt the inference
     mode; anything else (plain ``RolloutWorker``, stubs) is skipped with a
     one-time warning, mirroring the learner-annotation fallback.
@@ -72,8 +73,12 @@ def configure_vectorized_rollouts(
     fewer).  Clients hold live actor handles and do not pickle, so for
     process-backed workers the client is withheld and the worker keeps
     local inference — vectorization still applies.
+
+    ``decode='cache'`` routes local acting through the stateful-policy
+    protocol (per-lane KV cache through the rollout scan); workers whose
+    policy lacks the protocol fall back to ``'forward'`` in their ack.
     """
-    if vector is None and inference is None:
+    if vector is None and inference is None and decode is None:
         return []
     import logging
 
@@ -87,23 +92,25 @@ def configure_vectorized_rollouts(
             # Actor handles don't cross the process RPC boundary.
             client = None
             fell_back.append(actor.name)
+        kwargs: Dict[str, Any] = dict(
+            vector=vector,
+            inference=inference if client is not None or inference != "server" else "local",
+            client=client,
+        )
+        if decode is not None:
+            # Only sent when requested: legacy configure_vectorization
+            # signatures (pre-decode fakes/workers) stay callable.
+            kwargs["decode"] = decode
         try:
-            acks.append(
-                actor.sync(
-                    "configure_vectorization",
-                    vector=vector,
-                    inference=inference if client is not None or inference != "server" else "local",
-                    client=client,
-                )
-            )
+            acks.append(actor.sync("configure_vectorization", **kwargs))
         except AttributeError:
             skipped.append(actor.name)
     log = logging.getLogger(__name__)
     if skipped:
         log.warning(
-            "vector=%s/inference=%s requested but workers %s do not support "
-            "configure_vectorization (expected VectorizedRolloutWorker); they "
-            "keep their existing rollout path", vector, inference, skipped,
+            "vector=%s/inference=%s/decode=%s requested but workers %s do not "
+            "support configure_vectorization (expected VectorizedRolloutWorker); "
+            "they keep their existing rollout path", vector, inference, decode, skipped,
         )
     if fell_back:
         log.warning(
@@ -123,6 +130,7 @@ def ParallelRollouts(
     vector: Optional[int] = None,
     inference: Optional[str] = None,
     inference_clients: Optional[Sequence[Any]] = None,
+    decode: Optional[str] = None,
 ) -> Any:
     """Stream of experience batches from the rollout workers (paper Fig 5).
 
@@ -138,14 +146,16 @@ def ParallelRollouts(
     the workers before the stream starts (see
     ``configure_vectorized_rollouts``): ``vector=N`` resizes each worker's
     ``VectorEnv`` to N lanes; ``inference='server'`` routes acting through
-    the given ``inference_clients`` (decoupled batched inference).
+    the given ``inference_clients`` (decoupled batched inference);
+    ``decode='cache'`` carries per-lane model state (KV cache) through the
+    rollout scan via the stateful-policy protocol.
     """
     if credits is not None and mode != "async":
         raise ValueError(
             f"credits= is an async-gather window; rollout mode {mode!r} has no "
             "in-flight pipeline to bound (use mode='async')"
         )
-    configure_vectorized_rollouts(workers, vector, inference, inference_clients)
+    configure_vectorized_rollouts(workers, vector, inference, inference_clients, decode)
     par = ParallelIterator.from_actors(
         workers.remote_workers(), lambda w: w.sample(), name="ParallelRollouts"
     )
@@ -219,12 +229,14 @@ def par_compute_gradients(
     vector: Optional[int] = None,
     inference: Optional[str] = None,
     inference_clients: Optional[Sequence[Any]] = None,
+    decode: Optional[str] = None,
 ) -> ParallelIterator:
     """ParIter[(grads, info)] — sample + grad computed on each worker.
 
-    ``vector=``/``inference=`` configure the vectorized rollout engine on
-    the workers first (A2C/A3C share the knob with ``ParallelRollouts``)."""
-    configure_vectorized_rollouts(workers, vector, inference, inference_clients)
+    ``vector=``/``inference=``/``decode=`` configure the vectorized rollout
+    engine on the workers first (A2C/A3C share the knob with
+    ``ParallelRollouts``)."""
+    configure_vectorized_rollouts(workers, vector, inference, inference_clients, decode)
 
     def _sample_and_grad(w: Any) -> Tuple[Any, Dict[str, Any]]:
         batch = w.sample()

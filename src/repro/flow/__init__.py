@@ -34,6 +34,7 @@ from repro.flow.plans import (
     build_mbpo,
     build_multi_agent_ppo_dqn,
     build_ppo,
+    build_ppo_lm,
     build_sac,
 )
 from repro.flow.spec import (
@@ -74,6 +75,7 @@ __all__ = [
     "build_mbpo",
     "build_multi_agent_ppo_dqn",
     "build_ppo",
+    "build_ppo_lm",
     "build_sac",
     "compose_stages",
     "explain_flow",

@@ -33,6 +33,7 @@ _VECTOR_KEYS = (
     "inference_credits",
     "inference_replicas",
     "inference_routing",
+    "decode",
 )
 
 
@@ -426,6 +427,13 @@ def _check_vector_annotations(
             "annotation-lowering", Severity.ERROR,
             f"inference_replicas={replicas!r} is not a positive int",
             node=node.id, hint="inference_replicas must be >= 1",
+        )
+    dec = carried.get("decode")
+    if dec is not None and dec not in ("forward", "cache"):
+        yield Diagnostic(
+            "annotation-lowering", Severity.ERROR,
+            f"unknown decode mode {dec!r} (want 'forward'|'cache')",
+            node=node.id, hint="pick 'forward' or 'cache'",
         )
     routing = carried.get("inference_routing")
     if routing is not None and routing not in ("auto", "least_loaded", "sticky"):

@@ -631,6 +631,7 @@ class CompiledFlow:
                 vector=node.annotations.get("vector"),
                 inference=node.annotations.get("inference"),
                 inference_clients=self._lower_inference(node, p["workers"]),
+                decode=node.annotations.get("decode"),
             )
         if k == "replay":
             self._lower_host(node, p["actors"])
@@ -649,6 +650,7 @@ class CompiledFlow:
                 vector=node.annotations.get("vector"),
                 inference=node.annotations.get("inference"),
                 inference_clients=self._lower_inference(node, p["workers"]),
+                decode=node.annotations.get("decode"),
             )
         if k == "par_source":
             self._lower_host(node, p["pool"])

@@ -37,6 +37,7 @@ __all__ = [
     "build_a3c",
     "build_a2c",
     "build_ppo",
+    "build_ppo_lm",
     "build_dqn",
     "build_apex",
     "build_impala",
@@ -123,6 +124,62 @@ def build_ppo(
             inference_routing=inference_routing,
             failure_policy=failure_policy,
             host=host,
+        )
+        .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")
+        .for_each(StandardizeFields(["advantages"]))
+        .for_each(
+            TrainOneStep(
+                workers,
+                num_sgd_iter=num_sgd_iter,
+                sgd_minibatch_size=sgd_minibatch_size,
+            )
+        )
+    )
+    if num_learners:
+        train_op = train_op.learners(num_learners)
+    if microbatch:
+        train_op = train_op.microbatch(microbatch)
+    spec.set_output(train_op.report(workers))
+    return spec
+
+
+# ------------------------------------------------------------------ PPO-LM
+def build_ppo_lm(
+    workers: WorkerSet,
+    train_batch_size: int = 256,
+    num_sgd_iter: int = 4,
+    sgd_minibatch_size: int = 64,
+    num_learners: int = 0,
+    microbatch: int = 0,
+    vector: int = 0,
+    inference: str = None,
+    inference_replicas: int = 0,
+    inference_routing: str = None,
+    decode: str = "cache",
+) -> FlowSpec:
+    """PPO on a language-model workload (RLHF-style token generation).
+
+    Same dataflow shape as ``build_ppo`` — sample -> concat -> standardize
+    -> multi-epoch SGD — but the rollouts node carries ``decode='cache'``:
+    ``compile()`` lowers it onto the stateful-policy protocol so each env
+    lane generates tokens through a per-lane KV cache (prefill once per
+    episode, then one ``ops.decode_attention`` step per action) instead of
+    re-running the O(S) forward every token.  Pass ``decode='forward'`` to
+    fall back to the no-cache path; workers whose policy lacks the protocol
+    (e.g. the generic CartPole smoke workers in ``audit_plans``) fall back
+    automatically with a warning.
+
+    Defaults are sized for the small-vocab ``TokenEnv`` workload (see
+    ``launch/rlhf.py``); all the PPO knobs (sharded learners, inference
+    serving tier) compose unchanged.
+    """
+    spec = FlowSpec("ppo_lm")
+    train_op = (
+        spec.rollouts(
+            workers, mode="bulk_sync", vector=vector or None, inference=inference,
+            inference_replicas=inference_replicas or None,
+            inference_routing=inference_routing,
+            decode=decode,
         )
         .for_each(ConcatBatches(train_batch_size), label=f"ConcatBatches({train_batch_size})")
         .for_each(StandardizeFields(["advantages"]))
@@ -482,6 +539,7 @@ PLAN_BUILDERS: Dict[str, Any] = {
     "a3c": build_a3c,
     "a2c": build_a2c,
     "ppo": build_ppo,
+    "ppo_lm": build_ppo_lm,
     "dqn": build_dqn,
     "apex": build_apex,
     "impala": build_impala,

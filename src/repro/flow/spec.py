@@ -407,12 +407,19 @@ class FlowSpec:
         inference_credits: Optional[int],
         inference_replicas: Optional[int] = None,
         inference_routing: Optional[str] = None,
+        decode: Optional[str] = None,
     ) -> Dict[str, Any]:
         ann: Dict[str, Any] = {}
         if vector is not None:
             if int(vector) < 1:
                 raise ValueError(f"vector= needs >= 1 lanes (got {vector})")
             ann["vector"] = int(vector)
+        if decode is not None:
+            if decode not in ("forward", "cache"):
+                raise ValueError(
+                    f"unknown decode mode {decode!r} (want 'forward'|'cache')"
+                )
+            ann["decode"] = decode
         if inference is not None:
             if inference not in ("local", "server"):
                 raise ValueError(
@@ -453,6 +460,7 @@ class FlowSpec:
         inference_credits: Optional[int] = None,
         inference_replicas: Optional[int] = None,
         inference_routing: Optional[str] = None,
+        decode: Optional[str] = None,
         host: Optional[str] = None,
     ) -> Stream:
         """Experience stream from the rollout workers (paper Fig 5).
@@ -474,7 +482,11 @@ class FlowSpec:
         policy (``'auto'`` — sticky iff the policy is stateful —
         ``'least_loaded'``, or ``'sticky'`` lane->replica pinning).  Server
         inference requires thread-backend rollout workers; others fall back
-        to local with a warning.
+        to local with a warning.  ``decode='cache'`` routes local acting
+        through the stateful-policy protocol so per-lane model state (an
+        LM's KV cache) rides the rollout scan — one ``decode_step`` per
+        token instead of a full forward; policies without the protocol fall
+        back to ``'forward'``.
         """
         if mode not in ("raw", "bulk_sync", "async"):
             raise ValueError(f"unknown rollout mode {mode!r}")
@@ -487,7 +499,7 @@ class FlowSpec:
         annotations.update(
             self._vector_annotations(
                 vector, inference, inference_credits,
-                inference_replicas, inference_routing,
+                inference_replicas, inference_routing, decode,
             )
         )
         node = self._add(
@@ -529,18 +541,19 @@ class FlowSpec:
         inference_credits: Optional[int] = None,
         inference_replicas: Optional[int] = None,
         inference_routing: Optional[str] = None,
+        decode: Optional[str] = None,
         host: Optional[str] = None,
     ) -> Stream:
         """ParIter[(grads, info)]: sample + grad on each worker (A3C/A2C).
 
-        ``vector=``/``inference=`` annotate the vectorized rollout engine
-        exactly as on ``rollouts()`` (the gradient workers sample through
-        the same engine)."""
+        ``vector=``/``inference=``/``decode=`` annotate the vectorized
+        rollout engine exactly as on ``rollouts()`` (the gradient workers
+        sample through the same engine)."""
         annotations = self._source_annotations(failure_policy, resources, host)
         annotations.update(
             self._vector_annotations(
                 vector, inference, inference_credits,
-                inference_replicas, inference_routing,
+                inference_replicas, inference_routing, decode,
             )
         )
         node = self._add(

@@ -30,7 +30,7 @@ def _decode_kernel(
     q_ref,      # [1, 1, g, D]
     k_ref,      # [1, block_w, 1, D]
     v_ref,      # [1, block_w, 1, D]
-    valid_ref,  # [block_w]
+    valid_ref,  # [1, block_w]  (per-sequence row of the [B, W] mask)
     o_ref,      # [1, 1, g, D]
     m_scr,      # [g]
     l_scr,      # [g]
@@ -50,14 +50,18 @@ def _decode_kernel(
     q = q_ref[0, 0].astype(jnp.float32)          # [g, D]
     k = k_ref[0, :, 0].astype(jnp.float32)       # [block_w, D]
     v = v_ref[0, :, 0].astype(jnp.float32)
+    vmask = valid_ref[0][None, :]                # [1, block_w]
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                     # [g, block_w]
-    s = jnp.where(valid_ref[...][None, :], s, NEG_INF)
+    s = jnp.where(vmask, s, NEG_INF)
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[:, None])
+    # Mask the probabilities, not just the scores: in an all-invalid block
+    # every score is NEG_INF, so exp(s - m_new) would be a uniform 1.0 and
+    # the row normalizer l would count phantom mass (the empty-cache bug).
+    p = jnp.where(vmask, jnp.exp(s - m_new[:, None]), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
     acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
@@ -67,21 +71,26 @@ def _decode_kernel(
 
     @pl.when(wi == num_w_blocks - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        # l == 0 iff no cache slot was valid: attention over an empty cache
+        # is defined as zeros, not a uniform average of garbage.
+        l = l_scr[...]
+        o = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, 0] = jnp.where((l > 0.0)[:, None], o, 0.0).astype(o_ref.dtype)
 
 
 def decode_attention_pallas(
     q: jax.Array,        # [B, 1, H, D]
     k_cache: jax.Array,  # [B, W, KV, D]
     v_cache: jax.Array,
-    valid: jax.Array,    # [W] bool
+    valid: jax.Array,    # [W] or [B, W] bool (per-sequence occupancy)
     block_w: int = 512,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     B, _, H, D = q.shape
     W, KV = k_cache.shape[1], k_cache.shape[2]
     g = H // KV
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None], (B, W))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     block_w = min(block_w, W)
@@ -99,7 +108,7 @@ def decode_attention_pallas(
             pl.BlockSpec((1, 1, g, D), lambda b, h, wi: (b, h, 0, 0)),
             pl.BlockSpec((1, block_w, 1, D), lambda b, h, wi: (b, wi, h, 0)),
             pl.BlockSpec((1, block_w, 1, D), lambda b, h, wi: (b, wi, h, 0)),
-            pl.BlockSpec((block_w,), lambda b, h, wi: (wi,)),
+            pl.BlockSpec((1, block_w), lambda b, h, wi: (b, wi)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, wi: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, KV, g, D), q.dtype),

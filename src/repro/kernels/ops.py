@@ -58,6 +58,12 @@ def flash_attention(
 def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid: jax.Array
 ) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: [B,1,H,D]; caches: [B,W,KV,D]; valid: [W] (shared) or [B,W]
+    (per-sequence occupancy, for ragged prompt lengths in a co-batched
+    decode). Rows with no valid slot return zeros.
+    """
     if use_pallas():
         from repro.kernels.decode_attention import decode_attention_pallas
 

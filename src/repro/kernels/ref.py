@@ -106,15 +106,21 @@ def chunked_attention(
 def decode_attention_ref(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid: jax.Array
 ) -> jax.Array:
-    """q: [B,1,H,D]; caches: [B,W,KV,D]; valid: [W] bool. -> [B,1,H,D]."""
+    """q: [B,1,H,D]; caches: [B,W,KV,D]; valid: [W] or [B,W] bool. -> [B,1,H,D]."""
     B, _, H, D = q.shape
     W, KV = k_cache.shape[1], k_cache.shape[2]
     g = H // KV
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None], (B, W))
     qg = q.reshape(B, KV, g, D)
     scores = jnp.einsum("bhgd,bwhd->bhgw", qg, k_cache, preferred_element_type=jnp.float32)
     scores = scores / math.sqrt(D)
-    scores = jnp.where(valid[None, None, None], scores, -1e30)
-    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    vmask = valid[:, None, None, :]  # [B, 1, 1, W]
+    scores = jnp.where(vmask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    # Softmax over an all-invalid row is uniform over the -1e30 scores;
+    # re-masking makes the empty-cache output exactly zero instead.
+    p = jnp.where(vmask, p, 0.0).astype(v_cache.dtype)
     out = jnp.einsum("bhgw,bwhd->bhgd", p, v_cache)
     return out.reshape(B, 1, H, D)
 

@@ -253,8 +253,9 @@ def attention_decode(
 ) -> Tuple[jax.Array, PyTree]:
     """Single-token decode with ring-buffer KV cache.
 
-    x: [B, 1, d]; pos: scalar int32 absolute position; cache window W.
-    Returns (out [B, 1, d], new_cache).
+    x: [B, 1, d]; pos: scalar int32 absolute position, or a [B] vector of
+    per-lane positions (co-batched sequences at ragged depths); cache
+    window W. Returns (out [B, 1, d], new_cache).
     """
     B = x.shape[0]
     if cfg.mla is not None:
@@ -262,7 +263,7 @@ def attention_decode(
     quant = "k_q" in cache
     W = (cache["k_q"] if quant else cache["k"]).shape[1]
     hd = cfg.head_dim
-    positions = pos[None] if pos.ndim == 0 else pos
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     q = x @ params["wq"]
     k = x @ params["wk"]
     v = x @ params["wv"]
@@ -278,7 +279,12 @@ def attention_decode(
     k = rope(k, positions, cfg.rope_theta)
 
     slot = (pos % W).astype(jnp.int32)
-    dus = lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(buf, upd, slot, axis=1)
+    if pos.ndim == 0:
+        dus = lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(buf, upd, slot, axis=1)
+    else:
+        # Per-lane write slot: one-hot select along the window axis.
+        hit = jnp.arange(W)[None] == slot[:, None]  # [B, W]
+        dus = lambda buf, upd: jnp.where(hit[:, :, None, None], upd, buf)
     if quant:
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
@@ -299,7 +305,10 @@ def attention_decode(
 
     from repro.kernels import ops as kops
 
-    valid = jnp.arange(W) <= jnp.minimum(pos, W - 1)  # ring-buffer occupancy
+    if pos.ndim == 0:
+        valid = jnp.arange(W) <= jnp.minimum(pos, W - 1)  # ring-buffer occupancy
+    else:
+        valid = jnp.arange(W)[None] <= jnp.minimum(pos, W - 1)[:, None]  # [B, W]
     out = kops.decode_attention(q, ck, cv, valid)
     out = out.reshape(B, 1, -1) @ params["wo"]
     return shard(out, "batch", None, None), new_cache
@@ -312,7 +321,7 @@ def _mla_decode(params: PyTree, x: jax.Array, cache: PyTree, pos: jax.Array, cfg
     B = x.shape[0]
     W = cache["c"].shape[1]
     H = cfg.num_heads
-    positions = pos[None] if pos.ndim == 0 else pos
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
 
     q = (x @ params["wq"]).reshape(B, 1, H, m.nope_head_dim + m.rope_head_dim)
     q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
@@ -323,17 +332,26 @@ def _mla_decode(params: PyTree, x: jax.Array, cache: PyTree, pos: jax.Array, cfg
     k_rope_new = rope(k_rope_new[..., None, :], positions, cfg.rope_theta)[..., 0, :]
 
     slot = (pos % W).astype(jnp.int32)
-    cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new, slot, axis=1)
-    cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_new, slot, axis=1)
+    if pos.ndim == 0:
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new, slot, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_new, slot, axis=1)
+    else:
+        hit = (jnp.arange(W)[None] == slot[:, None])[:, :, None]  # [B, W, 1]
+        cc = jnp.where(hit, c_new, cache["c"])
+        cr = jnp.where(hit, k_rope_new, cache["k_rope"])
 
     # Absorb W_uk into the query: q_lat [B, H, lora].
     q_lat = jnp.einsum("bhn,chn->bhc", q_nope[:, 0], params["w_uk"])
     scores = jnp.einsum("bhc,bwc->bhw", q_lat, cc, preferred_element_type=jnp.float32)
     scores += jnp.einsum("bhr,bwr->bhw", q_rope[:, 0].astype(jnp.float32), cr.astype(jnp.float32))
     scores *= 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
-    valid = jnp.arange(W) <= jnp.minimum(pos, W - 1)
-    scores = jnp.where(valid[None, None], scores, -1e30)
-    p = jax.nn.softmax(scores, axis=-1).astype(cc.dtype)
+    if pos.ndim == 0:
+        valid = jnp.broadcast_to(jnp.arange(W) <= jnp.minimum(pos, W - 1), (B, W))
+    else:
+        valid = jnp.arange(W)[None] <= jnp.minimum(pos, W - 1)[:, None]
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(valid[:, None], p, 0.0).astype(cc.dtype)  # empty cache -> zeros
     ctx_lat = jnp.einsum("bhw,bwc->bhc", p, cc)
     # Absorb W_uv on the way out.
     v = jnp.einsum("bhc,chv->bhv", ctx_lat, params["w_uv"])

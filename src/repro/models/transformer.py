@@ -263,9 +263,15 @@ class Model:
         return x, lcache
 
     def decode_step(
-        self, params: PyTree, cache: PyTree, tokens: jax.Array
-    ) -> Tuple[jax.Array, PyTree]:
-        """One token for every sequence. tokens: [B,1] (audio [B,1,K])."""
+        self, params: PyTree, cache: PyTree, tokens: jax.Array, with_hidden: bool = False
+    ):
+        """One token for every sequence. tokens: [B,1] (audio [B,1,K]).
+
+        ``cache["pos"]`` may be a scalar (all sequences at the same depth) or
+        a [B] vector of per-lane positions (ragged co-batched decode).
+        Returns (logits, new_cache), plus the final-norm hidden [B,1,d] when
+        ``with_hidden`` (for value heads riding the decode path).
+        """
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed(params, tokens, None)
@@ -285,6 +291,8 @@ class Model:
         new_cache["blocks"] = new_blocks
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)
+        if with_hidden:
+            return logits, new_cache, x
         return logits, new_cache
 
     # ------------------------------------------------------------- prefill
@@ -294,12 +302,16 @@ class Model:
         tokens: jax.Array,
         media_emb: Optional[jax.Array] = None,
         window: int = 0,
-    ) -> Tuple[jax.Array, PyTree]:
+        with_hidden: bool = False,
+    ):
         """Forward over a prompt, returning (last-token logits, filled cache).
 
         The cache window equals the prompt length (or ``window`` if set).
         Implemented by running the sequence path and reconstructing per-layer
         cache state; attention caches are the (rope'd) K/V of the prompt.
+        With ``with_hidden`` the full final-norm hidden [B,S,d] is appended
+        to the return (callers with ragged prompts need logits at their own
+        last position, not at S-1).
         """
         cfg = self.cfg
         B, S = tokens.shape[0], tokens.shape[1]
@@ -345,6 +357,8 @@ class Model:
         cache["blocks"] = blocks_cache
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x[:, -1:])
+        if with_hidden:
+            return logits, cache, x
         return logits, cache
 
 

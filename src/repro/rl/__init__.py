@@ -16,6 +16,7 @@ from repro.rl.inference import (
     InferenceUnavailable,
 )
 from repro.rl.learner_group import ShardedLearnerGroup
+from repro.rl.lm_policy import LMTokenPolicy
 from repro.rl.model_based import ModelBasedWorker
 from repro.rl.policy import (
     ActorCriticPolicy,
@@ -32,6 +33,15 @@ from repro.rl.rollout_worker import (
 )
 from repro.rl.sample_batch import MultiAgentBatch, SampleBatch, concat_batches
 from repro.rl.stateful_policy import SSMStatePolicy
+from repro.rl.token_env import (
+    EOS,
+    PAD,
+    TokenEnv,
+    TokenEnvState,
+    make_obs,
+    split_obs,
+    target_token_reward,
+)
 from repro.rl.transformer_policy import TransformerPolicy
 
 __all__ = [k for k in dir() if not k.startswith("_")]

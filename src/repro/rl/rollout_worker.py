@@ -330,7 +330,13 @@ class VectorizedRolloutWorker(RolloutWorker):
         mid-rollout the in-flight fragment is dropped
         (``num_fragments_dropped``), the client's recovery path restarts
         the actor and re-syncs weights, and sampling resumes from the live
-        env state.
+        env state;
+      * optional cached decode (``decode='cache'``): a policy implementing
+        the stateful-policy protocol (``init_lane_state`` /
+        ``compute_actions_stateful``) carries per-lane model state — e.g.
+        an LM's KV cache — through the rollout scan, so acting is one
+        decode step per token instead of a full forward (the RLHF fast
+        path; parity-gated in tests/bench_rlhf).
     """
 
     def __init__(
@@ -343,14 +349,23 @@ class VectorizedRolloutWorker(RolloutWorker):
         inference: str = "local",
         inference_client: Any = None,
         max_inference_retries: int = 3,
+        decode: str = "forward",
         **kwargs: Any,
     ):
         if inference not in ("local", "server"):
             raise ValueError(f"unknown inference mode {inference!r}")
+        if decode not in ("forward", "cache"):
+            raise ValueError(f"unknown decode mode {decode!r}")
+        if decode == "cache" and not hasattr(policy, "init_lane_state"):
+            raise ValueError(
+                "decode='cache' needs a stateful policy "
+                "(init_lane_state/compute_actions_stateful)"
+            )
         self.inference = inference
         self.inference_client = inference_client
         self.max_inference_retries = max_inference_retries
         self.num_fragments_dropped = 0
+        self.decode = decode
         super().__init__(
             env, policy, algo=algo, num_envs=num_envs, rollout_len=rollout_len, **kwargs
         )
@@ -379,6 +394,14 @@ class VectorizedRolloutWorker(RolloutWorker):
         self.act_rng = jax.vmap(lambda i: jax.random.fold_in(k_act, i))(
             jnp.arange(self.num_envs)
         )
+        self._reset_lane_state()
+
+    def _reset_lane_state(self) -> None:
+        """Fresh per-lane model state for the cached-decode path (an empty
+        pytree when decode='forward', so the scan carry shape is uniform)."""
+        self.lane_state = (
+            self.policy.init_lane_state(self.num_envs) if self.decode == "cache" else {}
+        )
 
     # -------------------------------------------------------------- lowering
     def configure_vectorization(
@@ -386,12 +409,16 @@ class VectorizedRolloutWorker(RolloutWorker):
         vector: Optional[int] = None,
         inference: Optional[str] = None,
         client: Any = None,
+        decode: Optional[str] = None,
     ) -> Dict[str, Any]:
-        """Reconfigure lanes / inference mode (FlowSpec annotation lowering).
+        """Reconfigure lanes / inference mode / decode path (FlowSpec
+        annotation lowering).
 
         Resizing rebuilds the ``VectorEnv`` with fresh per-lane key chains
         derived from the worker's RNG; switching to ``'server'`` without a
-        client falls back to local inference (flagged in the ack).
+        client falls back to local inference (flagged in the ack), and
+        ``decode='cache'`` on a policy without the stateful protocol falls
+        back to ``'forward'`` likewise.
         """
         if vector is not None and int(vector) != self.num_envs:
             self.num_envs = int(vector)
@@ -405,7 +432,16 @@ class VectorizedRolloutWorker(RolloutWorker):
             if inference == "server" and self.inference_client is None:
                 inference = "local"
             self.inference = inference
-        return {"vector": self.num_envs, "inference": self.inference}
+        if decode is not None:
+            if decode not in ("forward", "cache"):
+                raise ValueError(f"unknown decode mode {decode!r}")
+            if decode == "cache" and not hasattr(self.policy, "init_lane_state"):
+                decode = "forward"
+            if decode != self.decode:
+                self.decode = decode
+                self._reset_lane_state()
+                self._vrollout_jit = jax.jit(self._vrollout)
+        return {"vector": self.num_envs, "inference": self.inference, "decode": self.decode}
 
     # --------------------------------------------------------------- rollout
     def _compute_actions(self, params: PyTree, obs: jax.Array, keys: jax.Array):
@@ -415,12 +451,21 @@ class VectorizedRolloutWorker(RolloutWorker):
             )
         return self.policy.compute_actions(params, obs, keys)
 
-    def _vrollout(self, params: PyTree, vstate: VectorEnvState, act_rng: jax.Array):
+    def _vrollout(
+        self, params: PyTree, vstate: VectorEnvState, act_rng: jax.Array, lane_state: PyTree
+    ):
+        stateful = self.decode == "cache"
+
         def step_fn(carry, _):
-            vstate, act_rng = carry
+            vstate, act_rng, lstate = carry
             act_rng, k_act = VectorEnv._split_lanes(act_rng)
             obs = vstate.obs
-            action, logp, value, _ = self._compute_actions(params, obs, k_act)
+            if stateful:
+                action, logp, value, lstate = self.policy.compute_actions_stateful(
+                    params, obs, k_act, lstate
+                )
+            else:
+                action, logp, value, _ = self._compute_actions(params, obs, k_act)
             vstate, out = self.venv.step(vstate, action)
             cols = {
                 "obs": obs,
@@ -435,12 +480,12 @@ class VectorizedRolloutWorker(RolloutWorker):
                 "completed": out.completed_return,
                 "eps_count": out.eps_count,
             }
-            return (vstate, act_rng), cols
+            return (vstate, act_rng, lstate), cols
 
-        (vstate, act_rng), cols = jax.lax.scan(
-            step_fn, (vstate, act_rng), None, length=self.rollout_len
+        (vstate, act_rng, lane_state), cols = jax.lax.scan(
+            step_fn, (vstate, act_rng, lane_state), None, length=self.rollout_len
         )
-        return vstate, act_rng, cols
+        return vstate, act_rng, lane_state, cols
 
     def _postprocess_cols(self, params: PyTree, cols: Dict[str, jax.Array]):
         """Advantage columns over assembled [T, B] rollout columns.
@@ -485,8 +530,8 @@ class VectorizedRolloutWorker(RolloutWorker):
     def sample(self) -> SampleBatch:
         if self.inference == "server":
             return self._sample_server()
-        self.vstate, self.act_rng, cols = self._vrollout_jit(
-            self.params, self.vstate, self.act_rng
+        self.vstate, self.act_rng, self.lane_state, cols = self._vrollout_jit(
+            self.params, self.vstate, self.act_rng, self.lane_state
         )
         return self._emit(cols)
 
@@ -547,13 +592,16 @@ class VectorizedRolloutWorker(RolloutWorker):
 
     # ------------------------------------------------------------ durability
     def get_state(self) -> Dict[str, Any]:
-        return {
+        state = {
             "key": np.asarray(self._key),
             "vstate": VectorEnv.state_to_numpy(self.vstate),
             "act_rng": np.asarray(self.act_rng),
             "completed": list(self._completed),
             "num_fragments_dropped": self.num_fragments_dropped,
         }
+        if self.decode == "cache":
+            state["lane_state"] = jax.tree_util.tree_map(np.asarray, self.lane_state)
+        return state
 
     def set_state(self, state: Dict[str, Any]) -> None:
         self._key = jnp.asarray(state["key"])
@@ -568,6 +616,17 @@ class VectorizedRolloutWorker(RolloutWorker):
         if lanes != self.num_envs:
             self.num_envs = lanes
             self._rebuild_plumbing()
+        if self.decode == "cache":
+            ls = state.get("lane_state")
+            # A checkpoint without lane state (taken under decode='forward')
+            # restores to fresh caches; stale caches self-heal anyway — the
+            # stateful policy re-prefills any lane whose cache position
+            # disagrees with its observation.
+            self.lane_state = (
+                jax.tree_util.tree_map(jnp.asarray, ls)
+                if ls is not None
+                else self.policy.init_lane_state(self.num_envs)
+            )
 
     def episode_stats(self) -> Dict[str, float]:
         stats = super().episode_stats()

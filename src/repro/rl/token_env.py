@@ -1,0 +1,158 @@
+"""TokenEnv: autoregressive generation as an RL environment.
+
+The HybridFlow-shaped RLHF workload (ROADMAP item 2) cast onto the standard
+``Env`` protocol so the whole flow runtime — vector engine, credit
+backpressure, inference serving, sharded learners — applies unchanged:
+
+  * **reset** samples a prompt: ``prompt_len`` tokens drawn from the vocab
+    (ragged per lane within ``[min_prompt, max_prompt]``).
+  * **one action = one token.**  The action appends to the sequence; the
+    episode is the generation.
+  * **termination** — EOS or the decode horizon.  Two modes:
+      - ``sync=False``: classic semantics — EOS terminates, the horizon
+        truncates.  Lanes desynchronize as they reset at different times.
+      - ``sync=True`` (default): EOS is *absorbing* — the lane keeps
+        stepping (appending PAD) until every lane hits the shared horizon,
+        so all lanes of a vectorized rollout reset on the same step.  This
+        is what lets the KV-cache decode rollout run prefill exactly once
+        per episode under ``lax.cond`` instead of re-prefilling whenever
+        any single lane resets (see ``LMTokenPolicy``).
+  * **reward** is programmatic and granted at episode end:
+    ``reward_fn(tokens, prompt_len, length) -> float`` over the final
+    sequence (a verifier score, a length penalty, a stub target — anything
+    jax-traceable).
+
+The observation is the whole generation state, so any policy — including a
+stateless one — can act from it: ``[ctx]`` token window (right-padded),
+then ``length`` and ``t`` as trailing scalars, all float32.  Helpers
+``split_obs``/``make_obs`` define that layout in one place.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import Env
+
+__all__ = ["TokenEnv", "TokenEnvState", "split_obs", "make_obs", "target_token_reward"]
+
+PAD = 0
+EOS = 1
+
+
+class TokenEnvState(NamedTuple):
+    tokens: jax.Array      # [ctx] int32 — prompt + generated, right-padded
+    length: jax.Array      # int32 — filled slots
+    prompt_len: jax.Array  # int32
+    t: jax.Array           # int32 — decode step within the episode
+    finished: jax.Array    # bool — EOS emitted (absorbing under sync mode)
+
+
+def make_obs(tokens: jax.Array, length: jax.Array, t: jax.Array) -> jax.Array:
+    """[ctx] int tokens + scalars -> the float32 [ctx + 2] observation."""
+    return jnp.concatenate(
+        [
+            tokens.astype(jnp.float32),
+            length.astype(jnp.float32)[None],
+            t.astype(jnp.float32)[None],
+        ]
+    )
+
+
+def split_obs(obs: jax.Array, ctx: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Inverse of ``make_obs`` over a batch: obs [..., ctx+2] ->
+    (tokens [..., ctx] int32, length [...] int32, t [...] int32)."""
+    tokens = obs[..., :ctx].astype(jnp.int32)
+    length = obs[..., ctx].astype(jnp.int32)
+    t = obs[..., ctx + 1].astype(jnp.int32)
+    return tokens, length, t
+
+
+def target_token_reward(target: int = 3) -> Callable:
+    """Stub programmatic reward: fraction of generated (non-PAD) tokens equal
+    to ``target``.  Trivially learnable — the acceptance signal for the
+    end-to-end PPO-LM plan is this number rising."""
+
+    def reward_fn(tokens: jax.Array, prompt_len: jax.Array, length: jax.Array) -> jax.Array:
+        idx = jnp.arange(tokens.shape[0])
+        gen = (idx >= prompt_len) & (idx < length) & (tokens != PAD)
+        hits = jnp.sum(jnp.where(gen, (tokens == target).astype(jnp.float32), 0.0))
+        return hits / jnp.maximum(jnp.sum(gen.astype(jnp.float32)), 1.0)
+
+    return reward_fn
+
+
+class TokenEnv(Env):
+    """Prompts as resets, tokens as actions, programmatic reward at the end.
+
+    ``ctx >= max_prompt + horizon`` is enforced so a generation never
+    overruns the token window — which also means a KV cache of window
+    ``ctx`` never wraps its ring buffer mid-episode (slot == position), the
+    invariant the decode rollout path relies on.
+    """
+
+    def __init__(
+        self,
+        vocab_size: int = 17,
+        ctx: int = 32,
+        min_prompt: int = 4,
+        max_prompt: int = 8,
+        horizon: int = 16,
+        reward_fn: Optional[Callable] = None,
+        sync: bool = True,
+    ):
+        if ctx < max_prompt + horizon:
+            raise ValueError(
+                f"ctx={ctx} < max_prompt+horizon={max_prompt + horizon}: "
+                "generation would overrun the token window"
+            )
+        if not (0 < min_prompt <= max_prompt):
+            raise ValueError("need 0 < min_prompt <= max_prompt")
+        self.vocab_size = vocab_size
+        self.ctx = ctx
+        self.min_prompt = min_prompt
+        self.max_prompt = max_prompt
+        self.horizon = horizon
+        self.sync = sync
+        self.reward_fn = reward_fn or target_token_reward()
+        self.obs_dim = ctx + 2
+        self.num_actions = vocab_size
+
+    # --------------------------------------------------------------- protocol
+    def reset(self, key: jax.Array) -> Tuple[TokenEnvState, jax.Array]:
+        kp, kl = jax.random.split(key)
+        prompt_len = jax.random.randint(kl, (), self.min_prompt, self.max_prompt + 1)
+        # Prompt tokens avoid PAD/EOS so prompts are unambiguous content.
+        body = jax.random.randint(kp, (self.ctx,), 2, self.vocab_size)
+        tokens = jnp.where(jnp.arange(self.ctx) < prompt_len, body, PAD).astype(jnp.int32)
+        st = TokenEnvState(
+            tokens=tokens,
+            length=prompt_len.astype(jnp.int32),
+            prompt_len=prompt_len.astype(jnp.int32),
+            t=jnp.zeros((), jnp.int32),
+            finished=jnp.zeros((), bool),
+        )
+        return st, make_obs(st.tokens, st.length, st.t)
+
+    def step_raw(self, st: TokenEnvState, action: jax.Array, key: jax.Array):
+        tok = jnp.where(st.finished, PAD, action.astype(jnp.int32))
+        tokens = jnp.where(jnp.arange(self.ctx) == st.length, tok, st.tokens)
+        length = st.length + 1
+        t = st.t + 1
+        finished = st.finished | (tok == EOS)
+        if self.sync:
+            # Absorbing EOS: every lane terminates together at the horizon.
+            terminated = t >= self.horizon
+            truncated = jnp.zeros((), bool)
+        else:
+            terminated = (tok == EOS) & ~st.finished
+            truncated = (t >= self.horizon) & ~terminated
+        done = terminated | truncated
+        reward = jnp.where(
+            done, self.reward_fn(tokens, st.prompt_len, length).astype(jnp.float32), 0.0
+        )
+        new = TokenEnvState(tokens, length, st.prompt_len, t, finished)
+        return new, make_obs(tokens, length, t), reward, terminated, truncated

@@ -108,6 +108,36 @@ class TransformerPolicy:
         logp = jnp.take_along_axis(logp_all, action[..., None], axis=-1)[..., 0]
         return action, logp, value, logits
 
+    def value(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        """Critic value only (GAE bootstrap at truncation boundaries)."""
+        return self.logits_value(params, obs)[1]
+
+    def compute_actions(self, params: PyTree, obs: jax.Array, keys: jax.Array):
+        """Batched acting with per-lane RNG keys: obs [N, D], keys [N, 2].
+
+        One trunk dispatch for all lanes; each lane samples from its own key,
+        so lane i reproduces ``act(params, obs[i:i+1], keys[i])``.
+        """
+        logits, value = self.logits_value(params, obs)
+        action = jax.vmap(jax.random.categorical)(keys, logits)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, action[:, None], axis=-1)[:, 0]
+        return action, logp, value, logits
+
+    # ------------------------------------------------ stateful-policy protocol
+    # The trunk is memoryless, so the lane state is degenerate — a per-lane
+    # step counter.  The surface still matters: it lets this policy ride the
+    # sticky serving tier and the decode-configured rollout engine through
+    # the exact same protocol a KV-cache or SSM policy uses.
+    def init_lane_state(self, n: int) -> PyTree:
+        return {"steps": jnp.zeros((n,), jnp.int32)}
+
+    def compute_actions_stateful(
+        self, params: PyTree, obs: jax.Array, keys: jax.Array, state: PyTree
+    ):
+        action, logp, value, _ = self.compute_actions(params, obs, keys)
+        return action, logp, value, {"steps": state["steps"] + 1}
+
     # Reuse ActorCriticPolicy's loss math via composition.
     def loss(self, params: PyTree, batch: Dict[str, jax.Array]):
         from repro.rl.policy import ActorCriticPolicy

@@ -56,6 +56,62 @@ def test_decode_attention_sweep(W, H, KV, D, dtype):
     )
 
 
+def test_decode_attention_all_invalid_returns_zeros():
+    """Regression: an all-False valid mask used to yield garbage (the online
+    softmax saw uniform exp(0) mass over masked slots); empty rows must
+    produce exactly zero output in both the oracle and the kernel."""
+    B, W, H, KV, D = 2, 128, 4, 2, 64
+    q = _rand(0, (B, 1, H, D), jnp.float32)
+    kc = _rand(1, (B, W, KV, D), jnp.float32)
+    vc = _rand(2, (B, W, KV, D), jnp.float32)
+    valid = jnp.zeros((W,), bool)
+    ref = decode_attention_ref(q, kc, vc, valid)
+    out = decode_attention_pallas(q, kc, vc, valid, block_w=64, interpret=True)
+    assert np.asarray(ref).shape == (B, 1, H, D)
+    np.testing.assert_array_equal(np.asarray(ref), 0.0)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("W,H,KV,D", [(128, 4, 2, 64), (256, 8, 8, 64)])
+def test_decode_attention_per_sequence_valid(W, H, KV, D):
+    """[B, W] ragged masks: each sequence attends its own prefix; one row is
+    fully masked (mid-reset lane) and must come back as zeros."""
+    B = 4
+    q = _rand(0, (B, 1, H, D), jnp.float32)
+    kc = _rand(1, (B, W, KV, D), jnp.float32)
+    vc = _rand(2, (B, W, KV, D), jnp.float32)
+    lengths = jnp.array([W // 4, W, 1, 0])
+    valid = jnp.arange(W)[None, :] < lengths[:, None]
+    out = decode_attention_pallas(q, kc, vc, valid, block_w=64, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(np.asarray(out[3]), 0.0)
+    # Per-row parity against a single-sequence call with a [W] mask.
+    for b in range(B - 1):
+        solo = decode_attention_pallas(
+            q[b : b + 1], kc[b : b + 1], vc[b : b + 1], valid[b],
+            block_w=64, interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[b]), np.asarray(solo[0]), atol=2e-5, rtol=2e-5
+        )
+
+
+def test_decode_attention_shared_valid_broadcasts():
+    """A [W] mask must mean the same thing as the equivalent [B, W] mask."""
+    B, W, H, KV, D = 3, 128, 4, 4, 64
+    q = _rand(0, (B, 1, H, D), jnp.float32)
+    kc = _rand(1, (B, W, KV, D), jnp.float32)
+    vc = _rand(2, (B, W, KV, D), jnp.float32)
+    valid1 = jnp.arange(W) < 77
+    valid2 = jnp.broadcast_to(valid1[None], (B, W))
+    for fn in (decode_attention_ref, lambda *a: decode_attention_pallas(
+            *a, block_w=64, interpret=True)):
+        a = np.asarray(fn(q, kc, vc, valid1))
+        b = np.asarray(fn(q, kc, vc, valid2))
+        np.testing.assert_array_equal(a, b)
+
+
 @pytest.mark.parametrize("T,H,N,chunk", [(64, 2, 32, 16), (128, 4, 64, 64), (96, 1, 16, 32)])
 def test_rwkv6_kernel_sweep(T, H, N, chunk):
     B = 2

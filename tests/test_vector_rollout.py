@@ -179,7 +179,9 @@ def test_truncation_bootstrap_matches_explicit_next_value_gae():
         0, policy=ActorCriticPolicy(4, 2, loss_kind="ppo"), algo="ppo",
         num_envs=3, rollout_len=12,
     )
-    w.vstate, w.act_rng, cols = w._vrollout_jit(w.params, w.vstate, w.act_rng)
+    w.vstate, w.act_rng, w.lane_state, cols = w._vrollout_jit(
+        w.params, w.vstate, w.act_rng, w.lane_state
+    )
     out = w._postprocess_jit(w.params, cols)
     rewards = np.asarray(cols["rewards"], np.float64)
     values = np.asarray(cols["values"], np.float64)
@@ -447,7 +449,7 @@ def test_server_inference_falls_back_on_process_workers(caplog):
             acks = configure_vectorized_rollouts(
                 ws, vector=2, inference="server", inference_clients=[client]
             )
-        assert acks == [{"vector": 2, "inference": "local"}]
+        assert acks == [{"vector": 2, "inference": "local", "decode": "forward"}]
         assert "fall back to local inference" in caplog.text
         b = next(iter(ParallelRollouts(ws, mode="bulk_sync")))
         assert b.count == 2 * 8  # vectorization still applied
